@@ -1,0 +1,83 @@
+"""Histogram benchmarks — paper §6.2, Figures 9/10/11.
+
+Fig 9  weak scaling, highly fragmented (many blocks per core).
+Fig 10 weak scaling, perfectly balanced (1 block per core) — SplIter's
+       worst case: measures pure overhead.
+Fig 11 sensitivity to fragmentation at fixed locations.
+
+Locations model cluster nodes; rows-per-location is held constant for the
+weak scalings (paper: 880M points/node — scaled to this container).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apps.histogram import histogram
+from repro.core.blocked import BlockedArray, round_robin_placement
+
+from benchmarks.harness import Table, timeit, winsorized
+
+MODES = ("baseline", "spliter", "spliter_mat", "rechunk")
+
+
+def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 5, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((locs * rows_per_loc, d)).astype(np.float32)
+    block_rows = max(1, rows_per_loc // blocks_per_loc)
+    return BlockedArray.from_array(
+        jnp.asarray(pts), block_rows, num_locations=locs,
+        policy=round_robin_placement,
+    )
+
+
+def _run(x, mode, *, bins, repeats):
+    rep_box = {}
+
+    def once():
+        h, rep = histogram(x, bins=bins, mode=mode)
+        rep_box["rep"] = rep
+        return h
+
+    stats = winsorized(timeit(once, repeats=repeats))
+    rep = rep_box["rep"]
+    return stats, rep
+
+
+def bench(quick: bool = True) -> list[Table]:
+    rows_per_loc = 16_384 if quick else 131_072
+    repeats = 3 if quick else 10
+    bins = 8
+
+    # -- Fig 9: weak scaling, fragmented (16 blocks/loc) ---------------------
+    t9 = Table("histogram_weak_fragmented", "paper Fig. 9")
+    for locs in (1, 2, 4, 8):
+        x = _dataset(locs, 16, rows_per_loc)
+        for mode in MODES:
+            stats, rep = _run(x, mode, bins=bins, repeats=repeats)
+            t9.add(locations=locs, mode=mode, blocks=x.num_blocks,
+                   dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
+                   **stats)
+
+    # -- Fig 10: weak scaling, balanced (1 block/loc) -------------------------
+    t10 = Table("histogram_weak_balanced", "paper Fig. 10")
+    for locs in (1, 2, 4, 8):
+        x = _dataset(locs, 1, rows_per_loc)
+        for mode in MODES:
+            stats, rep = _run(x, mode, bins=bins, repeats=repeats)
+            t10.add(locations=locs, mode=mode, blocks=x.num_blocks,
+                    dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
+                    **stats)
+
+    # -- Fig 11: fragmentation sweep at 8 locations ---------------------------
+    t11 = Table("histogram_fragmentation", "paper Fig. 11")
+    for bpl in (1, 4, 16, 48):
+        x = _dataset(8, bpl, rows_per_loc)
+        for mode in MODES:
+            stats, rep = _run(x, mode, bins=bins, repeats=repeats)
+            t11.add(blocks_per_loc=bpl, mode=mode, blocks=x.num_blocks,
+                    dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
+                    **stats)
+
+    return [t9, t10, t11]

@@ -1,0 +1,77 @@
+"""k-means benchmarks — paper §6.3, Figures 12/13/14.
+
+Iterative memory-bound application: the split/rechunk cost is paid once and
+diluted across iterations; baseline per-block dispatch overhead is paid
+every iteration (paper: 10 loops amplify it 10×).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apps.kmeans import kmeans
+from repro.core.blocked import BlockedArray, round_robin_placement
+
+from benchmarks.harness import Table, timeit, winsorized
+
+MODES = ("baseline", "spliter", "spliter_mat", "rechunk")
+
+
+def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 20, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((locs * rows_per_loc, d)).astype(np.float32)
+    block_rows = max(1, rows_per_loc // blocks_per_loc)
+    return BlockedArray.from_array(
+        jnp.asarray(pts), block_rows, num_locations=locs,
+        policy=round_robin_placement,
+    )
+
+
+def _run(x, mode, *, k, iters, repeats):
+    box = {}
+
+    def once():
+        res = kmeans(x, k=k, iters=iters, seed=1, mode=mode)
+        box["res"] = res
+        return res.centers
+
+    stats = winsorized(timeit(once, repeats=repeats))
+    res = box["res"]
+    return stats, res
+
+
+def bench(quick: bool = True) -> list[Table]:
+    rows_per_loc = 8_192 if quick else 65_536
+    iters = 5 if quick else 10
+    repeats = 3 if quick else 10
+    k = 8
+
+    t12 = Table("kmeans_weak_fragmented", "paper Fig. 12")
+    for locs in (1, 2, 4, 8):
+        x = _dataset(locs, 16, rows_per_loc)
+        for mode in MODES:
+            stats, res = _run(x, mode, k=k, iters=iters, repeats=repeats)
+            t12.add(locations=locs, mode=mode, blocks=x.num_blocks,
+                    dispatches=res.total_dispatches,
+                    bytes_moved=res.total_bytes_moved, **stats)
+
+    t13 = Table("kmeans_weak_balanced", "paper Fig. 13")
+    for locs in (1, 2, 4, 8):
+        x = _dataset(locs, 1, rows_per_loc)
+        for mode in MODES:
+            stats, res = _run(x, mode, k=k, iters=iters, repeats=repeats)
+            t13.add(locations=locs, mode=mode, blocks=x.num_blocks,
+                    dispatches=res.total_dispatches,
+                    bytes_moved=res.total_bytes_moved, **stats)
+
+    t14 = Table("kmeans_fragmentation", "paper Fig. 14")
+    for bpl in (1, 4, 16, 48):
+        x = _dataset(8, bpl, rows_per_loc)
+        for mode in MODES:
+            stats, res = _run(x, mode, k=k, iters=iters, repeats=repeats)
+            t14.add(blocks_per_loc=bpl, mode=mode, blocks=x.num_blocks,
+                    dispatches=res.total_dispatches,
+                    bytes_moved=res.total_bytes_moved, **stats)
+
+    return [t12, t13, t14]

@@ -1,0 +1,97 @@
+"""k-NN benchmarks — paper §6.5, Figures 18/19/20/21 and Table 1.
+
+Fig 18/19 + Table 1: microkernel characterization — build time grows with
+structure size, lookup time is sub-linear in it (the consolidation
+argument).  Fig 20: full-stack scalability.  Fig 21: fit-dataset scaling —
+blocks/second improves with consolidated structures (log-like lookups)
+while per-block baselines stay flat (linear).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apps.knn import _lookup, knn
+from repro.core.blocked import BlockedArray, round_robin_placement
+
+from benchmarks.harness import Table, timeit, winsorized
+
+MODES = ("baseline", "spliter", "rechunk")
+
+
+def _blocked(arr, block_rows, locs):
+    return BlockedArray.from_array(
+        jnp.asarray(arr), block_rows, num_locations=locs,
+        policy=round_robin_placement,
+    )
+
+
+def bench(quick: bool = True) -> list[Table]:
+    rng = np.random.default_rng(0)
+    d, k = 3, 8
+    repeats = 3 if quick else 10
+    base_rows = 4_096 if quick else 32_768
+
+    # -- Fig 18/19 + Table 1: microkernels vs structure size ------------------
+    t18 = Table("knn_kernels", "paper Figs. 18/19 + Table 1")
+    q = jnp.asarray(rng.random((1_024, d)).astype(np.float32))
+    jit_lookup = jax.jit(lambda f, ids, qq: _lookup(f, ids, qq, k))
+    for size in (base_rows // 4, base_rows // 2, base_rows, base_rows * 2):
+        pts = jnp.asarray(rng.random((size, d)).astype(np.float32))
+        ids = jnp.arange(size, dtype=jnp.int32)
+        # "fit" = structure build (consolidated candidate matrix)
+        fit_stats = winsorized(
+            timeit(lambda: jax.block_until_ready(jnp.concatenate([pts], 0)),
+                   repeats=repeats)
+        )
+        lk_stats = winsorized(
+            timeit(lambda: jax.block_until_ready(jit_lookup(pts, ids, q)),
+                   repeats=repeats)
+        )
+        t18.add(structure_rows=size, fit_s=fit_stats["median_s"],
+                lookup_s=lk_stats["median_s"],
+                lookup_s_per_krow=lk_stats["median_s"] / (size / 1e3))
+
+    # -- Fig 20: scalability ---------------------------------------------------
+    t20 = Table("knn_scalability", "paper Fig. 20")
+    for locs in (1, 2, 4, 8):
+        fit = _blocked(rng.random((locs * 6 * 512, d)).astype(np.float32), 512, locs)
+        qry = _blocked(rng.random((locs * 4 * 256, d)).astype(np.float32), 256, locs)
+        for mode in MODES:
+            box = {}
+
+            def once():
+                box["res"] = knn(fit, qry, k=k, mode=mode)
+                return box["res"].indices
+
+            stats = winsorized(timeit(once, repeats=repeats))
+            rep = box["res"].report
+            t20.add(locations=locs, mode=mode, fit_blocks=fit.num_blocks,
+                    structures=rep.dispatches - rep.merges,  # approx
+                    dispatches=rep.dispatches, merges=rep.merges,
+                    bytes_moved=rep.bytes_moved, **stats)
+
+    # -- Fig 21: fit-dataset scaling (blocks per second) -----------------------
+    t21 = Table("knn_fit_scaling", "paper Fig. 21")
+    locs = 4
+    qry = _blocked(rng.random((locs * 2 * 256, d)).astype(np.float32), 256, locs)
+    for bpl in (2, 4, 8, 12):
+        fit = _blocked(
+            rng.random((locs * bpl * 512, d)).astype(np.float32), 512, locs
+        )
+        for mode in MODES:
+            box = {}
+
+            def once():
+                box["res"] = knn(fit, qry, k=k, mode=mode)
+                return box["res"].indices
+
+            stats = winsorized(timeit(once, repeats=repeats))
+            rep = box["res"].report
+            t21.add(fit_blocks_per_loc=bpl, mode=mode, fit_blocks=fit.num_blocks,
+                    blocks_per_s=fit.num_blocks / stats["median_s"],
+                    dispatches=rep.dispatches, **stats)
+
+    return [t18, t20, t21]

@@ -1,0 +1,80 @@
+"""Cascade SVM benchmarks — paper §6.4, Figures 15/16/17.
+
+Compute-bound: per-task cost is O(n²) in group rows, so materialized
+execution (rechunk / spliter_mat) can win — the paper's key nuance.  The
+SplIter's materialized partitions recover that advantage with zero
+inter-location traffic (paper §7 future work, implemented here).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apps.cascade_svm import cascade_svm
+from repro.core.blocked import BlockedArray, round_robin_placement
+
+from benchmarks.harness import Table, timeit, winsorized
+
+MODES = ("baseline", "spliter", "spliter_mat", "rechunk")
+
+
+def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 8, seed=0):
+    rng = np.random.default_rng(seed)
+    n = locs * rows_per_loc
+    pts = rng.standard_normal((n, d)).astype(np.float32)
+    w = rng.standard_normal(d).astype(np.float32)
+    labels = np.sign(pts @ w + 0.05 * rng.standard_normal(n)).astype(np.float32)
+    block_rows = max(1, rows_per_loc // blocks_per_loc)
+    mk = lambda a: BlockedArray.from_array(
+        jnp.asarray(a), block_rows, num_locations=locs,
+        policy=round_robin_placement,
+    )
+    return mk(pts), mk(labels)
+
+
+def _run(x, y, mode, *, steps, repeats):
+    box = {}
+
+    def once():
+        res = cascade_svm(x, y, num_sv=32, steps=steps, iterations=1, mode=mode)
+        box["res"] = res
+        return res.sv_x
+
+    stats = winsorized(timeit(once, repeats=repeats))
+    return stats, box["res"]
+
+
+def bench(quick: bool = True) -> list[Table]:
+    rows_per_loc = 1_024 if quick else 4_096
+    steps = 100 if quick else 300
+    repeats = 3 if quick else 10
+
+    t15 = Table("svm_weak_fragmented", "paper Fig. 15")
+    for locs in (1, 2, 4, 8):
+        x, y = _dataset(locs, 8, rows_per_loc)
+        for mode in MODES:
+            stats, res = _run(x, y, mode, steps=steps, repeats=repeats)
+            t15.add(locations=locs, mode=mode, blocks=x.num_blocks,
+                    dispatches=res.report.dispatches,
+                    bytes_moved=res.report.bytes_moved, **stats)
+
+    t16 = Table("svm_weak_balanced", "paper Fig. 16")
+    for locs in (1, 2, 4, 8):
+        x, y = _dataset(locs, 1, rows_per_loc)
+        for mode in MODES:
+            stats, res = _run(x, y, mode, steps=steps, repeats=repeats)
+            t16.add(locations=locs, mode=mode, blocks=x.num_blocks,
+                    dispatches=res.report.dispatches,
+                    bytes_moved=res.report.bytes_moved, **stats)
+
+    t17 = Table("svm_fragmentation", "paper Fig. 17")
+    for bpl in (1, 2, 4, 8):
+        x, y = _dataset(8, bpl, rows_per_loc)
+        for mode in MODES:
+            stats, res = _run(x, y, mode, steps=steps, repeats=repeats)
+            t17.add(blocks_per_loc=bpl, mode=mode, blocks=x.num_blocks,
+                    dispatches=res.report.dispatches,
+                    bytes_moved=res.report.bytes_moved, **stats)
+
+    return [t15, t16, t17]

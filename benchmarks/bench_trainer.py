@@ -1,0 +1,78 @@
+"""Framework-level benchmarks: SplIter at the trainer (L2) and dispatch
+overhead microbenchmark (the "scheduler stress" cost the paper attacks).
+
+``trainer_accum_modes`` — identical training math under the paper's three
+execution strategies: per_block (baseline, N dispatches/step), spliter
+(1 dispatch/step, scan), materialized (1 dispatch, fused batch, max
+memory).  Mirrors the paper's baseline/SplIter/rechunk triangle at the
+gradient-accumulation level.
+
+``dispatch_overhead`` — cost of one executable invocation vs payload size:
+quantifies why granularity coupling hurts (paper §1: "the runtime
+invocation overhead increases").
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.train import _preset
+from repro.runtime.trainer import TrainConfig, Trainer
+
+from benchmarks.harness import Table, timeit, winsorized
+
+
+def trainer_accum_modes(quick: bool = True) -> Table:
+    t = Table("trainer_accum_modes", "paper Listing 4/5 at trainer level")
+    steps = 8 if quick else 30
+    for num_blocks in (4, 16):
+        for mode in ("per_block", "spliter", "materialized"):
+            cfg = TrainConfig(
+                global_batch=16, num_blocks=num_blocks, seq_len=64,
+                steps=steps, accum_mode=mode, warmup_steps=2,
+            )
+            tr = Trainer(_preset("lm1m"), cfg)
+            out = tr.run(resume=False)
+            t.add(num_blocks=num_blocks, mode=mode,
+                  dispatches=out["dispatches"],
+                  dispatches_per_step=out["dispatches"] / steps,
+                  wall_s=round(out["wall_s"], 3),
+                  ms_per_step=round(out["wall_s"] / steps * 1e3, 1),
+                  final_loss=round(out["losses"][-1], 4))
+    return t
+
+
+def dispatch_overhead(quick: bool = True) -> Table:
+    t = Table("dispatch_overhead", "runtime invocation cost (paper §1)")
+    repeats = 20 if quick else 100
+
+    for rows in (256, 4_096, 65_536):
+        x = jnp.asarray(np.random.default_rng(0).random((rows, 32), np.float32))
+        f = jax.jit(lambda a: jnp.sum(a * a, axis=1))
+        f(x).block_until_ready()  # compile
+
+        # one dispatch of the full payload
+        one = winsorized(timeit(lambda: f(x).block_until_ready(),
+                                repeats=repeats, warmup=2))
+        # 16 dispatches of 1/16 payloads (fragmented)
+        xs = [x[i::16] for i in range(16)]
+        f(xs[0]).block_until_ready()
+
+        def frag():
+            outs = [f(s) for s in xs]
+            jax.block_until_ready(outs)
+
+        many = winsorized(timeit(frag, repeats=repeats, warmup=2))
+        t.add(rows=rows,
+              one_dispatch_ms=one["median_s"] * 1e3,
+              sixteen_dispatch_ms=many["median_s"] * 1e3,
+              overhead_ratio=round(many["median_s"] / max(one["median_s"], 1e-9), 2))
+    return t
+
+
+def bench(quick: bool = True) -> list[Table]:
+    return [trainer_accum_modes(quick), dispatch_overhead(quick)]

@@ -1,0 +1,97 @@
+"""Benchmark harness: timing, winsorized statistics, tabular reports.
+
+The paper's evaluation methodology (§6): dozens of repeats, winsorizing to
+clean outliers, inter-quartile error bars.  We reproduce it scaled to this
+container — the *structural* metrics (dispatch counts, bytes moved, trace
+counts) are exact regardless of host speed; wall-clock columns quantify the
+dispatch-overhead effect on the CPU backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+
+def timeit(fn: Callable[[], Any], *, repeats: int = 5, warmup: int = 1) -> list[float]:
+    """Wall-times of ``fn()`` after ``warmup`` discarded calls (jit tracing)."""
+    for _ in range(warmup):
+        fn()
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def winsorized(times: Iterable[float], pct: float = 10.0) -> dict[str, float]:
+    """Winsorize at ``pct`` percent per tail; report median + IQR (paper §6)."""
+    t = np.asarray(sorted(times), np.float64)
+    lo, hi = np.percentile(t, [pct, 100 - pct])
+    t = np.clip(t, lo, hi)
+    q1, med, q3 = np.percentile(t, [25, 50, 75])
+    return {"median_s": float(med), "iqr_lo_s": float(q1), "iqr_hi_s": float(q3)}
+
+
+# ---------------------------------------------------------------------------
+# result rows + reporting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Table:
+    """One paper table/figure analogue: named rows of measurement dicts."""
+
+    name: str
+    figure: str            # which paper figure/table this mirrors
+    rows: list[dict] = dataclasses.field(default_factory=list)
+
+    def add(self, **row) -> None:
+        self.rows.append(row)
+
+    # -- printing -----------------------------------------------------------
+
+    def show(self) -> None:
+        print(f"\n== {self.name}  ({self.figure}) ==")
+        if not self.rows:
+            print("  (empty)")
+            return
+        cols = list(self.rows[0].keys())
+        widths = {
+            c: max(len(c), *(len(_fmt(r.get(c))) for r in self.rows)) for c in cols
+        }
+        print("  " + "  ".join(c.ljust(widths[c]) for c in cols))
+        for r in self.rows:
+            print("  " + "  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, out_dir: str = RESULTS_DIR) -> str:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{self.name}.json")
+        with open(path, "w") as f:
+            json.dump(
+                {"name": self.name, "figure": self.figure, "rows": self.rows},
+                f,
+                indent=1,
+            )
+        return path
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

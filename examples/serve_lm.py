@@ -1,0 +1,14 @@
+"""Batched serving example (deliverable b) — serve a smoke-sized model with
+batched requests: one prefill dispatch, then a fused decode loop.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if not any(a.startswith("--arch") for a in sys.argv[1:]):
+        sys.argv += ["--arch", "qwen3-32b"]
+    main()

@@ -1,0 +1,5 @@
+"""Checkpoint substrate: sharded, async, atomic, elastic-restorable."""
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

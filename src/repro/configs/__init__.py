@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig.
+
+``get_config(id)`` returns the full assigned config; ``get_smoke_config(id)``
+the reduced same-family config used by CPU smoke tests.  IDs use dashes
+(CLI-style); module names use underscores.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, LayerSpec, ModelConfig, Segment, ShapeCell
+
+_MODULES: dict[str, str] = {
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+    "llama-3.2-vision-11b": "repro.configs.llama_32_vision_11b",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).smoke()
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "LayerSpec",
+    "ModelConfig",
+    "Segment",
+    "ShapeCell",
+    "get_config",
+    "get_smoke_config",
+]

@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: SplIter over blocked collections.
+
+Public surface:
+
+* :class:`BlockedArray` — blocked dataset with explicit placement.
+* :func:`spliter` / :func:`split` — locality partitions (zero movement).
+* :class:`Partition` — logical block group; ``get_indexes`` /
+  ``get_item_indexes`` / ``materialize``.
+* :func:`rechunk` — the materializing competitor, with traffic accounting.
+* :func:`run_map_reduce`, :class:`TaskEngine` — per-block vs per-partition
+  execution with dispatch accounting.
+* ``repro.core.apps`` — the paper's four applications.
+"""
+
+from repro.core.blocked import (
+    BlockedArray,
+    contiguous_placement,
+    round_robin_placement,
+)
+from repro.core.engine import MODES, EngineReport, TaskEngine, run_map_reduce
+from repro.core.rechunk import RechunkStats, rechunk
+from repro.core.spliter import Partition, split, spliter
+
+__all__ = [
+    "BlockedArray",
+    "contiguous_placement",
+    "round_robin_placement",
+    "EngineReport",
+    "TaskEngine",
+    "run_map_reduce",
+    "MODES",
+    "RechunkStats",
+    "rechunk",
+    "Partition",
+    "split",
+    "spliter",
+]

@@ -1,0 +1,8 @@
+"""The paper's four evaluation applications (§5), on the SplIter task engine."""
+
+from repro.core.apps.histogram import histogram
+from repro.core.apps.kmeans import kmeans
+from repro.core.apps.cascade_svm import cascade_svm
+from repro.core.apps.knn import knn
+
+__all__ = ["histogram", "kmeans", "cascade_svm", "knn"]

@@ -1,0 +1,53 @@
+"""n-dimensional Histogram (paper §5.1) — embarrassingly parallel, memory-bound.
+
+Per block: ``histogramdd``; merge: summation.  The SplIter version performs
+the first summation inside ``compute_partition`` (locality-guaranteed), the
+final merge is a single reduction task — exactly paper Listings 4/5.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocked import BlockedArray
+from repro.core.engine import EngineReport, run_map_reduce
+
+__all__ = ["histogram", "histogramdd_block"]
+
+
+def histogramdd_block(block: jax.Array, *, bins: int, lo: float, hi: float) -> jax.Array:
+    """d-dimensional histogram of one ``(rows, d)`` block → ``(bins,)*d`` counts.
+
+    jnp analogue of ``np.histogramdd`` with shared uniform bin edges: each
+    row is digitized per-dimension and scattered into the flat grid.
+    """
+    rows, d = block.shape
+    scaled = (block - lo) / (hi - lo) * bins
+    idx = jnp.clip(scaled.astype(jnp.int32), 0, bins - 1)            # (rows, d)
+    flat = jnp.zeros((), jnp.int32)
+    for k in range(d):
+        flat = flat * bins + idx[:, k]
+    counts = jnp.zeros((bins**d,), jnp.int32).at[flat].add(1)
+    return counts.reshape((bins,) * d)
+
+
+def histogram(
+    x: BlockedArray,
+    *,
+    bins: int = 8,
+    lo: float = 0.0,
+    hi: float = 1.0,
+    mode: str = "spliter",
+    partitions_per_location: int = 1,
+) -> tuple[jax.Array, EngineReport]:
+    block_fn = partial(histogramdd_block, bins=bins, lo=lo, hi=hi)
+    return run_map_reduce(
+        [x],
+        block_fn,
+        lambda a, b: a + b,
+        mode=mode,
+        partitions_per_location=partitions_per_location,
+    )

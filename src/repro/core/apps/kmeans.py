@@ -1,0 +1,105 @@
+"""k-means / Lloyd's algorithm (paper §5.2) — iterative, memory-bound.
+
+Per block: pairwise distances → per-centroid partial sums and counts
+(``_partial_sum`` in dislib).  Merge: elementwise sum, then mean
+(``_recompute_centers``).  The iterative outer loop re-uses the same
+partitions every iteration, diluting the split cost (paper §6.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocked import BlockedArray
+from repro.core.engine import EngineReport, TaskEngine, run_map_reduce
+
+__all__ = ["kmeans", "partial_sum_block", "KMeansResult"]
+
+
+def partial_sum_block(block: jax.Array, centers: jax.Array):
+    """One Lloyd E+partial-M step on a ``(rows, d)`` block.
+
+    Returns ``(sums (k,d), counts (k,))`` — the associative partial state.
+    """
+    d2 = (
+        jnp.sum(block * block, axis=1)[:, None]
+        - 2.0 * block @ centers.T
+        + jnp.sum(centers * centers, axis=1)[None, :]
+    )                                                        # (rows, k)
+    assign = jnp.argmin(d2, axis=1)                          # (rows,)
+    k = centers.shape[0]
+    one_hot = jax.nn.one_hot(assign, k, dtype=block.dtype)   # (rows, k)
+    sums = one_hot.T @ block                                 # (k, d)
+    counts = jnp.sum(one_hot, axis=0)                        # (k,)
+    return sums, counts
+
+
+def _combine(a, b):
+    return a[0] + b[0], a[1] + b[1]
+
+
+@dataclasses.dataclass
+class KMeansResult:
+    centers: jax.Array
+    iterations: int
+    reports: list[EngineReport]
+
+    @property
+    def total_dispatches(self) -> int:
+        return sum(r.dispatches for r in self.reports)
+
+    @property
+    def total_wall_s(self) -> float:
+        return sum(r.wall_s for r in self.reports)
+
+    @property
+    def total_bytes_moved(self) -> int:
+        return sum(r.bytes_moved for r in self.reports)
+
+
+def kmeans(
+    x: BlockedArray,
+    *,
+    k: int = 8,
+    iters: int = 10,
+    seed: int = 0,
+    mode: str = "spliter",
+    partitions_per_location: int = 1,
+) -> KMeansResult:
+    d = x.row_shape[0]
+    centers = jax.random.uniform(jax.random.key(seed), (k, d), x.dtype)
+    reports: list[EngineReport] = []
+
+    # rechunk (like SplIter's split) is paid ONCE, outside the loop — paper
+    # §6.3.1: "this cost is only payed once, not for every iteration".
+    work = x
+    eff_mode = mode
+    if mode == "rechunk":
+        from repro.core.rechunk import rechunk
+        import math
+
+        target = math.ceil(x.num_rows / x.num_locations)
+        work, st = rechunk(x, target)
+        pre = EngineReport(mode="rechunk")
+        pre.bytes_moved = st.bytes_moved
+        reports.append(pre)
+        eff_mode = "baseline"  # per-(big-)block tasks on the rechunked array
+
+    engine = TaskEngine()  # task definitions traced once, reused per iteration
+    for _ in range(iters):
+        (sums, counts), rep = run_map_reduce(
+            [work],
+            partial_sum_block,
+            _combine,
+            mode=eff_mode,
+            partitions_per_location=partitions_per_location,
+            extra_args=(centers,),
+            engine=engine,
+        )
+        centers = sums / jnp.maximum(counts, 1.0)[:, None]
+        reports.append(rep)
+
+    return KMeansResult(centers=centers, iterations=iters, reports=reports)

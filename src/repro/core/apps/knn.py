@@ -1,0 +1,133 @@
+"""k-Nearest Neighbors (paper §5.4) — two-stage, order-sensitive, consolidation.
+
+*fit*: build one lookup structure per fit-block (baseline) or one per
+partition (SplIter — the paper's key insight: consolidation decouples the
+number of intermediate structures from the blocking and makes each lookup
+structure more efficient, Figs 7/8).
+
+*kneighbors*: every query block is looked up against every structure and the
+per-structure top-k results are merged — #tasks = #structures × #query
+blocks, so consolidation shrinks both the task count and the merge fan-in
+(Table 1 / Fig 21).
+
+TPU adaptation (DESIGN.md §2): sklearn KD-trees → the MXU-native structure
+is the consolidated candidate *matrix*; lookup = one distance matmul + one
+``top_k``.  The complexity argument transfers: merge cost scales with the
+number of structures, per-structure lookup is sub-linear in its size
+(top-k over one big matrix beats K-way merge of many small top-ks).
+
+Order sensitivity: returned neighbor ids must be **global** row ids of the
+fit dataset — exactly what ``Partition.get_item_indexes`` provides (§4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocked import BlockedArray
+from repro.core.engine import EngineReport, TaskEngine
+from repro.core.spliter import spliter
+
+__all__ = ["knn", "KNNResult"]
+
+
+@dataclasses.dataclass
+class KNNResult:
+    distances: jax.Array  # (n_queries, k) squared distances, ascending
+    indices: jax.Array    # (n_queries, k) GLOBAL fit-row ids
+    report: EngineReport
+
+
+def _lookup(fit_x: jax.Array, fit_ids: jax.Array, q: jax.Array, k: int):
+    """Distances of ``q`` against one structure → per-query top-k (d², id)."""
+    d2 = (
+        jnp.sum(q * q, 1)[:, None]
+        - 2.0 * q @ fit_x.T
+        + jnp.sum(fit_x * fit_x, 1)[None, :]
+    )
+    neg, pos = jax.lax.top_k(-d2, k)          # smallest distances
+    return -neg, fit_ids[pos]
+
+
+def _merge(d1, i1, d2, i2, k: int):
+    """Merge two top-k candidate sets (the paper's _merge_kqueries)."""
+    d = jnp.concatenate([d1, d2], axis=1)
+    i = jnp.concatenate([i1, i2], axis=1)
+    neg, pos = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(i, pos, axis=1)
+
+
+def knn(
+    fit: BlockedArray,
+    queries: BlockedArray,
+    *,
+    k: int = 8,
+    mode: str = "spliter",
+    partitions_per_location: int = 1,
+) -> KNNResult:
+    engine = TaskEngine()
+    report = engine.new_report(mode)
+    import time
+
+    t0 = time.perf_counter()
+
+    # ---- fit stage: build the lookup structures --------------------------
+    offs = fit.row_offsets()
+    if mode in ("baseline", "rechunk"):
+        wfit = fit
+        if mode == "rechunk":
+            import math
+
+            from repro.core.rechunk import rechunk
+
+            target = math.ceil(fit.num_rows / fit.num_locations)
+            wfit, st = rechunk(fit, target)
+            report.bytes_moved += st.bytes_moved
+            offs = wfit.row_offsets()
+        fit_task = engine.task(lambda b: b, key="fit_identity")
+        structures = []
+        for i in range(wfit.num_blocks):
+            pts = fit_task(wfit.blocks[i])  # the "tree build" task
+            ids = jnp.arange(offs[i], offs[i] + wfit.block_rows[i], dtype=jnp.int32)
+            structures.append((pts, ids))
+    elif mode in ("spliter", "spliter_mat"):
+        parts = spliter(fit, partitions_per_location=partitions_per_location)
+        fit_task = engine.task(
+            lambda *bs: jnp.concatenate(bs, 0), key=("fit_concat",)
+        )
+        structures = []
+        for p in parts:
+            # ONE consolidated structure per partition (paper Fig. 8);
+            # global row ids come from get_item_indexes (paper §4.1).
+            pts = fit_task(*p.blocks)
+            ids = jnp.asarray(p.get_item_indexes(), jnp.int32)
+            structures.append((pts, ids))
+    else:  # pragma: no cover
+        raise ValueError(mode)
+
+    # ---- kneighbors stage -------------------------------------------------
+    lookup_task = engine.task(lambda f, ids, q: _lookup(f, ids, q, k), key=("lk", k))
+    merge_task = engine.task(lambda a, b, c, d: _merge(a, b, c, d, k), key=("mg", k))
+
+    out_d, out_i = [], []
+    for qb in queries.blocks:
+        cand = None
+        for pts, ids in structures:
+            r = lookup_task(pts, ids, qb)
+            if cand is None:
+                cand = r
+            else:
+                cand = merge_task(cand[0], cand[1], r[0], r[1])
+                report.merges += 1
+        out_d.append(cand[0])
+        out_i.append(cand[1])
+
+    distances = jnp.concatenate(out_d, 0)
+    indices = jnp.concatenate(out_i, 0)
+    distances, indices = jax.block_until_ready((distances, indices))
+    report.wall_s = time.perf_counter() - t0
+    return KNNResult(distances=distances, indices=indices, report=report)

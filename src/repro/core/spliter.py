@@ -1,0 +1,125 @@
+"""SplIter — split a blocked collection into locality partitions, then iterate.
+
+This is the paper's contribution (§4).  ``spliter(x)`` queries the placement
+of every block of ``x`` and yields :class:`Partition` objects:
+
+* a partition groups blocks that live on a **single location** (locality —
+  paper: "Each partition is located in a single node");
+* grouping is **logical**: a partition holds *references* to the original
+  block buffers — zero data movement, zero transformation (the key contrast
+  with ``rechunk``);
+* the number of partitions adapts to the *computing capability* of the
+  environment (paper: nodes × cores) via ``partitions_per_location``;
+* ordering metadata is carried along (paper §4.1): ``get_indexes()`` returns
+  the global block ids, ``get_item_indexes()`` the global row ids.
+
+A partition can optionally be **materialized** (paper §7 future work,
+implemented here): its blocks are concatenated *locally* — an intra-location
+copy with no inter-node transfer — so compute-bound consumers get a
+contiguous buffer (recovers the rechunk advantage observed for Cascade SVM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocked import BlockedArray
+
+__all__ = ["Partition", "spliter", "split"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """A logical, single-location group of blocks of a :class:`BlockedArray`.
+
+    Holds references, never copies.  ``block_ids`` are *global* block indices
+    in ascending order, mirroring the paper's partition construction (blocks
+    are grouped in placement-scan order; original collection order is
+    recoverable through the index accessors).
+    """
+
+    source: BlockedArray
+    location: int
+    block_ids: tuple[int, ...]
+
+    # -- iteration (the "Iter" in SplIter) ----------------------------------
+
+    def __iter__(self) -> Iterator[jax.Array]:
+        for b in self.block_ids:
+            yield self.source.blocks[b]
+
+    def __len__(self) -> int:
+        return len(self.block_ids)
+
+    @property
+    def blocks(self) -> list[jax.Array]:
+        return [self.source.blocks[b] for b in self.block_ids]
+
+    @property
+    def num_rows(self) -> int:
+        return int(sum(self.source.block_rows[b] for b in self.block_ids))
+
+    # -- ordering metadata (paper §4.1) --------------------------------------
+
+    def get_indexes(self) -> list[int]:
+        """Global block indices of this partition's blocks (paper Fig. 4)."""
+        return list(self.block_ids)
+
+    def get_item_indexes(self) -> np.ndarray:
+        """Global row indices of every element, concatenated in block order."""
+        offs = self.source.row_offsets()
+        rows = self.source.block_rows
+        return np.concatenate(
+            [np.arange(offs[b], offs[b] + rows[b], dtype=np.int64) for b in self.block_ids]
+        )
+
+    # -- materialization (paper §7, implemented as a beyond-paper feature) ---
+
+    def materialize(self) -> jax.Array:
+        """Local concat of the partition's blocks.  Intra-location copy only."""
+        return jnp.concatenate(self.blocks, axis=0)
+
+    def stacked(self) -> jax.Array:
+        """Stack (uniform blocks) into ``(k, block_rows, *row_shape)`` — the
+        fused-scan input used by the task engine's per-partition execution."""
+        return jnp.stack(self.blocks, axis=0)
+
+
+def spliter(
+    x: BlockedArray,
+    *,
+    partitions_per_location: int = 1,
+) -> list[Partition]:
+    """Split ``x`` into locality partitions (the paper's ``split()``).
+
+    Queries block placement (the dataClay-metadata / Dask-``who_has``
+    analogue — here :meth:`BlockedArray.blocks_at`) and groups node-local
+    blocks.  ``partitions_per_location`` models the paper's adaptation to
+    the computing capability (e.g. one partition per core or per socket
+    instead of per node).
+
+    Returns partitions ordered by (location, sub-partition).  Locations that
+    hold no blocks yield no partitions.  Every block appears in exactly one
+    partition (tested as a hypothesis invariant).
+    """
+    assert partitions_per_location >= 1
+    parts: list[Partition] = []
+    for loc in range(x.num_locations):
+        local = x.blocks_at(loc)
+        if not local:
+            continue
+        k = min(partitions_per_location, len(local))
+        # Balanced striping of local blocks into k sub-partitions.
+        for s in range(k):
+            ids = tuple(local[s::k])
+            parts.append(Partition(source=x, location=loc, block_ids=ids))
+    return parts
+
+
+# The paper's listings call it ``split(experiment)``; keep that alias.
+split = spliter

@@ -1,0 +1,11 @@
+"""Data substrate: deterministic blocked token pipeline with resumable state."""
+
+from repro.data.pipeline import BlockedBatchPipeline, PipelineState
+from repro.data.datasets import synthetic_lm_batch, SyntheticTextDataset
+
+__all__ = [
+    "BlockedBatchPipeline",
+    "PipelineState",
+    "synthetic_lm_batch",
+    "SyntheticTextDataset",
+]

@@ -1,0 +1,390 @@
+"""Logical-axis sharding: rules map logical dims → mesh axes.
+
+Models annotate activations with *logical* axis names (``shard(x, "batch",
+"seq", "embed")``); a :class:`ShardingRules` context maps those to mesh axes
+and inserts ``with_sharding_constraint``.  Outside a rules context the calls
+are identity — so smoke tests and single-device benches run unannotated
+(1 device, per the dry-run spec), while the launcher activates the
+production rules.
+
+Parameter placement is name-based: :func:`param_pspec` pattern-matches the
+parameter path (e.g. ``.../wq`` → heads over "model").  Leading stacked-layer
+dims (from scanned segments) are never sharded.
+
+Rule presets (DESIGN.md §5):
+
+* ``train_rules``   — DP over (pod, data); TP heads/ffn/experts/vocab over model.
+* ``train_rules_sp``— + sequence-parallel residual stream (seq over model
+                      between blocks; cuts the activation memory term).
+* ``decode_rules``  — batch over (pod, data); heads/vocab over model.
+* ``long_decode_rules`` — batch unshardable (B=1): KV/state sequence over
+                      data (context parallelism), heads over model.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "use_rules",
+    "shard",
+    "param_pspec",
+    "params_shardings",
+    "cache_shardings",
+    "train_rules",
+    "train_rules_sp",
+    "decode_rules",
+    "long_decode_rules",
+]
+
+_ACTIVE: list["ShardingRules"] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    logical: dict[str, Any]  # logical axis name -> mesh axis (str/tuple/None)
+    cache_impl: str = "masked"  # decode cache write: "masked" | "sharded_dus"
+
+    def spec(self, *names: str | None) -> P:
+        return P(*(self.logical.get(n) if n else None for n in names))
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    if rules is None:
+        yield
+        return
+    _ACTIVE.append(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules() -> ShardingRules | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def shard(x: jax.Array, *names: str | None) -> jax.Array:
+    """Constrain ``x`` to the active rules' mapping of logical ``names``.
+
+    Axes whose mesh extent does not divide the dim are dropped (replicated)
+    — e.g. whisper's 6 heads on a 16-way model axis.
+    """
+    r = active_rules()
+    if r is None:
+        return x
+    assert x.ndim == len(names), (x.shape, names)
+    spec = []
+    for dim, name in zip(x.shape, names):
+        ax = r.logical.get(name) if name else None
+        spec.append(ax if ax and dim % _axis_size(r.mesh, ax) == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*spec))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rule presets.  `dp` = the data-parallel submesh (("pod","data") or ("data",)).
+# ---------------------------------------------------------------------------
+
+def _dp(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def train_rules(mesh: Mesh) -> ShardingRules:
+    dp = _dp(mesh)
+    return ShardingRules(
+        mesh,
+        {
+            "batch": dp,
+            "seq": None,
+            "seq_res": None,   # residual stream between blocks (SP shards it)
+            "embed": None,
+            "heads": "model",
+            "kv_heads": "model",
+            "head_dim": None,
+            "mlp": "model",
+            "expert": "model",
+            "vocab": "model",
+            "kv_seq": None,
+            "state": None,
+        },
+    )
+
+
+def train_rules_sp(mesh: Mesh) -> ShardingRules:
+    """Sequence-parallel residual stream: seq sharded over model between
+    blocks (beyond-paper §Perf optimization — cuts activation bytes)."""
+    r = train_rules(mesh)
+    logical = dict(r.logical)
+    logical["seq_res"] = "model"  # Megatron-style sequence parallelism
+    return ShardingRules(mesh, logical)
+
+
+def decode_rules(mesh: Mesh) -> ShardingRules:
+    """Decode: context parallelism.  The KV cache sequence shards over
+    `model` (GQA kv-heads rarely divide a 16-way TP axis), so attention
+    heads must stay UNSHARDED — q replicates over model, each model rank
+    attends to its S/16 keys and the softmax reduces across them.  MLP/vocab
+    stay tensor-parallel."""
+    dp = _dp(mesh)
+    return ShardingRules(
+        mesh,
+        {
+            "batch": dp,
+            "seq": None,
+            "seq_res": None,   # residual stream between blocks (SP shards it)
+            "embed": None,
+            "heads": None,
+            "kv_heads": None,
+            "head_dim": None,
+            "mlp": "model",
+            "expert": "model",
+            "vocab": "model",
+            "kv_seq": "model",
+            "state": None,
+        },
+    )
+
+
+def decode_rules_headsharded(mesh: Mesh) -> ShardingRules:
+    """Decode for archs whose kv-head count divides the model axis
+    (deepseek-7b: 32 kv heads on 16-way TP): shard heads, keep the cache
+    sequence dim UNSHARDED so the per-token cache update is a true
+    dynamic-update-slice (offset on an unsharded dim → GSPMD partitions it
+    in place; no full-cache rewrite).  §Perf cell-B optimization."""
+    dp = _dp(mesh)
+    return ShardingRules(
+        mesh,
+        {
+            "batch": dp,
+            "seq": None,
+            "seq_res": None,
+            "embed": None,
+            "heads": "model",
+            "kv_heads": "model",
+            "head_dim": None,
+            "mlp": "model",
+            "expert": "model",
+            "vocab": "model",
+            "kv_seq": None,
+            "state": None,
+        },
+        cache_impl="heads_dus",
+    )
+
+
+def long_decode_rules(mesh: Mesh) -> ShardingRules:
+    """B=1 long-context decode: context parallelism — the KV/conv/SSM state
+    sequence dim shards over data; batch replicates."""
+    return ShardingRules(
+        mesh,
+        {
+            "batch": None,
+            "seq": None,
+            "seq_res": None,   # residual stream between blocks (SP shards it)
+            "embed": None,
+            "heads": "model",
+            "kv_heads": "model",
+            "head_dim": None,
+            "mlp": "model",
+            "expert": "model",
+            "vocab": "model",
+            "kv_seq": "data",
+            "state": "data",
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter placement (name-based rules, MaxText-style).
+# ---------------------------------------------------------------------------
+
+# (regex on the joined param path, per-dim sharding) — "model" is tensor
+# parallelism, "fsdp" is the ZeRO-3 dimension (resolved to the data axis):
+# weights too large to replicate per DP rank are sharded over data and
+# GSPMD inserts the FSDP all-gather (fwd) / reduce-scatter (bwd) pattern.
+# Leaves inside scanned segments carry a leading layer-stack dim.
+_PARAM_RULES: list[tuple[str, tuple[Any, ...]]] = [
+    # attention projections: (D, H, Dh) -> heads over model, D over fsdp
+    (r"/(wq|wk|wv|wk_mem|wv_mem)$", ("fsdp", "model", None)),
+    (r"/(wq_b|wk_b|wv_b)$", ("fsdp", "model", None)),
+    (r"/(bq|bk|bv)$", ("model", None)),
+    # output projection: (H, Dh, D) -> heads over model, D over fsdp
+    (r"/wo$", ("model", None, "fsdp")),
+    # MLA low-rank downs
+    (r"/(wq_a|wkv_a)$", ("fsdp", None)),
+    # dense mlp: (D, F) / (F, D)
+    (r"/(w_gate|w_up)$", ("fsdp", "model")),
+    (r"/w_down$", ("model", "fsdp")),
+    # moe experts: (E, D, F) / (E, F, D) -> expert-parallel over model
+    (r"/(experts_gate|experts_up)$", ("model", "fsdp", None)),
+    (r"/experts_down$", ("model", None, "fsdp")),
+    (r"/router$", (None, None)),
+    # mamba: shard the inner (head) dim over model, D over fsdp
+    (r"/(w_in_z|w_in_x)$", ("fsdp", "model")),
+    (r"/(w_in_b|w_in_c)$", ("fsdp", None)),
+    (r"/w_in_dt$", ("fsdp", "model")),
+    (r"/w_out$", ("model", "fsdp")),
+    (r"/(conv_x)$", (None, "model")),
+    (r"/(conv_b|conv_c)$", (None, None)),
+    (r"/(A_log|ssm_D|dt_bias)$", ("model",)),
+    (r"/ssm_norm$", ("model",)),
+    # embeddings / head: vocab over model, embed over fsdp
+    (r"/embed$", ("model", "fsdp")),
+    (r"/lm_head$", ("fsdp", "model")),
+    # norms, gates, scalars: replicated
+    (r"/(ln1|ln2|ln1_b|ln2_b|final_norm|final_norm_b|enc_final_norm|enc_final_norm_b|q_norm|k_norm|q_norm_a|kv_norm_a|gate)$", ()),
+]
+
+
+def param_pspec(
+    path: str,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    *,
+    fsdp_axis: Any = "data",
+) -> P:
+    """PartitionSpec for a parameter leaf by path name.
+
+    A leaf under a scanned segment carries a leading layer-stack dim (never
+    sharded); it is detected *by rank*: every non-empty rule's spec length
+    equals the parameter's base rank, so ``ndim == len(rule)+1`` ⇔ stacked.
+    (Path heuristics break for repeats==1 segments and unrolled probe
+    configs, which have no stack dim.)  Dims not divisible by their axis
+    extent are replicated.  ``fsdp_axis=None`` disables ZeRO sharding.
+    """
+    chosen: tuple[Any, ...] | None = None
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            chosen = spec
+            break
+    if chosen is None or len(chosen) == 0:
+        return P(*((None,) * len(shape)))  # unmatched or norms/scalars: replicate
+    if len(shape) == len(chosen) + 1:
+        stacked = True
+    elif len(shape) == len(chosen):
+        stacked = False
+    else:  # rank mismatch (e.g. scalar variants): replicate, never crash
+        return P(*((None,) * len(shape)))
+    base_shape = shape[1:] if stacked else shape
+    out = []
+    for i, dim in enumerate(base_shape):
+        ax = chosen[i]
+        if ax == "fsdp":
+            ax = fsdp_axis
+        if ax is None or dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*(((None,) if stacked else ()) + tuple(out)))
+
+
+def params_shardings(params: Any, mesh: Mesh, *, fsdp_axis: Any = "data") -> Any:
+    """Map a params pytree to NamedShardings (path-name rules)."""
+
+    def one(path, leaf):
+        pstr = "/" + "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        return NamedSharding(
+            mesh,
+            param_pspec(pstr, tuple(leaf.shape), mesh, fsdp_axis=fsdp_axis),
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# decode-cache placement
+# ---------------------------------------------------------------------------
+
+
+# decode-cache leaf base ranks (unstacked); a leading layer-stack dim is
+# detected exactly as ndim == base+1 (repeats==1 segments and unrolled
+# probe configs have none).
+_CACHE_BASE_RANK = {
+    "k": 4, "v": 4,            # (B, S, Hkv, Dh)
+    "k_mem": 4, "v_mem": 4,    # (B, M, Hkv, Dh)
+    "ckv": 3, "krope": 3,      # (B, S, R)
+    "conv": 3,                 # (B, W-1, C)
+    "h": 4,                    # (B, NH, P, N)
+}
+
+
+def cache_shardings(
+    cache: Any,
+    mesh: Mesh,
+    *,
+    long_context: bool = False,
+    layout: str = "seq",
+) -> Any:
+    """NamedShardings for a decode cache pytree.
+
+    ``layout="seq"`` (default): batch over (pod, data); the KV sequence dim
+    over model (context parallel inside attention) — kv heads are usually
+    not divisible by the model axis (GQA kv=8 on 16-way TP), the sequence
+    always is.  Long-context (B=1): the sequence dim shards over data
+    instead, batch replicates.
+
+    ``layout="heads"``: shard the head (k/v) or latent (MLA) dim over model
+    and leave the sequence dim whole, enabling the in-place DUS cache
+    update (``decode_rules_headsharded``).
+    """
+    dp = _dp(mesh)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        base = _CACHE_BASE_RANK.get(name)
+        stacked = base is not None and leaf.ndim == base + 1
+        nb = 1 if stacked else 0  # leading layer-stack dim
+        dims = [None] * leaf.ndim
+        seq_ax = "data" if long_context else "model"
+        batch_ax = None if long_context else dp
+        heads = layout == "heads" and not long_context
+        if name in ("k", "v"):          # (.., B, S, Hkv, Dh)
+            dims[nb + 0] = batch_ax
+            if heads:
+                dims[nb + 2] = "model"
+            else:
+                dims[nb + 1] = seq_ax
+        elif name in ("k_mem", "v_mem"):  # (.., B, M, Hkv, Dh)
+            dims[nb + 0] = batch_ax
+        elif name in ("ckv", "krope"):    # (.., B, S, R)
+            dims[nb + 0] = batch_ax
+            if heads:
+                dims[nb + 2] = "model"
+            else:
+                dims[nb + 1] = seq_ax
+        elif name == "conv":              # (.., B, W-1, C)
+            dims[nb + 0] = batch_ax
+            dims[nb + 2] = "model"
+        elif name == "h":                 # (.., B, NH, P, N)
+            dims[nb + 0] = batch_ax
+            dims[nb + 1] = "model"
+        # drop non-divisible axes
+        for i, (dim, ax) in enumerate(zip(leaf.shape, dims)):
+            if ax is not None and dim % _axis_size(mesh, ax) != 0:
+                dims[i] = None
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

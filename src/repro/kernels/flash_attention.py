@@ -1,0 +1,164 @@
+"""Flash attention (causal, GQA, optional sliding window) — Pallas TPU kernel.
+
+Online-softmax blocked attention.  Grid = (batch, q_heads, q_blocks,
+kv_blocks); the TPU grid is executed sequentially over the trailing dim, so
+the running max / denominator / accumulator live in VMEM scratch across the
+kv sweep for one (b, h, iq) triple and are flushed to the output on the
+last kv step.
+
+VMEM tiling (BlockSpec):
+  q   (1, 1, bq, d)   indexed (b, h, iq)
+  k,v (1, 1, bk, d)   indexed (b, h // group, ik)   ← GQA: KV heads mapped
+  o   (1, 1, bq, d)   indexed (b, h, iq)
+
+`bq`/`bk` default to 128 (MXU-aligned); `d` is the full head_dim (≤ 256 —
+fits VMEM comfortably: 3·128·128·4B ≈ 200 KiB working set per step).
+
+Causal masking is positional (absolute q/kv indices), so the kernel also
+serves prefill-with-offset.  A sliding window adds a lower bound on kv
+positions.  Out-of-range kv *blocks* contribute via masking; a production
+refinement would skip them in the index map (noted in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,    # (1, 1, bq, d)
+    k_ref,    # (1, 1, bk, d)
+    v_ref,    # (1, 1, bk, d)
+    o_ref,    # (1, 1, bq, d)
+    m_scr,    # (bq, 1) f32 running max
+    l_scr,    # (bq, 1) f32 running denom
+    acc_scr,  # (bq, d) f32 accumulator
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    bq: int,
+    bk: int,
+    kv_steps: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                       # (bq, bk)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                             # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)       # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows: exp(NEG_INF - NEG_INF) would be exp(0)=1
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+    p = jnp.where(m_new == NEG_INF, 0.0, jnp.exp(s - m_new))  # (bq, bk)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == kv_steps - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Lq, H, D)
+    k: jax.Array,  # (B, Lk, Hkv, D)
+    v: jax.Array,  # (B, Lk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked attention; returns (B, Lq, H, D) in q.dtype.
+
+    ``interpret=True`` runs the kernel body in the Pallas interpreter (CPU
+    validation); on TPU pass ``interpret=False``.
+    """
+    b, lq, h, d = q.shape
+    _, lk, hkv, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    bq = min(block_q, lq)
+    bk = min(block_k, lk)
+    assert lq % bq == 0 and lk % bk == 0, (lq, bq, lk, bk)
+    kv_steps = lk // bk
+    scale = 1.0 / np.sqrt(d)
+
+    # layout: (B, H, L, D) blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        kv_steps=kv_steps,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, lq // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

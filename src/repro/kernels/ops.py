@@ -1,0 +1,44 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to "not on TPU": kernels execute through the Pallas
+interpreter on CPU (correctness validation, this container) and compile to
+Mosaic on real TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.partition_reduce import (
+    partition_histogram as _hist,
+    partition_kmeans as _kmeans,
+)
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    return _flash(
+        q, k, v,
+        causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=_default_interpret(),
+    )
+
+
+def partition_histogram(stacked, *, bins=128, lo=0.0, hi=1.0):
+    return _hist(stacked, bins=bins, lo=lo, hi=hi, interpret=_default_interpret())
+
+
+def partition_kmeans(stacked, centers):
+    return _kmeans(stacked, centers, interpret=_default_interpret())
+
+
+def ssd_scan(x, dt, a, bm, cm, *, chunk=256):
+    return _ssd(x, dt, a, bm, cm, chunk=chunk, interpret=_default_interpret())
+
+
+__all__ = ["flash_attention", "partition_histogram", "partition_kmeans", "ssd_scan"]

@@ -1,0 +1,166 @@
+"""partition_reduce — the paper's ``compute_partition`` at the VMEM level.
+
+The SplIter idea expressed as a TPU kernel (DESIGN.md §2, layer L3): the
+*grid iterates the blocks of a partition* while the reduction accumulator
+stays resident in VMEM; one ``pallas_call`` per partition regardless of how
+many HBM blocks compose it.  Block size (HBM layout granularity) is thereby
+decoupled from kernel-invocation granularity — exactly the paper's
+decoupling, one level down.
+
+Two ops, matching the paper's memory-bound applications:
+
+* :func:`partition_histogram` — scatter-free MXU histogram: each block's
+  values are compared against bin edges (one-hot via two comparisons) and
+  accumulated with a matmul; the (bins,) accumulator never leaves VMEM
+  until the final grid step.
+
+* :func:`partition_kmeans` — fused Lloyd partial step: per block, squared
+  distances to centroids via MXU matmul, hard assignment, one-hot matmul
+  accumulation of per-centroid sums and counts in VMEM.
+
+Inputs are the partition's stacked blocks ``(nblocks, rows, d)`` — i.e.
+``Partition.stacked()`` — so the engine can hand a partition straight to
+the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+
+
+def _hist_kernel(x_ref, o_ref, acc, *, bins, lo, hi, nblocks):
+    ib = pl.program_id(0)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    x = x_ref[0].astype(jnp.float32)            # (rows, d) — one HBM block
+    rows, d = x.shape
+    width = (hi - lo) / bins
+    # one-hot bin membership, matmul-accumulated (scatter-free histogram):
+    # edges e_j = lo + j*width ; x in bin j  <=>  e_j <= x < e_{j+1}
+    edges = lo + width * jax.lax.broadcasted_iota(jnp.float32, (1, bins), 1)
+    xf = x.reshape(rows * d, 1)
+    onehot = ((xf >= edges) & (xf < edges + width)).astype(jnp.float32)
+    # clamp outliers into edge bins (matches jnp.clip digitize semantics)
+    first = (xf < lo + width).astype(jnp.float32)
+    last = (xf >= hi - width).astype(jnp.float32)
+    onehot = jnp.maximum(onehot, jnp.concatenate(
+        [first, jnp.zeros((rows * d, bins - 2), jnp.float32), last], axis=1
+    ))
+    ones = jnp.ones((1, rows * d), jnp.float32)
+    acc[...] += jax.lax.dot_general(
+        ones, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (1, bins)
+
+    @pl.when(ib == nblocks - 1)
+    def _flush():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "lo", "hi", "interpret"))
+def partition_histogram(
+    stacked: jax.Array,  # (nblocks, rows, d)
+    *,
+    bins: int = 128,
+    lo: float = 0.0,
+    hi: float = 1.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-dimension-flattened value histogram of a whole partition → (bins,)."""
+    nb, rows, d = stacked.shape
+    out = pl.pallas_call(
+        functools.partial(
+            _hist_kernel, bins=bins, lo=lo, hi=hi, nblocks=nb
+        ),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, rows, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, bins), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bins), jnp.float32)],
+        interpret=interpret,
+    )(stacked)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# k-means partial step
+# ---------------------------------------------------------------------------
+
+
+def _kmeans_kernel(x_ref, c_ref, sums_ref, counts_ref, acc_s, acc_c, *, nblocks):
+    ib = pl.program_id(0)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        acc_c[...] = jnp.zeros_like(acc_c)
+
+    x = x_ref[0].astype(jnp.float32)             # (rows, d)
+    c = c_ref[...].astype(jnp.float32)           # (k, d)
+    # d2 = |x|^2 - 2 x·c^T + |c|^2 ; |x|^2 constant per row -> drop for argmin
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (rows, k) MXU
+    d2 = jnp.sum(c * c, axis=1)[None, :] - 2.0 * xc
+    assign = jnp.argmin(d2, axis=1)               # (rows,)
+    k = c.shape[0]
+    onehot = (
+        assign[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    ).astype(jnp.float32)                         # (rows, k)
+    acc_s[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (k, d)
+    acc_c[...] += jnp.sum(onehot, axis=0, keepdims=True)  # (1, k)
+
+    @pl.when(ib == nblocks - 1)
+    def _flush():
+        sums_ref[...] = acc_s[...]
+        counts_ref[...] = acc_c[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def partition_kmeans(
+    stacked: jax.Array,   # (nblocks, rows, d)
+    centers: jax.Array,   # (k, d)
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused Lloyd partial step over a partition → (sums (k,d), counts (k,))."""
+    nb, rows, d = stacked.shape
+    k = centers.shape[0]
+    sums, counts = pl.pallas_call(
+        functools.partial(_kmeans_kernel, nblocks=nb),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, rows, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k, d), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(stacked, centers)
+    return sums, counts[0]

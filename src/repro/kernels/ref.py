@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the `assert_allclose` targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ssm import ssd_reference
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """GQA attention, materialized scores (B,Lq,H,D)."""
+    b, lq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, lq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) / np.sqrt(d)
+    qpos = jnp.arange(lq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((lq, k.shape[1]), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(b, lq, h, d)
+
+
+def histogram_ref(stacked: jax.Array, *, bins: int, lo: float, hi: float) -> jax.Array:
+    """Value histogram over all elements of the stacked partition → (bins,)."""
+    x = stacked.reshape(-1)
+    idx = jnp.clip(((x - lo) / (hi - lo) * bins).astype(jnp.int32), 0, bins - 1)
+    return jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+
+
+def kmeans_ref(stacked: jax.Array, centers: jax.Array):
+    """Lloyd partial step over the whole partition → (sums, counts)."""
+    x = stacked.reshape(-1, stacked.shape[-1])
+    d2 = (
+        jnp.sum(x * x, 1)[:, None]
+        - 2.0 * x @ centers.T
+        + jnp.sum(centers * centers, 1)[None, :]
+    )
+    onehot = jax.nn.one_hot(jnp.argmin(d2, 1), centers.shape[0], dtype=jnp.float32)
+    return onehot.T @ x.astype(jnp.float32), jnp.sum(onehot, 0)
+
+
+def ssd_ref(x, dt, a, bm, cm):
+    """Sequential SSD recurrence → (y, final_state)."""
+    return ssd_reference(x, dt, a, bm, cm)

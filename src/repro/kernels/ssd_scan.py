@@ -1,0 +1,132 @@
+"""ssd_scan — Mamba2 chunked SSD as a Pallas TPU kernel.
+
+Grid = (batch, heads, chunks); the chunk dimension is the sequentially-
+executed trailing grid dim, so the inter-chunk SSM state ``h (P, N)`` lives
+in VMEM scratch across the whole sequence sweep for one (b, head) pair.
+Per chunk the kernel computes the intra-chunk quadratic form (three MXU
+matmuls over (Q×Q)/(Q×N)/(Q×P) tiles) plus the inter-chunk contribution
+from the carried state, then updates the state — the same algorithm as
+``repro.models.ssm.ssd_chunked`` (the jnp oracle), but with the state
+resident in VMEM instead of rematerialized through HBM each chunk.
+
+VMEM working set per step (full-size config Q=256, P=64, N=128, f32):
+x (Q,P) + B,C (Q,N) + decay tables (Q,Q) + h (P,N) ≈ 0.6 MiB — comfortable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,    # (1, q, 1, p)
+    dt_ref,   # (1, q, 1)
+    a_ref,    # (1, 1)  — this head's A (negative)
+    b_ref,    # (1, q, n)
+    c_ref,    # (1, q, n)
+    y_ref,    # (1, q, 1, p)
+    hout_ref, # (1, 1, p, n) final state (written on last chunk)
+    h_scr,    # (p, n) VMEM carried state
+    *,
+    nchunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (q, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (q,)
+    a = a_ref[0, 0].astype(jnp.float32)             # scalar
+    bm = b_ref[0].astype(jnp.float32)               # (q, n)
+    cm = c_ref[0].astype(jnp.float32)               # (q, n)
+    q = x.shape[0]
+
+    da = dt * a                                     # (q,) log-decay
+    seg = jnp.cumsum(da)                            # inclusive
+
+    # ---- intra-chunk quadratic form -----------------------------------
+    li = seg[:, None]
+    lj = seg[None, :]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    )
+    gam = jnp.exp(jnp.where(mask, li - lj, -jnp.inf))          # (q, q)
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                           # (q, q) MXU
+    w = cb * gam * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                           # (q, p) MXU
+
+    # ---- inter-chunk contribution from carried state -------------------
+    into = jnp.exp(seg)                                         # (q,)
+    ch = jax.lax.dot_general(
+        cm, h_scr[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                           # (q, p) MXU
+    y = y_intra + ch * into[:, None]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # ---- state update ----------------------------------------------------
+    tail = jnp.exp(seg[-1] - seg) * dt                          # (q,)
+    st = jax.lax.dot_general(
+        x * tail[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                           # (p, n) MXU
+    h_scr[...] = h_scr[...] * jnp.exp(seg[-1]) + st
+
+    @pl.when(ic == nchunks - 1)
+    def _flush():
+        hout_ref[0, 0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,   # (B, L, NH, P)
+    dt: jax.Array,  # (B, L, NH)
+    a: jax.Array,   # (NH,) negative
+    bm: jax.Array,  # (B, L, N)
+    cm: jax.Array,  # (B, L, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD; returns (y (B,L,NH,P), final state (B,NH,P,N))."""
+    b, l, nh, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+    a2 = a.reshape(nh, 1)
+
+    y, hf = pl.pallas_call(
+        functools.partial(_ssd_kernel, nchunks=nc),
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, q, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, q, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, q, n), lambda b_, h_, c_: (b_, c_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, nh, p), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, bm, cm)
+    return y, hf

@@ -1,0 +1,73 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run CLI (deliverable e).
+
+Lowers + compiles every (architecture × input-shape) cell on the single-pod
+(16×16) and multi-pod (2×16×16) production meshes, printing
+``memory_analysis`` / ``cost_analysis`` per cell and writing the full matrix
+to results/dryrun/<mesh>.json.
+
+The two lines above run before ANY other import — jax locks the device
+count at first init, and the dry-run needs 512 host-platform placeholder
+devices to build the production meshes.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                  # full 2×40 matrix
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi_pod
+"""
+
+import argparse
+
+
+def main() -> None:
+    # heavy imports AFTER the XLA_FLAGS line
+    from repro.configs import ARCH_IDS, SHAPES
+    from repro.launch.dryrun_lib import run_matrix, run_probe_matrix
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", action="append", choices=list(SHAPES), default=None)
+    ap.add_argument(
+        "--mesh",
+        choices=["single_pod", "multi_pod", "both"],
+        default="both",
+    )
+    ap.add_argument(
+        "--probe",
+        action="store_true",
+        help="roofline probes: two unrolled-depth compiles per cell, "
+        "extrapolated to full depth (writes <out>/probe_<mesh>.json)",
+    )
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    arches = args.arch or list(ARCH_IDS)
+    shapes = args.shape or list(SHAPES)
+    meshes = []
+    if args.mesh in ("single_pod", "both"):
+        meshes.append(("single_pod", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi_pod", "both"):
+        meshes.append(("multi_pod", make_production_mesh(multi_pod=True)))
+
+    for label, mesh in meshes:
+        if args.probe:
+            results = run_probe_matrix(
+                arches, shapes, [(label, mesh)],
+                out_path=f"{args.out}/probe_{label}.json",
+            )
+        else:
+            results = run_matrix(
+                arches, shapes, [(label, mesh)], out_path=f"{args.out}/{label}.json"
+            )
+        ok = sum(r["status"] == "OK" for r in results)
+        skip = sum(r["status"] == "SKIP" for r in results)
+        fail = sum(r["status"] == "FAIL" for r in results)
+        print(f"== {label}: {ok} OK / {skip} SKIP / {fail} FAIL ==", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,525 @@
+"""Dry-run library: lower + compile every (arch × shape × mesh) cell.
+
+Pure library — does NOT touch XLA_FLAGS / device state.  The CLI wrapper
+``repro.launch.dryrun`` sets the 512-device host platform before importing
+anything; tests use a small mesh via ``make_test_mesh``.
+
+Per cell this produces:
+  * compiled artifact for the *scanned* full config → ``memory_analysis``
+    (the per-device fits proof) + the collective schedule of one layer
+    (loop body) — and compile/lower wall times;
+  * optional roofline probes (two small *unrolled* depths) → linear-fit
+    extrapolation of FLOPs / bytes / collective bytes to the real depth
+    (``cost_analysis`` counts a scan body once — DESIGN.md §6).
+
+Step functions lowered per shape kind:
+  train   — SplIter-fused accumulation over microbatch blocks + AdamW update
+  prefill — prompt forward into the decode cache
+  decode  — one token against a seq_len-long cache (serve_step)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed.sharding import (
+    cache_shardings,
+    decode_rules,
+    decode_rules_headsharded,
+    long_decode_rules,
+    params_shardings,
+    train_rules,
+    train_rules_sp,
+    use_rules,
+)
+from repro.models import build_model
+from repro.optim import accumulate_gradients, adamw_init, adamw_update
+from repro.analysis.hlo import parse_collectives
+
+# Shape-cell applicability (DESIGN.md §Arch-applicability):
+# long_500k only for sub-quadratic archs; reason recorded in the result.
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeCell) -> str | None:
+    if shape.name == "long_500k" and not cfg.is_seq_subquadratic:
+        return (
+            "pure full-attention stack: 524k-token decode needs sub-quadratic "
+            "attention/state (run for ssm/hybrid/SWA archs only)"
+        )
+    return None
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def _bf16_like(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, jnp.bfloat16 if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype
+        ),
+        tree,
+    )
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda l: NamedSharding(mesh, P(*((None,) * l.ndim))), tree)
+
+
+# ---------------------------------------------------------------------------
+# per-kind lowering
+# ---------------------------------------------------------------------------
+
+
+def _lower_train(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: ShapeCell,
+    num_blocks: int = 4,
+    accum_mode: str = "spliter",
+    sp: bool = False,
+    hoist: bool = False,
+):
+    model = build_model(cfg)
+    dp = _dp_axes(mesh)
+
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    opt = jax.eval_shape(adamw_init, params)
+    specs = model.input_specs(shape)
+    mb = shape.global_batch // num_blocks
+    blocks = {
+        k: jax.ShapeDtypeStruct((num_blocks, mb) + v.shape[1:], v.dtype)
+        for k, v in specs.items()
+    }
+
+    constraint = (
+        (lambda t: jax.lax.with_sharding_constraint(
+            t, params_shardings(t, mesh, fsdp_axis=None)))
+        if hoist
+        else None
+    )
+
+    def train_step(params, opt, blocks):
+        loss, grads = accumulate_gradients(
+            model.loss, params, blocks, mode=accum_mode,
+            hoist=hoist, hoist_constraint=constraint,
+        )
+        new_params, new_opt = adamw_update(params, grads, opt, lr=1e-4)
+        return new_params, new_opt, loss
+
+    p_sh = params_shardings(params, mesh, fsdp_axis="data")
+    o_sh = dataclasses.replace(
+        params_shardings(opt, mesh, fsdp_axis="data"),
+        step=NamedSharding(mesh, P()),
+    )
+    b_sh = {
+        k: NamedSharding(mesh, P(None, dp) + (None,) * (v.ndim - 2))
+        for k, v in blocks.items()
+    }
+    rules = train_rules_sp(mesh) if sp else train_rules(mesh)
+    with use_rules(rules):
+        lowered = jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        ).lower(params, opt, blocks)
+    return lowered
+
+
+def _serving_fsdp(cfg: ModelConfig) -> Any:
+    """Serving keeps bf16 weights TP-only when they fit; else ZeRO over data."""
+    bf16_bytes = cfg.param_counts()["total"] * 2
+    return "data" if bf16_bytes / 16 > 12e9 else None
+
+
+def _lower_prefill(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell):
+    model = build_model(cfg)
+    dp = _dp_axes(mesh)
+    params = _bf16_like(jax.eval_shape(model.init, jax.random.key(0)))
+    specs = model.input_specs(shape)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, jnp.bfloat16)
+    )
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    p_sh = params_shardings(params, mesh, fsdp_axis=_serving_fsdp(cfg))
+    b_sh = {
+        k: NamedSharding(mesh, P(dp) + (None,) * (v.ndim - 1))
+        for k, v in specs.items()
+    }
+    c_sh = cache_shardings(cache, mesh)
+    with use_rules(decode_rules(mesh)):
+        lowered = jax.jit(
+            prefill_step,
+            in_shardings=(p_sh, b_sh, c_sh),
+            out_shardings=(NamedSharding(mesh, P(dp, "model")), c_sh),
+            donate_argnums=(2,),
+        ).lower(params, specs, cache)
+    return lowered
+
+
+def _lower_decode(
+    cfg: ModelConfig, mesh: Mesh, shape: ShapeCell, cache_impl: str = "masked"
+):
+    model = build_model(cfg)
+    long_ctx = shape.global_batch == 1
+    dp = _dp_axes(mesh)
+    params = _bf16_like(jax.eval_shape(model.init, jax.random.key(0)))
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, jnp.bfloat16)
+    )
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    p_sh = params_shardings(params, mesh, fsdp_axis=_serving_fsdp(cfg))
+    c_sh = cache_shardings(
+        cache, mesh, long_context=long_ctx,
+        layout="heads" if "heads_dus" in cache_impl else "seq",
+    )
+    batch_ax = None if long_ctx else dp
+    t_sh = NamedSharding(mesh, P(batch_ax, None))
+    if long_ctx:
+        rules = long_decode_rules(mesh)
+    elif "heads_dus" in cache_impl:
+        rules = decode_rules_headsharded(mesh)
+    else:
+        rules = decode_rules(mesh)
+    rules = dataclasses.replace(rules, cache_impl=cache_impl)
+    with use_rules(rules):
+        lowered = jax.jit(
+            decode_step,
+            in_shardings=(p_sh, c_sh, t_sh, NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(mesh, P(batch_ax, "model")), c_sh),
+            donate_argnums=(1,),
+        ).lower(params, cache, token, pos)
+    return lowered
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: ShapeCell,
+    *,
+    num_blocks: int = 4,
+    sp: bool = False,
+    cache_impl: str = "masked",
+    hoist: bool = False,
+):
+    if shape.kind == "train":
+        return _lower_train(
+            cfg, mesh, shape, num_blocks=num_blocks, sp=sp, hoist=hoist
+        )
+    if shape.kind == "prefill":
+        return _lower_prefill(cfg, mesh, shape)
+    return _lower_decode(cfg, mesh, shape, cache_impl=cache_impl)
+
+
+# ---------------------------------------------------------------------------
+# analysis capture
+# ---------------------------------------------------------------------------
+
+
+def analyze_compiled(lowered, compiled) -> dict[str, Any]:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_live_bytes": int(
+                ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes
+            ),
+        },
+        "cost": {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+        },
+        "collectives": coll.as_dict(),
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    mesh_label: str,
+    overrides: dict[str, Any] | None = None,
+    num_blocks: int = 4,
+    sp: bool = False,
+    cache_impl: str = "masked",
+    hoist: bool = False,
+) -> dict[str, Any]:
+    """Lower + compile + analyze one cell.  Returns a JSON-able record."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_label,
+        "devices": int(np.prod([mesh.shape[a] for a in mesh.axis_names])),
+    }
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "SKIP"
+        rec["reason"] = skip
+        return rec
+    t0 = time.perf_counter()
+    lowered = lower_cell(
+        cfg, mesh, shape, num_blocks=num_blocks, sp=sp, cache_impl=cache_impl,
+        hoist=hoist,
+    )
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    rec.update(
+        status="OK",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        **analyze_compiled(lowered, compiled),
+    )
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# roofline probes: unrolled-depth compiles → linear extrapolation
+# ---------------------------------------------------------------------------
+#
+# ``cost_analysis()`` counts a ``while`` (scan) body once, so the scanned
+# full-size artifact under-reports FLOPs/bytes by ~the trip count.  The probe
+# compiles the SAME cell at two small depths with ``unroll_layers=True`` (no
+# scan anywhere: the grad-accum scan is replaced by one materialized block)
+# and fits cost(k) = a + b·k, extrapolating to the real depth R.  Every
+# config has exactly one depth-scaled segment (asserted), so the fit is exact
+# for homogeneous stacks and period-exact for heterogeneous ones.
+
+
+def probe_config(cfg: ModelConfig, k: int) -> tuple[ModelConfig, int]:
+    """Clamp the repeated-segment depth to ``k`` periods; return (cfg_k, R).
+
+    R is the full-config repeat count of the scaled segment(s) — the
+    extrapolation target.  Encoder segments (whisper) scale together with
+    the decoder (their full repeats are equal; asserted).
+    """
+    f = cfg.family
+    if f == "hybrid":
+        n, R = cfg.attn_period * k, cfg.num_layers // cfg.attn_period
+        cfg_k = dataclasses.replace(cfg, num_layers=n)
+    elif f == "vlm":
+        n, R = cfg.cross_attn_period * k, cfg.num_layers // cfg.cross_attn_period
+        cfg_k = dataclasses.replace(cfg, num_layers=n)
+    elif f == "audio":
+        assert cfg.encoder_layers == cfg.num_layers, (
+            "audio probe assumes enc/dec repeats are equal"
+        )
+        R = cfg.num_layers
+        cfg_k = dataclasses.replace(cfg, num_layers=k, encoder_layers=k)
+    elif cfg.moe_first_dense:
+        R = cfg.num_layers - cfg.moe_first_dense
+        cfg_k = dataclasses.replace(cfg, num_layers=cfg.moe_first_dense + k)
+    else:
+        R = cfg.num_layers
+        cfg_k = dataclasses.replace(cfg, num_layers=k)
+    cfg_k = dataclasses.replace(cfg_k, unroll_layers=True)
+    # exactly one depth-scaled segment family (the fit slope is per-k of it)
+    return cfg_k, R
+
+
+def _probe_metrics(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: ShapeCell,
+    *,
+    sp: bool = False,
+    cache_impl: str = "masked",
+    hoist: bool = False,
+    probe_blocks: int = 1,
+) -> dict[str, float]:
+    if shape.kind == "train":
+        lowered = _lower_train(
+            cfg, mesh, shape,
+            num_blocks=probe_blocks,
+            accum_mode="materialized" if probe_blocks == 1 else "spliter_unrolled",
+            sp=sp,
+            hoist=hoist,
+        )
+    elif shape.kind == "prefill":
+        lowered = _lower_prefill(cfg, mesh, shape)
+    else:
+        lowered = _lower_decode(cfg, mesh, shape, cache_impl=cache_impl)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": float(coll.total_operand_bytes),
+        "collective_by_kind": {k: float(v) for k, v in coll.operand_bytes.items()},
+    }
+
+
+def probe_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    mesh_label: str,
+    depths: tuple[int, int] = (1, 2),
+    overrides: dict[str, Any] | None = None,
+    sp: bool = False,
+    cache_impl: str = "masked",
+    hoist: bool = False,
+    probe_blocks: int = 1,
+) -> dict[str, Any]:
+    """Two unrolled-depth compiles → per-chip cost extrapolated to full depth."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_label,
+        "devices": int(np.prod([mesh.shape[a] for a in mesh.axis_names])),
+    }
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "SKIP"
+        rec["reason"] = skip
+        return rec
+    k1, k2 = depths
+    t0 = time.perf_counter()
+    cfg1, R = probe_config(cfg, k1)
+    cfg2, _ = probe_config(cfg, k2)
+    kw = dict(sp=sp, cache_impl=cache_impl, hoist=hoist, probe_blocks=probe_blocks)
+    m1 = _probe_metrics(cfg1, mesh, shape, **kw)
+    m2 = _probe_metrics(cfg2, mesh, shape, **kw)
+
+    def fit(v1: float, v2: float) -> float:
+        slope = max((v2 - v1) / (k2 - k1), 0.0)
+        return v1 + slope * (R - k1)
+
+    kinds = set(m1["collective_by_kind"]) | set(m2["collective_by_kind"])
+    rec.update(
+        status="OK",
+        depths={str(k1): m1, str(k2): m2},
+        repeats=R,
+        probe_s=round(time.perf_counter() - t0, 2),
+        extrapolated={
+            "flops": fit(m1["flops"], m2["flops"]),
+            "bytes_accessed": fit(m1["bytes_accessed"], m2["bytes_accessed"]),
+            "collective_bytes": fit(m1["collective_bytes"], m2["collective_bytes"]),
+            "collective_by_kind": {
+                k: fit(m1["collective_by_kind"].get(k, 0.0),
+                       m2["collective_by_kind"].get(k, 0.0))
+                for k in sorted(kinds)
+            },
+        },
+    )
+    return rec
+
+
+def run_probe_matrix(
+    arches: list[str],
+    shapes: list[str],
+    meshes: list[tuple[str, Mesh]],
+    out_path: str | None = None,
+    *,
+    verbose: bool = True,
+) -> list[dict[str, Any]]:
+    results = []
+    for mesh_label, mesh in meshes:
+        for arch in arches:
+            for shape_name in shapes:
+                try:
+                    rec = probe_cell(arch, shape_name, mesh, mesh_label=mesh_label)
+                except Exception as e:
+                    rec = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": mesh_label,
+                        "status": "FAIL",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                results.append(rec)
+                if verbose:
+                    s = rec["status"]
+                    extra = ""
+                    if s == "OK":
+                        ex = rec["extrapolated"]
+                        extra = (f" flops={ex['flops']:.3g}"
+                                 f" bytes={ex['bytes_accessed']:.3g}"
+                                 f" coll={ex['collective_bytes']:.3g}"
+                                 f" ({rec['probe_s']}s)")
+                    elif s == "FAIL":
+                        extra = " " + rec["error"][:140]
+                    print(f"[probe:{mesh_label}] {arch:22s} {shape_name:12s} {s}{extra}",
+                          flush=True)
+                if out_path:
+                    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+                    with open(out_path, "w") as f:
+                        json.dump(results, f, indent=1)
+    return results
+
+
+def run_matrix(
+    arches: list[str],
+    shapes: list[str],
+    meshes: list[tuple[str, Mesh]],
+    out_path: str | None = None,
+    *,
+    verbose: bool = True,
+) -> list[dict[str, Any]]:
+    results = []
+    for mesh_label, mesh in meshes:
+        for arch in arches:
+            for shape_name in shapes:
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_label=mesh_label)
+                except Exception as e:  # a failed cell is a bug — record it
+                    rec = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": mesh_label,
+                        "status": "FAIL",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                results.append(rec)
+                if verbose:
+                    s = rec["status"]
+                    extra = ""
+                    if s == "OK":
+                        gb = rec["memory"]["peak_live_bytes"] / 1e9
+                        extra = f" peak={gb:.2f}GB/dev lower={rec['lower_s']}s compile={rec['compile_s']}s"
+                    elif s == "FAIL":
+                        extra = " " + rec["error"][:120]
+                    print(f"[{mesh_label}] {arch:22s} {shape_name:12s} {s}{extra}", flush=True)
+                if out_path:
+                    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+                    with open(out_path, "w") as f:
+                        json.dump(results, f, indent=1)
+    return results

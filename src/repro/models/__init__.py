@@ -1,0 +1,5 @@
+"""Model zoo: pure-function models (pytree params) assembled from LayerSpecs."""
+
+from repro.models.lm import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,441 @@
+"""Model assembly: LayerSpec segments → init / loss / prefill / decode_step.
+
+One assembly path serves all ten architectures.  Each config's
+``segments()`` yields repeated periods; repeated periods are executed with
+``lax.scan`` over stacked parameters so the full-size HLO stays small and
+`cost_analysis` probes stay linear in depth (DESIGN.md §6).
+
+Entry points (all pure functions of explicit params):
+
+* ``model.init(key)``                 → params pytree (works under eval_shape)
+* ``model.loss(params, batch)``       → scalar CE loss (training forward)
+* ``model.prefill(params, batch, cache)`` → (last_logits, cache)
+* ``model.decode_step(params, cache, token, pos)`` → (logits, cache)
+* ``model.init_cache(batch, max_len)``→ cache pytree (decode state)
+* ``model.input_specs(shape)``        → ShapeDtypeStructs for the dry-run
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig, Segment, ShapeCell
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.mla import init_mla, mla_attention
+from repro.models.moe import init_moe, moe_mlp
+from repro.models.ssm import init_mamba, mamba_block
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, spec: LayerSpec, cfg: ModelConfig) -> Params:
+    km, kf, _ = jax.random.split(key, 3)
+    p: Params = {}
+    norm = L.init_norm(cfg)
+    p["ln1"] = norm["w"]
+    if "b" in norm:
+        p["ln1_b"] = norm["b"]
+    if spec.mixer == "attn" or spec.mixer == "enc_attn":
+        p["mixer"] = L.init_attention(km, cfg)
+    elif spec.mixer == "cross_attn":
+        p["mixer"] = L.init_attention(km, cfg, cross=True)
+    elif spec.mixer == "mla":
+        p["mixer"] = init_mla(km, cfg)
+    elif spec.mixer == "mamba2":
+        p["mixer"] = init_mamba(km, cfg)
+    else:  # pragma: no cover
+        raise ValueError(spec.mixer)
+    if spec.mlp != "none" and not cfg.parallel_block:
+        p["ln2"] = L.init_norm(cfg)["w"]
+        if cfg.norm == "layernorm":
+            p["ln2_b"] = L.init_norm(cfg)["b"]
+    if spec.mlp == "dense":
+        ff = cfg.dense_d_ff or cfg.d_ff
+        p["mlp"] = L.init_mlp(kf, cfg, ff)
+    elif spec.mlp == "moe":
+        p["mlp"] = init_moe(kf, cfg)
+    return p
+
+
+def _apply_layer(
+    p: Params,
+    spec: LayerSpec,
+    cfg: ModelConfig,
+    x: jax.Array,
+    ctx: dict[str, Any],
+    cache: Params | None,
+) -> tuple[jax.Array, Params | None]:
+    """Pre-norm residual block; command-r runs attn ∥ mlp off one norm."""
+    h = L.apply_norm(x, p, "ln1", cfg)
+    new_cache = None
+    if spec.mixer in ("attn", "enc_attn"):
+        mix, new_cache = L.attention(
+            p["mixer"],
+            cfg,
+            h,
+            positions=ctx["positions"],
+            causal=spec.mixer == "attn",
+            cache=cache,
+            cache_pos=ctx.get("cache_pos"),
+        )
+    elif spec.mixer == "cross_attn":
+        mix, new_cache = L.attention(
+            p["mixer"],
+            cfg,
+            h,
+            positions=ctx["positions"],
+            cache=cache,
+            memory=ctx.get("memory"),
+        )
+    elif spec.mixer == "mla":
+        mix, new_cache = mla_attention(
+            p["mixer"],
+            cfg,
+            h,
+            positions=ctx["positions"],
+            cache=cache,
+            cache_pos=ctx.get("cache_pos"),
+        )
+    elif spec.mixer == "mamba2":
+        mix, new_cache = mamba_block(p["mixer"], cfg, h, cache=cache)
+    else:  # pragma: no cover
+        raise ValueError(spec.mixer)
+
+    if cfg.parallel_block and spec.mlp != "none":
+        # command-r: x + attn(norm(x)) + mlp(norm(x))
+        ff = L.mlp(p["mlp"], h) if spec.mlp == "dense" else moe_mlp(p["mlp"], cfg, h)
+        x = x + mix + ff
+        return shard(x, "batch", "seq_res", "embed"), new_cache
+
+    x = x + mix
+    if spec.mlp != "none":
+        h2 = L.apply_norm(x, p, "ln2", cfg)
+        ff = L.mlp(p["mlp"], h2) if spec.mlp == "dense" else moe_mlp(p["mlp"], cfg, h2)
+        x = x + ff
+    return shard(x, "batch", "seq_res", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# per-layer cache construction
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(
+    spec: LayerSpec, cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> Params | None:
+    if spec.mixer in ("attn", "enc_attn"):
+        dh = cfg.resolved_head_dim
+        s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        shp = (batch, s, cfg.num_kv_heads, dh)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if spec.mixer == "cross_attn":
+        dh = cfg.resolved_head_dim
+        m = cfg.encoder_seq if cfg.family == "audio" else cfg.image_tokens
+        shp = (batch, m, cfg.num_kv_heads, dh)
+        return {"k_mem": jnp.zeros(shp, dtype), "v_mem": jnp.zeros(shp, dtype)}
+    if spec.mixer == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        }
+    if spec.mixer == "mamba2":
+        din = cfg.ssm_expand * cfg.d_model
+        nh = din // cfg.ssm_head_dim
+        conv_c = din + 2 * cfg.ssm_state
+        return {
+            "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_c), dtype),
+            # SSM state accumulates across the whole context: keep fp32
+            "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        }
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init ----------------
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Params = {
+            "embed": jax.random.normal(
+                keys[0], (cfg.padded_vocab, cfg.d_model), jnp.float32
+            )
+            / np.sqrt(cfg.d_model)
+        }
+        for si, seg in enumerate(cfg.segments()):
+            params[f"seg{si}"] = self._init_segment(keys[1 + si], seg)
+        if cfg.encoder_layers:
+            params["enc_seg0"] = self._init_segment(
+                keys[5], cfg.encoder_segments()[0], enc=True
+            )
+            params["enc_final_norm"] = L.init_norm(cfg)["w"]
+            if cfg.norm == "layernorm":
+                params["enc_final_norm_b"] = L.init_norm(cfg)["b"]
+        params["final_norm"] = L.init_norm(cfg)["w"]
+        if cfg.norm == "layernorm":
+            params["final_norm_b"] = L.init_norm(cfg)["b"]
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jax.random.normal(
+                keys[6], (cfg.d_model, cfg.padded_vocab), jnp.float32
+            ) / np.sqrt(cfg.d_model)
+        return params
+
+    def _init_segment(self, key: jax.Array, seg: Segment, enc: bool = False) -> Any:
+        def init_period(k):
+            ks = jax.random.split(k, len(seg.period))
+            return tuple(
+                _init_layer(ks[i], spec, self.cfg)
+                for i, spec in enumerate(seg.period)
+            )
+
+        if seg.repeats == 1:
+            return init_period(key)
+        keys = jax.random.split(key, seg.repeats)
+        return jax.vmap(init_period)(keys)  # leaves: (repeats, ...)
+
+    # ---------------- trunk executors ----------------
+
+    def _run_segment(
+        self,
+        seg_params: Any,
+        seg: Segment,
+        x: jax.Array,
+        ctx: dict[str, Any],
+        caches: Any | None,
+        *,
+        remat: bool,
+    ) -> tuple[jax.Array, Any | None]:
+        cfg = self.cfg
+
+        def period_body(x, period_params, period_caches):
+            new_caches = []
+            for i, spec in enumerate(seg.period):
+                c = None if period_caches is None else period_caches[i]
+                x, nc = _apply_layer(period_params[i], spec, cfg, x, ctx, c)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        if remat and cfg.remat != "none":
+            policy = (
+                jax.checkpoint_policies.nothing_saveable
+                if cfg.remat == "full"
+                else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+            period_body = jax.checkpoint(
+                period_body, policy=policy, static_argnums=()
+            )
+
+        if seg.repeats == 1:
+            return period_body(x, seg_params, caches)
+
+        if caches is None:
+
+            def scan_no_cache(x, pp):
+                y, _ = period_body(x, pp, None)
+                return y, None
+
+            x, _ = jax.lax.scan(scan_no_cache, x, seg_params)
+            return x, None
+
+        def scan_with_cache(x, pc):
+            pp, cc = pc
+            y, nc = period_body(x, pp, cc)
+            return y, nc
+
+        x, new_caches = jax.lax.scan(scan_with_cache, x, (seg_params, caches))
+        return x, new_caches
+
+    def _encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """Whisper encoder over stubbed frame embeddings (B, M, D)."""
+        cfg = self.cfg
+        b, m, _ = frames.shape
+        ctx = {"positions": jnp.broadcast_to(jnp.arange(m), (b, m))}
+        seg = cfg.encoder_segments()[0]
+        x, _ = self._run_segment(
+            params["enc_seg0"], seg, frames.astype(cfg.dtype), ctx, None, remat=False
+        )
+        if cfg.norm == "layernorm":
+            return L.layer_norm(x, params["enc_final_norm"], params["enc_final_norm_b"])
+        return L.rms_norm(x, params["enc_final_norm"])
+
+    def _trunk(
+        self,
+        params: Params,
+        x: jax.Array,
+        ctx: dict[str, Any],
+        caches: Any | None,
+        *,
+        remat: bool,
+    ) -> tuple[jax.Array, Any | None]:
+        new_caches = {}
+        for si, seg in enumerate(self.cfg.segments()):
+            c = None if caches is None else caches[f"seg{si}"]
+            x, nc = self._run_segment(
+                params[f"seg{si}"], seg, x, ctx, c, remat=remat
+            )
+            if caches is not None:
+                new_caches[f"seg{si}"] = nc
+        return x, (new_caches if caches is not None else None)
+
+    def _logits(self, params: Params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.norm == "layernorm":
+            x = L.layer_norm(x, params["final_norm"], params["final_norm_b"])
+        else:
+            x = L.rms_norm(x, params["final_norm"])
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ).astype(x.dtype)
+        logits = x @ head
+        logits = shard(logits, "batch", "seq", "vocab")
+        # mask Megatron-style vocab padding
+        if cfg.padded_vocab != cfg.vocab_size:
+            valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(valid, logits, -1e30)
+        return logits
+
+    def _memory(self, params: Params, batch: dict[str, jax.Array]) -> jax.Array | None:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return self._encode(params, batch["frames"])
+        if cfg.family == "vlm":
+            return batch["image_embeds"].astype(cfg.dtype)
+        return None
+
+    # ---------------- entry points ----------------
+
+    def forward(self, params: Params, batch: dict[str, jax.Array], *, remat: bool):
+        """Training/scoring forward → logits (B, S, Vp)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x = shard(x, "batch", "seq_res", "embed")
+        ctx = {
+            "positions": jnp.broadcast_to(jnp.arange(s), (b, s)),
+            "memory": self._memory(params, batch),
+        }
+        x, _ = self._trunk(params, x, ctx, None, remat=remat)
+        return self._logits(params, x)
+
+    def loss(self, params: Params, batch: dict[str, jax.Array]) -> jax.Array:
+        """Mean next-token CE over ``labels >= 0`` positions."""
+        logits = self.forward(params, batch, remat=True)
+        labels = batch["labels"]
+        mask = labels >= 0
+        lab = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+    def init_cache(
+        self, batch: int, max_len: int, dtype=jnp.bfloat16
+    ) -> Params:
+        caches: Params = {}
+        for si, seg in enumerate(self.cfg.segments()):
+            def one_period():
+                return tuple(
+                    _init_layer_cache(spec, self.cfg, batch, max_len, dtype)
+                    for spec in seg.period
+                )
+
+            if seg.repeats == 1:
+                caches[f"seg{si}"] = one_period()
+            else:
+                caches[f"seg{si}"] = jax.tree.map(
+                    lambda l: jnp.broadcast_to(l, (seg.repeats,) + l.shape).copy()
+                    if l is not None
+                    else None,
+                    one_period(),
+                )
+        return caches
+
+    def prefill(
+        self, params: Params, batch: dict[str, jax.Array], cache: Params
+    ) -> tuple[jax.Array, Params]:
+        """Run the full prompt, fill the cache, return last-position logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        ctx = {
+            "positions": jnp.broadcast_to(jnp.arange(s), (b, s)),
+            "memory": self._memory(params, batch),
+            "cache_pos": jnp.asarray(0, jnp.int32),
+        }
+        x, new_cache = self._trunk(params, x, ctx, cache, remat=False)
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, new_cache
+
+    def decode_step(
+        self,
+        params: Params,
+        cache: Params,
+        token: jax.Array,  # (B, 1) int32
+        pos: jax.Array,    # scalar int32: #tokens already in cache
+        memory: jax.Array | None = None,
+    ) -> tuple[jax.Array, Params]:
+        cfg = self.cfg
+        b = token.shape[0]
+        x = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+        ctx = {
+            "positions": jnp.full((b, 1), pos, jnp.int32),
+            "cache_pos": pos,
+            "memory": memory,
+        }
+        x, new_cache = self._trunk(params, x, ctx, cache, remat=False)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    # ---------------- dry-run input specs ----------------
+
+    def input_specs(self, shape: ShapeCell) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+        Modality frontends are stubbed here per the assignment: whisper gets
+        precomputed frame embeddings, the VLM gets patch embeddings.
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        elif shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        else:  # decode: one new token against a cache of length s
+            specs = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.family == "audio" and shape.kind != "decode":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), f)
+        if cfg.family == "vlm" and shape.kind != "decode":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.image_tokens, cfg.image_embed_dim), f
+            )
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

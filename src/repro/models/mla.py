@@ -1,0 +1,153 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a rank-``kv_lora_rank`` latent c_kv plus a small
+decoupled-RoPE key shared across heads; per-head K/V are up-projected from
+the latent.  The decode cache stores ONLY (c_kv, k_rope) — the point of MLA
+— and the decode path uses the *absorbed* formulation (W^UK folded into q,
+W^UV folded into W^O) so per-step cost is O(S·(kv_lora+rope)) per head
+rather than O(S·Dh·H) of decompress-then-attend.
+
+Shapes:  q_nope (B,L,H,Dh), q_rope (B,L,H,Rh), c_kv (B,L,Kr), k_rope (B,L,Rh).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import Params, apply_rope, rms_norm, rope_cos_sin
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    h, kr, rh, qr = cfg.num_heads, cfg.kv_lora_rank, cfg.rope_head_dim, cfg.q_lora_rank
+    k = iter(jax.random.split(key, 8))
+    p: Params = {}
+    if qr:
+        p["wq_a"] = jax.random.normal(next(k), (d, qr), jnp.float32) / np.sqrt(d)
+        p["q_norm_a"] = jnp.zeros((qr,), jnp.float32)
+        p["wq_b"] = jax.random.normal(next(k), (qr, h, dh + rh), jnp.float32) / np.sqrt(qr)
+    else:
+        p["wq_b"] = jax.random.normal(next(k), (d, h, dh + rh), jnp.float32) / np.sqrt(d)
+    p["wkv_a"] = jax.random.normal(next(k), (d, kr + rh), jnp.float32) / np.sqrt(d)
+    p["kv_norm_a"] = jnp.zeros((kr,), jnp.float32)
+    p["wk_b"] = jax.random.normal(next(k), (kr, h, dh), jnp.float32) / np.sqrt(kr)
+    p["wv_b"] = jax.random.normal(next(k), (kr, h, dh), jnp.float32) / np.sqrt(kr)
+    p["wo"] = jax.random.normal(next(k), (h, dh, d), jnp.float32) / np.sqrt(h * dh)
+    return p
+
+
+def _project_q(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    dt = x.dtype
+    dh, rh = cfg.resolved_head_dim, cfg.rope_head_dim
+    if "wq_a" in p:
+        qa = x @ p["wq_a"].astype(dt)
+        qa = rms_norm(qa, p["q_norm_a"])
+        q = jnp.einsum("blr,rhk->blhk", qa, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bld,dhk->blhk", x, p["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    cos, sin = rope_cos_sin(positions, rh, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    dt = x.dtype
+    kr, rh = cfg.kv_lora_rank, cfg.rope_head_dim
+    kv = x @ p["wkv_a"].astype(dt)                        # (B, L, Kr+Rh)
+    c_kv = rms_norm(kv[..., :kr], p["kv_norm_a"])
+    k_rope = kv[..., kr:][:, :, None, :]                  # (B, L, 1, Rh)
+    cos, sin = rope_cos_sin(positions, rh, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]        # shared across heads
+    return c_kv, k_rope
+
+
+def mla_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: Params | None = None,   # {"ckv": (B,S,Kr), "krope": (B,S,Rh)}
+    cache_pos: jax.Array | None = None,
+) -> tuple[jax.Array, Params | None]:
+    dt = x.dtype
+    dh, kr = cfg.resolved_head_dim, cfg.kv_lora_rank
+    scale = 1.0 / np.sqrt(dh + cfg.rope_head_dim)
+
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+
+    if cache is not None and x.shape[1] == 1:
+        # ---------------- absorbed decode ----------------
+        from repro.models.layers import cache_write
+
+        c_new, kr_new = _project_kv_latent(p, cfg, x, positions)
+        ckv = cache_write(cache["ckv"], c_new, cache_pos)
+        krope = cache_write(cache["krope"], kr_new, cache_pos)
+        # absorb W^UK into q:  q_lat (B,1,H,Kr)
+        q_lat = jnp.einsum("blhk,rhk->blhr", q_nope, p["wk_b"].astype(dt))
+        # context-parallel decode: q replicates over model, ckv stays S-sharded
+        q_lat = shard(q_lat, "batch", "seq", "heads", "head_dim")
+        q_rope = shard(q_rope, "batch", "seq", "heads", "head_dim")
+        s_nope = jnp.einsum("blhr,bsr->bhls", q_lat, ckv.astype(dt))
+        s_rope = jnp.einsum("blhk,bsk->bhls", q_rope, krope.astype(dt))
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale
+        kpos = jnp.arange(ckv.shape[1])[None, None, None]
+        scores = jnp.where(kpos <= cache_pos, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        # attend in latent space, then absorb W^UV on the way out
+        o_lat = jnp.einsum("bhls,bsr->blhr", probs, ckv.astype(dt))
+        o = jnp.einsum("blhr,rhk->blhk", o_lat, p["wv_b"].astype(dt))
+        out = jnp.einsum("blhk,hkd->bld", o, p["wo"].astype(dt))
+        return out, {"ckv": ckv, "krope": krope}
+
+    # ---------------- train / prefill (decompressed) ----------------
+    c_kv, k_rope = _project_kv_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("blr,rhk->blhk", c_kv, p["wk_b"].astype(dt))
+    v = jnp.einsum("blr,rhk->blhk", c_kv, p["wv_b"].astype(dt))
+    k_nope = shard(k_nope, "batch", "seq", "heads", "head_dim")
+    v = shard(v, "batch", "seq", "heads", "head_dim")
+
+    b, l, h, _ = q_nope.shape
+
+    def q_chunk_attn(qn, qr, q_off):
+        """One query chunk vs. full K/V (keeps live scores O(c·L))."""
+        s_nope = jnp.einsum("blhk,bshk->bhls", qn, k_nope)
+        s_rope = jnp.einsum("blhk,bsk->bhls", qr, k_rope)
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale
+        qpos = jnp.arange(qn.shape[1])[:, None] + q_off
+        kpos = jnp.arange(l)[None, :]
+        scores = jnp.where((kpos <= qpos)[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        return jnp.einsum("bhls,bshk->blhk", probs, v)
+
+    chunk = 512
+    if l >= 2048 and l % chunk == 0:
+        nc = l // chunk
+        qn = jnp.moveaxis(q_nope.reshape(b, nc, chunk, h, -1), 1, 0)
+        qr = jnp.moveaxis(q_rope.reshape(b, nc, chunk, h, -1), 1, 0)
+
+        def body(_, inp):
+            qn_c, qr_c, ic = inp
+            return None, q_chunk_attn(qn_c, qr_c, ic * chunk)
+
+        _, outs = jax.lax.scan(body, None, (qn, qr, jnp.arange(nc)))
+        o = jnp.moveaxis(outs, 0, 1).reshape(b, l, h, -1)
+    else:
+        o = q_chunk_attn(q_nope, q_rope, 0)
+    out = jnp.einsum("blhk,hkd->bld", o, p["wo"].astype(dt))
+
+    new_cache = None
+    if cache is not None:  # prefill into the compressed cache
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, 0, 0)
+        )
+        krope = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0)
+        )
+        new_cache = {"ckv": ckv, "krope": krope}
+    return out, new_cache

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts MLP: top-k routing, shared experts, two dispatch paths.
+
+``moe_impl="onehot"`` (default, the production path)
+    GShard/GSPMD-style capacity-bucketed dispatch: tokens are reshaped into
+    fixed-size *groups*, each expert gets a ``capacity``-slot buffer per
+    group, and dispatch/combine are one-hot einsums.  Every tensor has a
+    static shape with a token/group dim (shards over DP) and an expert dim
+    (shards over the TP/"model" axis), so the SPMD partitioner distributes
+    it cleanly — this is what the multi-pod dry-run lowers.  Tokens beyond
+    an expert's capacity are dropped (standard at scale; the capacity
+    factor controls the slack).
+
+``moe_impl="ragged"``
+    Sort-based *dropless* dispatch (argsort tokens by expert, grouped
+    matmul via ``jax.lax.ragged_dot``, unsort).  Exact — the single-device
+    reference the onehot path is tested against (with a no-drop capacity) —
+    but the global argsort does not partition, so it is not used under a
+    mesh.
+
+**Virtual expert splitting** (mixtral): with 8 experts on a 16-way model
+axis the expert dim cannot shard.  Each expert is split into
+``moe_virtual_split`` half-width experts — exact, because the MLP is
+separable over the hidden dim: ``down(act(gate)·up)`` sums over F, so
+splitting F into n slices and summing their outputs reproduces the full
+expert bit-for-bit.  A token is dispatched to every slice of its chosen
+expert with the same gate weight.
+
+The dispatch itself is a SplIter-shaped problem (DESIGN.md §4): tokens are
+*blocks*, experts are *locations*, and the grouping into per-expert
+capacity buffers decouples task granularity (one grouped matmul per
+expert) from block granularity (single tokens) — the same idea the paper
+applies to datasets.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import Params, init_mlp, mlp
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, e = cfg.d_model, cfg.moe_experts
+    vs = cfg.moe_virtual_split
+    ev, fv = e * vs, cfg.moe_d_ff // vs
+    assert cfg.moe_d_ff % vs == 0, (cfg.moe_d_ff, vs)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p: Params = {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) / np.sqrt(d),
+        "experts_gate": jax.random.normal(k2, (ev, d, fv), jnp.float32) / np.sqrt(d),
+        "experts_up": jax.random.normal(k3, (ev, d, fv), jnp.float32) / np.sqrt(d),
+        "experts_down": jax.random.normal(k4, (ev, fv, d), jnp.float32)
+        / np.sqrt(cfg.moe_d_ff),
+    }
+    if cfg.moe_shared_experts:
+        # shared experts fused into one dense MLP of width s·F
+        p["shared"] = init_mlp(k5, cfg, cfg.moe_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def _route(p: Params, cfg: ModelConfig, xt: jax.Array):
+    """Router logits → renormalized top-k gates.  xt: (..., T, D)."""
+    dt = xt.dtype
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)
+    gates, expert_idx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.moe_top_k)
+    gates = gates / jnp.sum(gates, -1, keepdims=True)
+    return gates.astype(dt), expert_idx
+
+
+# ---------------------------------------------------------------------------
+# onehot path (GSPMD-partitionable; capacity-bucketed; virtual splitting)
+# ---------------------------------------------------------------------------
+
+
+def _moe_onehot(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    b, l, d = x.shape
+    e, k, vs = cfg.moe_experts, cfg.moe_top_k, cfg.moe_virtual_split
+    ev = e * vs
+    t = b * l
+    g = min(cfg.moe_group, t)
+    while t % g:  # groups must tile the token axis exactly
+        g //= 2
+    n = t // g
+    cap = max(int(math.ceil(g * k / e * cfg.moe_capacity_factor)), 1)
+    cap = min(cap, g)  # an expert can never hold more than the whole group
+
+    xg = x.reshape(n, g, d)
+    xg = shard(xg, "batch", None, "embed")
+    gates, idx = _route(p, cfg, xg)                       # (n,g,k) ×2
+
+    # -- virtual expansion: choice (i, j) = split j of real choice i --------
+    if vs > 1:
+        idx = (idx[..., None] * vs + jnp.arange(vs)).reshape(n, g, k * vs)
+        gates = jnp.repeat(gates, vs, axis=-1)            # same gate per slice
+        k = k * vs
+
+    # -- choice-priority positions within each expert's capacity buffer ----
+    m = jax.nn.one_hot(idx, ev, dtype=jnp.int32)          # (n,g,k,ev)
+    mt = m.transpose(0, 2, 1, 3).reshape(n, k * g, ev)    # choice-major
+    pos = jnp.cumsum(mt, axis=1) - mt                     # 0-based slots
+    pos = pos.reshape(n, k, g, ev).transpose(0, 2, 1, 3)  # (n,g,k,ev)
+    pos_of = jnp.sum(pos * m, axis=-1)                    # (n,g,k)
+    keep = (pos_of < cap).astype(dt)                      # capacity drop mask
+
+    oh_e = m.astype(dt)                                   # (n,g,k,ev)
+    oh_c = jax.nn.one_hot(pos_of, cap, dtype=dt)          # (n,g,k,cap)
+    disp = jnp.einsum("ngke,ngkc->ngec", oh_e, oh_c * keep[..., None])
+    comb = jnp.einsum("ngke,ngkc->ngec", oh_e, oh_c * (gates * keep)[..., None])
+    disp = shard(disp, "batch", None, "expert", None)
+    comb = shard(comb, "batch", None, "expert", None)
+
+    # -- expert compute (expert dim shards over "model") --------------------
+    xin = jnp.einsum("ngec,ngd->necd", disp, xg)          # (n,ev,cap,d)
+    xin = shard(xin, "batch", "expert", None, None)
+    h = jnp.einsum("necd,edf->necf", xin, p["experts_gate"].astype(dt))
+    u = jnp.einsum("necd,edf->necf", xin, p["experts_up"].astype(dt))
+    y = jnp.einsum("necf,efd->necd", jax.nn.silu(h) * u,
+                   p["experts_down"].astype(dt))
+    y = shard(y, "batch", "expert", None, None)
+
+    out = jnp.einsum("ngec,necd->ngd", comb, y)           # gate-weighted return
+    return out.reshape(b, l, d)
+
+
+# ---------------------------------------------------------------------------
+# ragged path (dropless single-device reference)
+# ---------------------------------------------------------------------------
+
+
+def _moe_ragged(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    assert cfg.moe_virtual_split == 1, (
+        "ragged dispatch is the vs=1 reference; use onehot for virtual splits"
+    )
+    dt = x.dtype
+    b, l, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    xt = x.reshape(b * l, d)
+    t = xt.shape[0]
+
+    gates, expert_idx = _route(p, cfg, xt)                # (T,k) ×2
+
+    # ---- sort-based dropless dispatch (MegaBlocks-style) -----------------
+    flat_expert = expert_idx.reshape(-1)                  # (T·k,)
+    order = jnp.argsort(flat_expert)                      # stable
+    token_of = order // k                                 # source token id
+    xs = jnp.take(xt, token_of, axis=0)                   # (T·k, D) grouped
+    group_sizes = jnp.bincount(flat_expert, length=e)
+
+    h = jax.lax.ragged_dot(xs, p["experts_gate"].astype(dt), group_sizes)
+    u = jax.lax.ragged_dot(xs, p["experts_up"].astype(dt), group_sizes)
+    h = jax.nn.silu(h) * u                                # (T·k, F)
+    y = jax.lax.ragged_dot(h, p["experts_down"].astype(dt), group_sizes)
+
+    # ---- unsort + gate-weighted combine -----------------------------------
+    gate_of = jnp.take(gates.reshape(-1), order)          # (T·k,)
+    y = y * gate_of[:, None]
+    out = jnp.zeros((t, d), dt).at[token_of].add(y)
+    return out.reshape(b, l, d)
+
+
+def moe_mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x (B, L, D) → (B, L, D).  Top-k routed experts + shared experts."""
+    if cfg.moe_impl == "onehot":
+        out = _moe_onehot(p, cfg, x)
+    elif cfg.moe_impl == "ragged":
+        out = _moe_ragged(p, cfg, x)
+    else:  # pragma: no cover
+        raise ValueError(cfg.moe_impl)
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], x)  # shared experts: dense path (B,L,D)
+
+    return shard(out, "batch", "seq_res", "embed")

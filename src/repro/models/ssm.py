@@ -1,0 +1,236 @@
+"""Mamba2 block — SSD (state-space duality) chunked form (arXiv:2405.21060).
+
+Recurrence (per head h, head_dim P, state N):
+    H_t = exp(dt_t·A_h) · H_{t-1} + dt_t · x_t ⊗ B_t          H ∈ (P, N)
+    y_t = H_t · C_t + D_h · x_t
+
+The chunked SSD algorithm splits the sequence into chunks of length Q:
+inside a chunk the contribution is an attention-like quadratic form
+(C_i·B_jᵀ masked by the decay segment-sum), across chunks a small state is
+passed through a scan — O(L·Q) instead of O(L²), MXU-friendly.  This file
+is the pure-jnp implementation used by the model; ``repro.kernels.ssd_scan``
+is the Pallas kernel version of the same algorithm and is verified against
+:func:`ssd_chunked` (which is itself verified against :func:`ssd_reference`,
+the naive sequential recurrence).
+
+Single B/C group (n_groups=1), as in the assigned configs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import Params, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# SSD core (both forms operate on per-head inputs)
+#   x  (B, L, NH, P)   dt (B, L, NH)   A (NH,)  negative
+#   Bm (B, L, N)       Cm (B, L, N)
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(x, dt, a, bm, cm):
+    """Naive sequential recurrence — the oracle."""
+
+    b, l, nh, p = x.shape
+    n = bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # (B,NH,P) (B,NH) (B,N) (B,N)
+        decay = jnp.exp(dtt * a)[..., None, None]  # (B,NH,1,1)
+        upd = (dtt[..., None, None] * xt[..., None]) * bt[:, None, None, :]
+        h = h * decay + upd                        # (B,NH,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, p, n), x.dtype)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(bm, 1, 0),
+        jnp.moveaxis(cm, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h              # (B,L,NH,P), final state
+
+
+def ssd_chunked(x, dt, a, bm, cm, *, chunk: int):
+    """Chunked SSD (the paper's Algorithm 1, jnp form).
+
+    Returns (y (B,L,NH,P), final_state (B,NH,P,N)).
+    Requires L % chunk == 0.
+    """
+    b, l, nh, p = x.shape
+    n = bm.shape[-1]
+    q = chunk
+    nc = l // q
+    assert l % q == 0, (l, q)
+
+    xc = x.reshape(b, nc, q, nh, p)
+    dtc = dt.reshape(b, nc, q, nh)
+    bc = bm.reshape(b, nc, q, n)
+    cc = cm.reshape(b, nc, q, n)
+
+    da = dtc * a                                   # (B,NC,Q,NH) log-decay
+    seg = jnp.cumsum(da, axis=2)                   # inclusive cumsum in-chunk
+
+    # ---- intra-chunk (quadratic attention-like form) ----------------------
+    # decay from j -> i (j<=i):  exp(seg_i - seg_j)
+    li = seg[:, :, :, None, :]                     # (B,NC,Q,1,NH)
+    lj = seg[:, :, None, :, :]                     # (B,NC,1,Q,NH)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask inside the exponent: exp(-inf) = 0 with a zero (not NaN) gradient
+    gam = jnp.exp(jnp.where(mask, li - lj, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)     # (B,NC,Q,Q)
+    w = cb[..., None] * gam                        # (B,NC,Q,Q,NH)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w, dtc, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    # state contributed by chunk c:  sum_j exp(seg_Q - seg_j)·dt_j·x_j ⊗ B_j
+    tail = jnp.exp(seg[:, :, -1:, :] - seg)        # (B,NC,Q,NH)
+    st = jnp.einsum("bcjh,bcjh,bcjhp,bcjn->bchpn", tail, dtc, xc, bc)
+
+    # ---- inter-chunk scan over chunk boundary states -----------------------
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))     # (B,NC,NH)
+
+    def carry_fn(h, inp):
+        st_c, dec_c = inp                          # (B,NH,P,N), (B,NH)
+        h_new = h * dec_c[..., None, None] + st_c
+        return h_new, h                            # emit state ENTERING chunk
+
+    h0 = jnp.zeros((b, nh, p, n), x.dtype)
+    hf, h_in = jax.lax.scan(
+        carry_fn,
+        h0,
+        (jnp.moveaxis(st, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                # (B,NC,NH,P,N)
+
+    # ---- inter-chunk contribution to outputs -------------------------------
+    into = jnp.exp(seg)                            # decay 0..i within chunk
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp", cc, into, h_in
+    )
+
+    y = (y_intra + y_inter).reshape(b, l, nh, p)
+    return y, hf
+
+
+def ssd_decode_step(h, x_t, dt_t, a, b_t, c_t):
+    """One-token recurrence for serving.  h (B,NH,P,N) → (y_t, h)."""
+    decay = jnp.exp(dt_t * a)[..., None, None]
+    h = h * decay + (dt_t[..., None, None] * x_t[..., None]) * b_t[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# the full Mamba2 block (proj → conv → SSD → gated norm → out proj)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    w = cfg.ssm_conv_width
+    k = iter(jax.random.split(key, 10))
+    sd = 1.0 / np.sqrt(d)
+    return {
+        "w_in_z": jax.random.normal(next(k), (d, din), jnp.float32) * sd,
+        "w_in_x": jax.random.normal(next(k), (d, din), jnp.float32) * sd,
+        "w_in_b": jax.random.normal(next(k), (d, n), jnp.float32) * sd,
+        "w_in_c": jax.random.normal(next(k), (d, n), jnp.float32) * sd,
+        "w_in_dt": jax.random.normal(next(k), (d, nh), jnp.float32) * sd,
+        "conv_x": jax.random.normal(next(k), (w, din), jnp.float32) / np.sqrt(w),
+        "conv_b": jax.random.normal(next(k), (w, n), jnp.float32) / np.sqrt(w),
+        "conv_c": jax.random.normal(next(k), (w, n), jnp.float32) / np.sqrt(w),
+        "A_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(A_log) = -1
+        "ssm_D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssm_norm": jnp.zeros((din,), jnp.float32),
+        "w_out": jax.random.normal(next(k), (din, d), jnp.float32) / np.sqrt(din),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv, width W.  x (B,L,C), w (W,C).
+
+    With ``state`` (B,W-1,C) the conv continues a stream (decode); returns
+    (out, new_state) where new_state holds the last W-1 inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, L+W-1, C)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    new_state = xp[:, -(width - 1) :, :]
+    return jax.nn.silu(out), new_state
+
+
+def mamba_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                         # (B, L, D)
+    *,
+    cache: Params | None = None,          # {"conv": (B,W-1,Cin), "h": (B,NH,P,N)}
+    use_chunked: bool = True,
+) -> tuple[jax.Array, Params | None]:
+    dt_ = x.dtype
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    ph = cfg.ssm_head_dim
+    nh = din // ph
+    n = cfg.ssm_state
+    b, l, _ = x.shape
+
+    z = x @ p["w_in_z"].astype(dt_)
+    xin = x @ p["w_in_x"].astype(dt_)
+    bm = x @ p["w_in_b"].astype(dt_)
+    cm = x @ p["w_in_c"].astype(dt_)
+    dt = x @ p["w_in_dt"].astype(dt_)
+    xin = shard(xin, "batch", "seq", "mlp")
+    z = shard(z, "batch", "seq", "mlp")
+
+    conv_in = jnp.concatenate([xin, bm, cm], axis=-1)
+    conv_w = jnp.concatenate(
+        [p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1
+    ).astype(dt_)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, conv_w, conv_state)
+    xin, bm, cm = jnp.split(conv_out, [din, din + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).astype(dt_)
+    a = (-jnp.exp(p["A_log"])).astype(dt_)            # (NH,)
+    xh = xin.reshape(b, l, nh, ph)
+
+    if cache is not None and l == 1:
+        y, h = ssd_decode_step(
+            cache["h"].astype(dt_), xh[:, 0], dt[:, 0], a, bm[:, 0], cm[:, 0]
+        )
+        y = y[:, None]                                # (B,1,NH,P)
+    else:
+        if use_chunked and l % cfg.ssm_chunk == 0 and l > cfg.ssm_chunk:
+            y, h = ssd_chunked(xh, dt, a, bm, cm, chunk=cfg.ssm_chunk)
+        else:
+            y, h = ssd_reference(xh, dt, a, bm, cm)
+
+    y = y + p["ssm_D"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(b, l, din)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = y @ p["w_out"].astype(dt_)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "h": h.astype(cache["h"].dtype)}
+    return out, new_cache

@@ -1,0 +1,14 @@
+"""Optimizer substrate: AdamW, LR schedules, SplIter-fused accumulation,
+gradient compression."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_accum import accumulate_gradients
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "accumulate_gradients",
+]

@@ -1,0 +1,76 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Pure-pytree implementation (no optax dependency): state = (step, m, v).
+Moments are fp32 regardless of param dtype; the update is computed in fp32
+and cast back.  Built to be sharded identically to the params (the state
+trees inherit the param PartitionSpecs — ZeRO-style sharded moments are a
+rules variant, see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array      # () int32
+    m: Any               # pytree like params, fp32
+    v: Any               # pytree like params, fp32
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> tuple[Any, AdamWState]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    # explicit flatten (param trees contain tuples — no is_leaf tricks)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    res = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([r[0] for r in res])
+    new_m = treedef.unflatten([r[1] for r in res])
+    new_v = treedef.unflatten([r[2] for r in res])
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

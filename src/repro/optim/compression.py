@@ -1,0 +1,82 @@
+"""Gradient compression for slow (cross-pod) links, with error feedback.
+
+Two codecs, both shape/dtype-preserving round trips:
+
+* :func:`int8_compress` / :func:`int8_decompress` — per-chunk symmetric
+  int8 quantization (chunk = trailing-dim rows, one fp32 scale per chunk):
+  4× over fp32, 2× over bf16.
+* :func:`topk_compress` / :func:`topk_decompress` — magnitude top-k
+  sparsification (values + int32 indices).
+
+:class:`ErrorFeedback` carries the quantization residual into the next
+step (Seide et al. / EF-SGD), which keeps SGD/Adam convergence unbiased —
+verified by the convergence test in tests/test_optim.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (..., d) → (q int8 (..., d), scale fp32 (..., 1))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_compress(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """flat top-k by magnitude → (values (k,), indices int32 (k,))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def topk_decompress(values: jax.Array, idx: jax.Array, shape, dtype=jnp.float32):
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), jnp.float32)
+    return flat.at[idx].set(values).reshape(shape).astype(dtype)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ErrorFeedback:
+    residual: Any  # pytree like grads, fp32
+
+    @classmethod
+    def init(cls, grads: Any) -> "ErrorFeedback":
+        return cls(jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def compress_with_feedback(
+    grads: Any, ef: ErrorFeedback
+) -> tuple[Any, ErrorFeedback]:
+    """int8-round-trip the gradients, carrying the residual forward.
+
+    Models the cross-pod hop: what a remote pod would receive is the
+    decompressed value; the local residual is replayed next step.
+    """
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        if g.ndim == 0:
+            return g, jnp.zeros_like(r)
+        q, s = int8_compress(target)
+        back = int8_decompress(q, s)
+        return back.astype(g.dtype), target - back
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    res = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([t[0] for t in res])
+    new_r = treedef.unflatten([t[1] for t in res])
+    return new_g, ErrorFeedback(new_r)

@@ -1,0 +1,5 @@
+"""Runtime: fault-tolerant training loop, batched serving, FT machinery."""
+
+from repro.runtime.trainer import Trainer, TrainConfig
+
+__all__ = ["Trainer", "TrainConfig"]

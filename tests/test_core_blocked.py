@@ -1,0 +1,141 @@
+"""Unit tests: BlockedArray geometry, placement, spliter partitions, rechunk."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BlockedArray,
+    Partition,
+    contiguous_placement,
+    rechunk,
+    round_robin_placement,
+    spliter,
+)
+
+
+def make(n=100, d=3, block_rows=16, locs=4, policy=round_robin_placement, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return x, BlockedArray.from_array(x, block_rows, num_locations=locs, policy=policy)
+
+
+class TestBlockedArray:
+    def test_geometry_ragged_tail(self):
+        x, ba = make(n=100, block_rows=16)
+        assert ba.num_blocks == 7
+        assert ba.block_rows == (16,) * 6 + (4,)
+        assert ba.num_rows == 100
+        assert not ba.uniform
+
+    def test_geometry_uniform(self):
+        x, ba = make(n=96, block_rows=16)
+        assert ba.uniform
+        assert ba.stacked().shape == (6, 16, 3)
+
+    def test_collect_roundtrip(self):
+        x, ba = make()
+        np.testing.assert_array_equal(np.asarray(ba.collect()), np.asarray(x))
+
+    def test_row_offsets(self):
+        _, ba = make(n=100, block_rows=16)
+        np.testing.assert_array_equal(ba.row_offsets(), [0, 16, 32, 48, 64, 80, 96])
+
+    def test_placement_policies(self):
+        rr = round_robin_placement(10, 4)
+        np.testing.assert_array_equal(rr, [0, 1, 2, 3, 0, 1, 2, 3, 0, 1])
+        cg = contiguous_placement(10, 4)
+        np.testing.assert_array_equal(cg, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3])
+
+    def test_blocks_at_is_who_has(self):
+        _, ba = make(n=96, block_rows=16, locs=3)
+        for loc in range(3):
+            for b in ba.blocks_at(loc):
+                assert ba.placements[b] == loc
+
+    def test_nbytes(self):
+        _, ba = make(n=96, d=3, block_rows=16)
+        assert ba.nbytes == 96 * 3 * 4
+
+
+class TestSpliter:
+    def test_locality_invariant(self):
+        _, ba = make(n=256, block_rows=8, locs=4)
+        for p in spliter(ba, partitions_per_location=3):
+            for b in p.block_ids:
+                assert ba.placements[b] == p.location
+
+    def test_disjoint_cover(self):
+        _, ba = make(n=256, block_rows=8, locs=4)
+        parts = spliter(ba, partitions_per_location=3)
+        seen = sorted(b for p in parts for b in p.block_ids)
+        assert seen == list(range(ba.num_blocks))
+
+    def test_zero_copy_references(self):
+        """Partitions hold references to the original buffers — no movement."""
+        _, ba = make(n=96, block_rows=16)
+        for p in spliter(ba):
+            for bid, blk in zip(p.block_ids, p.blocks):
+                assert blk is ba.blocks[bid]
+
+    def test_get_indexes_matches_paper_fig4(self):
+        # Fig. 4: a partition over blocks {1, 3} reports indexes [1, 3].
+        _, ba = make(n=64, block_rows=16, locs=2, policy=round_robin_placement)
+        parts = spliter(ba)
+        assert parts[0].get_indexes() == [0, 2]
+        assert parts[1].get_indexes() == [1, 3]
+
+    def test_get_item_indexes_global_rows(self):
+        x, ba = make(n=64, block_rows=16, locs=2, policy=round_robin_placement)
+        p = spliter(ba)[1]  # blocks 1, 3 -> rows 16..31 and 48..63
+        np.testing.assert_array_equal(
+            p.get_item_indexes(), list(range(16, 32)) + list(range(48, 64))
+        )
+        # materialize() must agree with gathering those global rows
+        np.testing.assert_array_equal(
+            np.asarray(p.materialize()), np.asarray(x)[p.get_item_indexes()]
+        )
+
+    def test_partitions_per_location_caps_at_local_blocks(self):
+        _, ba = make(n=32, block_rows=16, locs=2)
+        parts = spliter(ba, partitions_per_location=8)
+        assert len(parts) == 2  # only one block per location exists
+
+    def test_empty_locations_yield_no_partition(self):
+        _, ba = make(n=32, block_rows=16, locs=8)
+        parts = spliter(ba)
+        assert len(parts) == 2
+        assert all(len(p) == 1 for p in parts)
+
+
+class TestRechunk:
+    def test_content_preserved(self):
+        x, ba = make(n=100, block_rows=16)
+        nb, st = rechunk(ba, 7)
+        np.testing.assert_array_equal(np.asarray(nb.collect()), np.asarray(x))
+        assert st.blocks_after == 15
+
+    def test_noop_keeps_buffers(self):
+        _, ba = make(n=96, block_rows=16, locs=1)
+        nb, st = rechunk(ba, 16)
+        assert st.is_noop
+        for a, b in zip(ba.blocks, nb.blocks):
+            assert a is b
+
+    def test_round_robin_rechunk_moves_bytes(self):
+        """Dask-style scatter + consolidation must move inter-node bytes."""
+        _, ba = make(n=256, block_rows=8, locs=4, policy=round_robin_placement)
+        _, st = rechunk(ba, 64)
+        assert st.bytes_moved > 0
+        # 3/4 of the rows change location under round-robin -> contiguous.
+        assert st.bytes_moved == 192 * 3 * 4
+
+    def test_spliter_never_moves_vs_rechunk_moves(self):
+        """DESIGN.md claim C3, structural form."""
+        _, ba = make(n=256, block_rows=8, locs=4, policy=round_robin_placement)
+        parts = spliter(ba)
+        for p in parts:  # references only
+            for bid, blk in zip(p.block_ids, p.blocks):
+                assert blk is ba.blocks[bid]
+        _, st = rechunk(ba, 64)
+        assert st.bytes_moved > 0

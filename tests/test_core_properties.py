@@ -1,0 +1,123 @@
+"""Hypothesis property tests for the SplIter invariants (DESIGN.md §7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockedArray,
+    contiguous_placement,
+    rechunk,
+    round_robin_placement,
+    run_map_reduce,
+    spliter,
+)
+
+POLICIES = [round_robin_placement, contiguous_placement]
+
+
+@st.composite
+def blocked_arrays(draw, max_rows=200):
+    n = draw(st.integers(1, max_rows))
+    d = draw(st.integers(1, 4))
+    block_rows = draw(st.integers(1, max(1, n)))
+    locs = draw(st.integers(1, 8))
+    policy = draw(st.sampled_from(POLICIES))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return BlockedArray.from_array(x, block_rows, num_locations=locs, policy=policy)
+
+
+@given(blocked_arrays(), st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_partitions_disjoint_cover(ba, ppl):
+    """(i) partitions form a disjoint cover of the block set."""
+    parts = spliter(ba, partitions_per_location=ppl)
+    seen = sorted(b for p in parts for b in p.block_ids)
+    assert seen == list(range(ba.num_blocks))
+
+
+@given(blocked_arrays(), st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_partitions_single_location(ba, ppl):
+    """(ii) every partition is single-placement (locality)."""
+    for p in spliter(ba, partitions_per_location=ppl):
+        assert all(ba.placements[b] == p.location for b in p.block_ids)
+
+
+@given(blocked_arrays(), st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_item_indexes_form_permutation(ba, ppl):
+    """(iii) union of get_item_indexes is a permutation of arange(n)."""
+    parts = spliter(ba, partitions_per_location=ppl)
+    allidx = np.concatenate([p.get_item_indexes() for p in parts])
+    assert sorted(allidx.tolist()) == list(range(ba.num_rows))
+
+
+@given(blocked_arrays())
+@settings(max_examples=30, deadline=None)
+def test_materialize_matches_global_gather(ba):
+    """materialize() == gathering the rows named by get_item_indexes."""
+    full = np.asarray(ba.collect())
+    for p in spliter(ba):
+        np.testing.assert_array_equal(
+            np.asarray(p.materialize()), full[p.get_item_indexes()]
+        )
+
+
+@given(blocked_arrays(), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_rechunk_preserves_data(ba, new_rows):
+    """(v) rechunk at any block size preserves the concatenated dataset."""
+    nb, st_ = rechunk(ba, new_rows)
+    np.testing.assert_array_equal(np.asarray(nb.collect()), np.asarray(ba.collect()))
+    assert nb.num_rows == ba.num_rows
+
+
+@given(blocked_arrays())
+@settings(max_examples=15, deadline=None)
+def test_modes_agree_on_reduction(ba):
+    """(iv) baseline / spliter / spliter_mat / rechunk agree numerically.
+
+    Reduction: per-block (sum, sumsq, count) — associative monoid, so any
+    grouping must agree up to float reassociation.
+    """
+
+    def block_fn(b):
+        return jnp.sum(b, 0), jnp.sum(b * b, 0), jnp.asarray(b.shape[0], jnp.float32)
+
+    def combine(a, b):
+        return a[0] + b[0], a[1] + b[1], a[2] + b[2]
+
+    results = {}
+    modes = ["baseline", "spliter_mat", "rechunk"]
+    if ba.uniform:  # fused scan path needs stackable blocks
+        modes.append("spliter")
+    for mode in modes:
+        r, rep = run_map_reduce([ba], block_fn, combine, mode=mode)
+        results[mode] = jax.tree.map(np.asarray, r)
+        assert rep.bytes_moved == 0 or mode == "rechunk"
+    base = results["baseline"]
+    for mode, r in results.items():
+        for a, b in zip(r, base):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4), mode
+
+
+@given(blocked_arrays(), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_spliter_dispatch_bound(ba, ppl):
+    """#dispatches(spliter) ≤ #partitions + 1 merge — never scales with blocks."""
+
+    def block_fn(b):
+        return jnp.sum(b, 0)
+
+    if not ba.uniform:
+        return
+    parts = spliter(ba, partitions_per_location=ppl)
+    _, rep = run_map_reduce(
+        [ba], block_fn, lambda a, b: a + b, mode="spliter",
+        partitions_per_location=ppl,
+    )
+    assert rep.dispatches <= len(parts) + 1

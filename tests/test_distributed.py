@@ -1,0 +1,43 @@
+"""Multi-device distribution tests, subprocess-isolated so the main pytest
+process keeps 1 device (dry-run spec): hierarchical/compressed collectives,
+the GPipe executor, a sharded multi-pod train step, and elastic restore."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHILD = os.path.join(os.path.dirname(__file__), "_dist_child.py")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _run(mode: str) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, CHILD, mode],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"{mode} failed:\n{out.stdout}\n{out.stderr}"
+    assert f"OK {mode}" in out.stdout
+
+
+@pytest.mark.parametrize(
+    "mode",
+    [
+        "hier_psum",
+        "compressed_psum",
+        "gpipe",
+        "sharded_train",
+        "elastic_restore",
+        "cache_write",
+        "heads_cache",
+    ],
+)
+def test_distributed(mode):
+    _run(mode)
