@@ -14,12 +14,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.histogram import histogram
 from repro.core.blocked import BlockedArray, round_robin_placement
 
 from benchmarks.harness import Table, timeit, winsorized
 
-MODES = ("baseline", "spliter", "spliter_mat", "rechunk")
+POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
 
 
 def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 5, seed=0):
@@ -32,11 +33,11 @@ def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 5, seed
     )
 
 
-def _run(x, mode, *, bins, repeats):
+def _run(x, policy, *, bins, repeats):
     rep_box = {}
 
     def once():
-        h, rep = histogram(x, bins=bins, mode=mode)
+        h, rep = histogram(x, bins=bins, policy=policy)
         rep_box["rep"] = rep
         return h
 
@@ -54,9 +55,9 @@ def bench(quick: bool = True) -> list[Table]:
     t9 = Table("histogram_weak_fragmented", "paper Fig. 9")
     for locs in (1, 2, 4, 8):
         x = _dataset(locs, 16, rows_per_loc)
-        for mode in MODES:
-            stats, rep = _run(x, mode, bins=bins, repeats=repeats)
-            t9.add(locations=locs, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, rep = _run(x, pol, bins=bins, repeats=repeats)
+            t9.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                    dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
                    **stats)
 
@@ -64,9 +65,9 @@ def bench(quick: bool = True) -> list[Table]:
     t10 = Table("histogram_weak_balanced", "paper Fig. 10")
     for locs in (1, 2, 4, 8):
         x = _dataset(locs, 1, rows_per_loc)
-        for mode in MODES:
-            stats, rep = _run(x, mode, bins=bins, repeats=repeats)
-            t10.add(locations=locs, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, rep = _run(x, pol, bins=bins, repeats=repeats)
+            t10.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
                     **stats)
 
@@ -74,9 +75,9 @@ def bench(quick: bool = True) -> list[Table]:
     t11 = Table("histogram_fragmentation", "paper Fig. 11")
     for bpl in (1, 4, 16, 48):
         x = _dataset(8, bpl, rows_per_loc)
-        for mode in MODES:
-            stats, rep = _run(x, mode, bins=bins, repeats=repeats)
-            t11.add(blocks_per_loc=bpl, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, rep = _run(x, pol, bins=bins, repeats=repeats)
+            t11.add(blocks_per_loc=bpl, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
                     **stats)
 

@@ -10,12 +10,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.kmeans import kmeans
 from repro.core.blocked import BlockedArray, round_robin_placement
 
 from benchmarks.harness import Table, timeit, winsorized
 
-MODES = ("baseline", "spliter", "spliter_mat", "rechunk")
+POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
 
 
 def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 20, seed=0):
@@ -28,11 +29,11 @@ def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 20, see
     )
 
 
-def _run(x, mode, *, k, iters, repeats):
+def _run(x, policy, *, k, iters, repeats):
     box = {}
 
     def once():
-        res = kmeans(x, k=k, iters=iters, seed=1, mode=mode)
+        res = kmeans(x, k=k, iters=iters, seed=1, policy=policy)
         box["res"] = res
         return res.centers
 
@@ -50,27 +51,27 @@ def bench(quick: bool = True) -> list[Table]:
     t12 = Table("kmeans_weak_fragmented", "paper Fig. 12")
     for locs in (1, 2, 4, 8):
         x = _dataset(locs, 16, rows_per_loc)
-        for mode in MODES:
-            stats, res = _run(x, mode, k=k, iters=iters, repeats=repeats)
-            t12.add(locations=locs, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, res = _run(x, pol, k=k, iters=iters, repeats=repeats)
+            t12.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.total_dispatches,
                     bytes_moved=res.total_bytes_moved, **stats)
 
     t13 = Table("kmeans_weak_balanced", "paper Fig. 13")
     for locs in (1, 2, 4, 8):
         x = _dataset(locs, 1, rows_per_loc)
-        for mode in MODES:
-            stats, res = _run(x, mode, k=k, iters=iters, repeats=repeats)
-            t13.add(locations=locs, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, res = _run(x, pol, k=k, iters=iters, repeats=repeats)
+            t13.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.total_dispatches,
                     bytes_moved=res.total_bytes_moved, **stats)
 
     t14 = Table("kmeans_fragmentation", "paper Fig. 14")
     for bpl in (1, 4, 16, 48):
         x = _dataset(8, bpl, rows_per_loc)
-        for mode in MODES:
-            stats, res = _run(x, mode, k=k, iters=iters, repeats=repeats)
-            t14.add(blocks_per_loc=bpl, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, res = _run(x, pol, k=k, iters=iters, repeats=repeats)
+            t14.add(blocks_per_loc=bpl, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.total_dispatches,
                     bytes_moved=res.total_bytes_moved, **stats)
 

@@ -13,12 +13,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.knn import _lookup, knn
 from repro.core.blocked import BlockedArray, round_robin_placement
 
 from benchmarks.harness import Table, timeit, winsorized
 
-MODES = ("baseline", "spliter", "rechunk")
+POLICIES = (Baseline(), SplIter(), Rechunk())
 
 
 def _blocked(arr, block_rows, locs):
@@ -59,16 +60,16 @@ def bench(quick: bool = True) -> list[Table]:
     for locs in (1, 2, 4, 8):
         fit = _blocked(rng.random((locs * 6 * 512, d)).astype(np.float32), 512, locs)
         qry = _blocked(rng.random((locs * 4 * 256, d)).astype(np.float32), 256, locs)
-        for mode in MODES:
+        for pol in POLICIES:
             box = {}
 
             def once():
-                box["res"] = knn(fit, qry, k=k, mode=mode)
+                box["res"] = knn(fit, qry, k=k, policy=pol)
                 return box["res"].indices
 
             stats = winsorized(timeit(once, repeats=repeats))
             rep = box["res"].report
-            t20.add(locations=locs, mode=mode, fit_blocks=fit.num_blocks,
+            t20.add(locations=locs, mode=pol.mode_name, fit_blocks=fit.num_blocks,
                     structures=rep.dispatches - rep.merges,  # approx
                     dispatches=rep.dispatches, merges=rep.merges,
                     bytes_moved=rep.bytes_moved, **stats)
@@ -81,16 +82,16 @@ def bench(quick: bool = True) -> list[Table]:
         fit = _blocked(
             rng.random((locs * bpl * 512, d)).astype(np.float32), 512, locs
         )
-        for mode in MODES:
+        for pol in POLICIES:
             box = {}
 
             def once():
-                box["res"] = knn(fit, qry, k=k, mode=mode)
+                box["res"] = knn(fit, qry, k=k, policy=pol)
                 return box["res"].indices
 
             stats = winsorized(timeit(once, repeats=repeats))
             rep = box["res"].report
-            t21.add(fit_blocks_per_loc=bpl, mode=mode, fit_blocks=fit.num_blocks,
+            t21.add(fit_blocks_per_loc=bpl, mode=pol.mode_name, fit_blocks=fit.num_blocks,
                     blocks_per_s=fit.num_blocks / stats["median_s"],
                     dispatches=rep.dispatches, **stats)
 

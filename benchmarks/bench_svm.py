@@ -11,12 +11,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.cascade_svm import cascade_svm
 from repro.core.blocked import BlockedArray, round_robin_placement
 
 from benchmarks.harness import Table, timeit, winsorized
 
-MODES = ("baseline", "spliter", "spliter_mat", "rechunk")
+POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
 
 
 def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 8, seed=0):
@@ -33,11 +34,11 @@ def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 8, seed
     return mk(pts), mk(labels)
 
 
-def _run(x, y, mode, *, steps, repeats):
+def _run(x, y, policy, *, steps, repeats):
     box = {}
 
     def once():
-        res = cascade_svm(x, y, num_sv=32, steps=steps, iterations=1, mode=mode)
+        res = cascade_svm(x, y, num_sv=32, steps=steps, iterations=1, policy=policy)
         box["res"] = res
         return res.sv_x
 
@@ -53,27 +54,27 @@ def bench(quick: bool = True) -> list[Table]:
     t15 = Table("svm_weak_fragmented", "paper Fig. 15")
     for locs in (1, 2, 4, 8):
         x, y = _dataset(locs, 8, rows_per_loc)
-        for mode in MODES:
-            stats, res = _run(x, y, mode, steps=steps, repeats=repeats)
-            t15.add(locations=locs, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, res = _run(x, y, pol, steps=steps, repeats=repeats)
+            t15.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.report.dispatches,
                     bytes_moved=res.report.bytes_moved, **stats)
 
     t16 = Table("svm_weak_balanced", "paper Fig. 16")
     for locs in (1, 2, 4, 8):
         x, y = _dataset(locs, 1, rows_per_loc)
-        for mode in MODES:
-            stats, res = _run(x, y, mode, steps=steps, repeats=repeats)
-            t16.add(locations=locs, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, res = _run(x, y, pol, steps=steps, repeats=repeats)
+            t16.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.report.dispatches,
                     bytes_moved=res.report.bytes_moved, **stats)
 
     t17 = Table("svm_fragmentation", "paper Fig. 17")
     for bpl in (1, 2, 4, 8):
         x, y = _dataset(8, bpl, rows_per_loc)
-        for mode in MODES:
-            stats, res = _run(x, y, mode, steps=steps, repeats=repeats)
-            t17.add(blocks_per_loc=bpl, mode=mode, blocks=x.num_blocks,
+        for pol in POLICIES:
+            stats, res = _run(x, y, pol, steps=steps, repeats=repeats)
+            t17.add(blocks_per_loc=bpl, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.report.dispatches,
                     bytes_moved=res.report.bytes_moved, **stats)
 

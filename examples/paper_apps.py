@@ -4,6 +4,9 @@ Histogram (§5.1, memory-bound) · k-means (§5.2, iterative) ·
 Cascade SVM (§5.3, compute-bound, order-sensitive) · k-NN (§5.4,
 consolidated lookup structures).
 
+All apps run through the typed repro.api policies (Baseline / SplIter /
+Rechunk) — no mode strings.
+
 Run:  PYTHONPATH=src python examples/paper_apps.py [--blocks-per-loc 8]
 """
 
@@ -12,6 +15,7 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.cascade_svm import cascade_svm
 from repro.core.apps.histogram import histogram
 from repro.core.apps.kmeans import kmeans
@@ -39,10 +43,10 @@ def main():
     pts = rng.random((locs * bpl * 256, 3)).astype(np.float32)
     x = blocked(pts, 256, locs)
     ref = np.histogramdd(pts, bins=4, range=[(0, 1)] * 3)[0]
-    for mode in ("baseline", "spliter", "rechunk"):
-        h, rep = histogram(x, bins=4, mode=mode)
+    for pol in (Baseline(), SplIter(), Rechunk()):
+        h, rep = histogram(x, bins=4, policy=pol)
         ok = np.array_equal(np.asarray(h), ref)
-        print(f"  {mode:10s} dispatches={rep.dispatches:3d} "
+        print(f"  {pol.mode_name:10s} dispatches={rep.dispatches:3d} "
               f"moved={rep.bytes_moved:9d}B correct={ok}")
 
     # ---------------- k-means --------------------------------------------
@@ -51,9 +55,9 @@ def main():
     pts = (centers_true[rng.integers(0, 4, locs * bpl * 128)]
            + 0.02 * rng.standard_normal((locs * bpl * 128, 2))).astype(np.float32)
     x = blocked(pts, 128, locs)
-    for mode in ("baseline", "spliter", "rechunk"):
-        res = kmeans(x, k=4, iters=5, seed=1, mode=mode)
-        print(f"  {mode:10s} dispatches={res.total_dispatches:3d} "
+    for pol in (Baseline(), SplIter(), Rechunk()):
+        res = kmeans(x, k=4, iters=5, seed=1, policy=pol)
+        print(f"  {pol.mode_name:10s} dispatches={res.total_dispatches:3d} "
               f"moved={res.total_bytes_moved:9d}B "
               f"centers[0]={np.asarray(res.centers)[0].round(2).tolist()}")
 
@@ -64,11 +68,11 @@ def main():
     w_true = np.array([1.5, -2.0, 0.7, 1.1], np.float32)
     labels = np.sign(pts @ w_true + 0.1 * rng.standard_normal(n)).astype(np.float32)
     x, y = blocked(pts, 64, locs), blocked(labels, 64, locs)
-    for mode in ("baseline", "spliter", "spliter_mat"):
-        res = cascade_svm(x, y, num_sv=64, iterations=1, mode=mode)
+    for pol in (Baseline(), SplIter(), SplIter(materialize=True)):
+        res = cascade_svm(x, y, num_sv=64, iterations=1, policy=pol)
         pred = jnp.sign(res.decision(jnp.asarray(pts)))
         acc = float(jnp.mean(pred == jnp.asarray(labels)))
-        print(f"  {mode:12s} dispatches={res.report.dispatches:3d} "
+        print(f"  {pol.mode_name:12s} dispatches={res.report.dispatches:3d} "
               f"#SV={res.sv_x.shape[0]:4d} train_acc={acc:.3f}")
 
     # ---------------- k-NN ------------------------------------------------
@@ -78,10 +82,10 @@ def main():
     xf = blocked(fit_pts, 128, locs)
     xq = blocked(qry_pts, 64, locs)
     ref = np.argsort(((qry_pts[:, None] - fit_pts[None]) ** 2).sum(-1), 1)[:, :5]
-    for mode in ("baseline", "spliter"):
-        res = knn(xf, xq, k=5, mode=mode)
+    for pol in (Baseline(), SplIter()):
+        res = knn(xf, xq, k=5, policy=pol)
         ok = np.array_equal(np.sort(np.asarray(res.indices), 1), np.sort(ref, 1))
-        print(f"  {mode:10s} dispatches={res.report.dispatches:3d} "
+        print(f"  {pol.mode_name:10s} dispatches={res.report.dispatches:3d} "
               f"merges={res.report.merges:4d} correct={ok}")
 
 

@@ -1,8 +1,10 @@
-"""Quickstart: the SplIter in 60 lines.
+"""Quickstart: the SplIter in 60 lines, on the lazy Collection API.
 
-A blocked dataset is distributed across locations; the baseline dispatches
-one task per block, the SplIter dispatches one task per *locality
-partition* and iterates the local blocks inside it — zero data movement.
+A blocked dataset is distributed across locations; the ``Baseline`` policy
+dispatches one task per block, the ``SplIter`` policy dispatches one task
+per *locality partition* and iterates the local blocks inside it — zero
+data movement.  A fluent chain builds a lazy plan; nothing runs until
+``.compute(executor=...)``.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,8 +12,15 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (
+    Baseline,
+    Collection,
+    LocalExecutor,
+    Rechunk,
+    SplIter,
+    ThreadedExecutor,
+)
 from repro.core.blocked import BlockedArray, round_robin_placement
-from repro.core.engine import run_map_reduce
 from repro.core.spliter import spliter
 
 # -- 1. a blocked, distributed dataset --------------------------------------
@@ -33,22 +42,34 @@ for p in parts[:3]:
           f"{p.num_rows} rows")
 print(f"... {len(parts)} partitions total (1 per location)")
 
-# -- 3. iterate: the same map-reduce, three execution strategies -------------
-def block_mean_sum(block):          # per-block work
+# -- 3. one lazy plan, three execution policies ------------------------------
+def block_sum(block):               # per-block work
     return block.sum(axis=0)
 
 combine = lambda a, b: a + b        # associative merge
 
-for mode in ("baseline", "spliter", "rechunk"):
-    result, report = run_map_reduce([x], block_mean_sum, combine, mode=mode)
+col = Collection.from_blocked(x)
+for policy in (Baseline(), SplIter(), Rechunk()):
+    plan = col.split(policy).map_blocks(block_sum).reduce(combine)
+    result, report = plan.compute(executor=LocalExecutor())
     mean = result / x.num_rows
-    print(f"{mode:10s} dispatches={report.dispatches:3d} "
+    print(f"{policy.mode_name:10s} dispatches={report.dispatches:3d} "
           f"bytes_moved={report.bytes_moved:10d}  mean[0]={float(mean[0]):.6f}")
 
 # baseline: 64 block tasks + merge;  spliter: 8 partition tasks + merge,
 # 0 bytes moved;  rechunk: 8 tasks but Θ(dataset) bytes shuffled first.
 
-# -- 4. order restoration (paper §4.1) ---------------------------------------
+# -- 4. the plan is inspectable before it runs --------------------------------
+print(col.split(SplIter()).map_blocks(block_sum).reduce(combine).plan().describe())
+
+# -- 5. ThreadedExecutor: one worker thread per location, identical result ----
+seq = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
+    executor=LocalExecutor())
+thr = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
+    executor=ThreadedExecutor())
+print("threaded identical:", bool(jnp.array_equal(seq.value, thr.value)))
+
+# -- 6. order restoration (paper §4.1) ---------------------------------------
 p0 = parts[0]
 print("get_indexes()      ->", p0.get_indexes()[:8])
 print("get_item_indexes() ->", p0.get_item_indexes()[:8], "...")

@@ -1,0 +1,44 @@
+"""repro.api — the lazy Collection/Executor execution layer (DESIGN.md §3–§5).
+
+Public surface:
+
+* :class:`Collection` — fluent, lazy plan builder over blocked arrays:
+  ``Collection.from_array(...).split(policy).map_blocks(fn).reduce(c)``.
+* :class:`ExecutionPolicy` and its concrete policies :class:`Baseline`,
+  :class:`SplIter`, :class:`Rechunk` — the typed replacement for the
+  seed's stringly ``mode`` flag.
+* :class:`Executor` protocol with :class:`LocalExecutor` (sequential,
+  seed-equivalent) and :class:`ThreadedExecutor` (one worker thread per
+  location) backends; both report costs via
+  :class:`~repro.core.engine.EngineReport`.
+* :class:`ExecutionPlan` — the small IR a Collection chain builds;
+  :class:`PartitionView` — what ``map_partitions`` callbacks receive;
+  :class:`ComputeResult` — ``(value, report)``.
+"""
+
+from repro.api.collection import Collection
+from repro.api.executors import (
+    ComputeResult,
+    Executor,
+    LocalExecutor,
+    PartitionView,
+    ThreadedExecutor,
+)
+from repro.api.plan import ExecutionPlan, PlanError
+from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter, as_policy
+
+__all__ = [
+    "Collection",
+    "ComputeResult",
+    "Executor",
+    "LocalExecutor",
+    "PartitionView",
+    "ThreadedExecutor",
+    "ExecutionPlan",
+    "PlanError",
+    "Baseline",
+    "ExecutionPolicy",
+    "Rechunk",
+    "SplIter",
+    "as_policy",
+]

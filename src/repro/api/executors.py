@@ -1,0 +1,399 @@
+"""Executor backends — run an :class:`~repro.api.plan.ExecutionPlan`.
+
+The seed's ``run_map_reduce`` hard-wired execution strategy selection into
+one function; this module splits it into an :class:`Executor` contract with
+two backends:
+
+:class:`LocalExecutor`
+    The seed :class:`~repro.core.engine.TaskEngine` behaviour, refactored:
+    sequential dispatch on the calling thread, with the same
+    dispatch/trace/bytes accounting in :class:`~repro.core.engine.EngineReport`.
+:class:`ThreadedExecutor`
+    One worker thread per *location*, overlapping per-partition (or
+    per-block) task dispatch across locations — the first step toward
+    genuinely concurrent location-parallel execution.  Partials are
+    collected by task index and merged in plan order, so results are
+    bit-identical to :class:`LocalExecutor`.
+
+Both backends cache the *prepared* form of ``(inputs, policy)`` — the
+partition structure, or the rechunked arrays with their traffic bill — so
+iterative workloads pay the split/rechunk cost once (paper §6.3.1) without
+app-level special casing.
+
+Executors also expose the engine-level ``task()`` registration for app
+stages that do not fit the map/reduce plan shape (k-NN's lookup/merge
+loops, Cascade SVM's binary cascade), and a ``scope()`` context manager
+that accumulates plan executions plus custom task dispatches into a single
+report.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+import time
+from typing import Any, Callable, Hashable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import ExecutionPlan, MapReduceSpec
+from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter
+from repro.core.blocked import BlockedArray
+from repro.core.engine import EngineReport, TaskEngine
+from repro.core.rechunk import rechunk
+from repro.core.spliter import spliter
+
+__all__ = [
+    "ComputeResult",
+    "PartitionView",
+    "Executor",
+    "LocalExecutor",
+    "ThreadedExecutor",
+]
+
+
+@dataclasses.dataclass
+class ComputeResult:
+    """What ``Collection.compute`` returns: the value plus its cost report."""
+
+    value: Any
+    report: EngineReport
+
+    def __iter__(self):
+        # Allow ``value, report = plan.compute(...)`` unpacking.
+        yield self.value
+        yield self.report
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionView:
+    """A single-location group of aligned blocks, as seen by map_partitions.
+
+    Generalizes :class:`~repro.core.spliter.Partition` to multi-input plans
+    (e.g. Cascade SVM's aligned points+labels) and to the Baseline policy,
+    where every block is its own single-block partition.
+    """
+
+    arrays: tuple[BlockedArray, ...]
+    location: int
+    block_ids: tuple[int, ...]
+
+    @property
+    def blocks(self) -> list[jax.Array]:
+        """Blocks of the first (or only) input array."""
+        return self.blocks_of(0)
+
+    def blocks_of(self, i: int) -> list[jax.Array]:
+        return [self.arrays[i].blocks[b] for b in self.block_ids]
+
+    @property
+    def num_rows(self) -> int:
+        return int(sum(self.arrays[0].block_rows[b] for b in self.block_ids))
+
+    @property
+    def item_indexes(self) -> np.ndarray:
+        """Global row ids of every element (paper §4.1 ``get_item_indexes``)."""
+        x = self.arrays[0]
+        offs = x.row_offsets()
+        rows = x.block_rows
+        return np.concatenate(
+            [np.arange(offs[b], offs[b] + rows[b], dtype=np.int64) for b in self.block_ids]
+        )
+
+    @property
+    def materialized(self) -> tuple[jax.Array, ...]:
+        """Local concat of each input's blocks — intra-location copy only."""
+        return tuple(
+            jnp.concatenate(self.blocks_of(i), axis=0) for i in range(len(self.arrays))
+        )
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """The contract every execution backend satisfies (DESIGN.md §5)."""
+
+    def execute(self, plan: ExecutionPlan) -> ComputeResult: ...
+
+    def task(self, fn: Callable, *, key: Hashable = None) -> Callable: ...
+
+    @property
+    def report(self) -> EngineReport: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class _Group:
+    """Prepared task group: which blocks one task consumes, and where."""
+
+    location: int
+    block_ids: tuple[int, ...]
+
+
+@dataclasses.dataclass
+class _Prepared:
+    """Cached result of applying a policy to a set of inputs.
+
+    ``inputs`` retains the original arrays: the cache key uses their ids,
+    so the entry must pin them alive — otherwise a gc'd input whose id is
+    reused by a new BlockedArray would silently hit a stale entry.
+    """
+
+    inputs: tuple[BlockedArray, ...]
+    arrays: tuple[BlockedArray, ...]
+    groups: list[_Group]
+
+
+def _partition_body(block_fn: Callable, combine: Callable, n_in: int) -> Callable:
+    """The fused per-partition task (paper Listing 5 as a ``lax.scan``)."""
+
+    def partition_task(*operands):
+        data, extra = operands[:n_in], operands[n_in:]
+
+        def body(acc, blk):
+            p = block_fn(*blk, *extra)
+            return combine(acc, p), None
+
+        first = block_fn(*(s[0] for s in data), *extra)
+        acc, _ = jax.lax.scan(body, first, jax.tree.map(lambda s: s[1:], data))
+        return acc
+
+    return partition_task
+
+
+def _merge_partials(engine: TaskEngine, combine: Callable, partials: list[Any]) -> Any:
+    """Single merge task over the stacked partials (paper's @reduction task)."""
+
+    def merge(stacked):
+        def body(acc, p):
+            return combine(acc, p), None
+
+        first = jax.tree.map(lambda s: s[0], stacked)
+        rest = jax.tree.map(lambda s: s[1:], stacked)
+        acc, _ = jax.lax.scan(body, first, rest)
+        return acc
+
+    if len(partials) == 1:
+        return partials[0]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *partials)
+    out = engine.task(merge, key=("merge", combine))(stacked)
+    engine.report.merges += 1
+    return out
+
+
+class _PlanExecutor:
+    """Shared plan normalization/prepare/merge; subclasses choose scheduling."""
+
+    def __init__(self, engine: TaskEngine | None = None):
+        self.engine = engine or TaskEngine()
+        self._prepare_cache: dict[tuple, _Prepared] = {}
+        self._scope_depth = 0
+
+    # -- engine passthroughs -------------------------------------------------
+
+    @property
+    def report(self) -> EngineReport:
+        return self.engine.report
+
+    def task(self, fn: Callable, *, key: Hashable = None) -> Callable:
+        return self.engine.task(fn, key=key)
+
+    @contextlib.contextmanager
+    def scope(self, mode: str):
+        """Accumulate plan executions + custom dispatches into one report."""
+        report = self.engine.new_report(mode)
+        self._scope_depth += 1
+        t0 = time.perf_counter()
+        try:
+            yield report
+        finally:
+            self._scope_depth -= 1
+            report.wall_s = time.perf_counter() - t0
+
+    # -- the Executor entry point --------------------------------------------
+
+    def execute(self, plan: ExecutionPlan) -> ComputeResult:
+        spec = plan.spec
+        own_report = self._scope_depth == 0
+        if own_report:
+            report = self.engine.new_report(spec.policy.mode_name)
+        else:
+            report = self.engine.report
+        t0 = time.perf_counter()
+
+        prepared = self._prepare(spec.inputs, spec.policy, report)
+        if spec.kind == "map_partitions":
+            tasks = self._partition_view_tasks(spec, prepared)
+        else:
+            tasks = self._map_block_tasks(spec, prepared)
+        partials = self._run(tasks)
+        if spec.combine is not None:
+            value = _merge_partials(self.engine, spec.combine, partials)
+        else:
+            value = partials
+        value = jax.block_until_ready(value)
+
+        if own_report:
+            report.wall_s = time.perf_counter() - t0
+        return ComputeResult(value=value, report=report)
+
+    # -- prepare: policy -> (arrays, task groups), cached ---------------------
+
+    def _prepare(
+        self,
+        inputs: tuple[BlockedArray, ...],
+        policy: ExecutionPolicy,
+        report: EngineReport,
+    ) -> _Prepared:
+        key = (tuple(id(a) for a in inputs), policy)
+        hit = self._prepare_cache.get(key)
+        if hit is not None:
+            return hit
+
+        x0 = inputs[0]
+        if isinstance(policy, Rechunk):
+            target = policy.target_rows or math.ceil(x0.num_rows / x0.num_locations)
+            arrays = []
+            for a in inputs:
+                na, st = rechunk(a, target)
+                report.bytes_moved += st.bytes_moved
+                arrays.append(na)
+            arrays = tuple(arrays)
+            groups = [
+                _Group(int(arrays[0].placements[i]), (i,))
+                for i in range(arrays[0].num_blocks)
+            ]
+        elif isinstance(policy, SplIter):
+            parts = spliter(x0, partitions_per_location=policy.partitions_per_location)
+            arrays = inputs
+            groups = [_Group(p.location, p.block_ids) for p in parts]
+        elif isinstance(policy, Baseline):
+            arrays = inputs
+            groups = [
+                _Group(int(x0.placements[i]), (i,)) for i in range(x0.num_blocks)
+            ]
+        else:  # pragma: no cover
+            raise TypeError(f"unknown policy {policy!r}")
+
+        prepared = _Prepared(inputs=inputs, arrays=arrays, groups=groups)
+        self._prepare_cache[key] = prepared
+        return prepared
+
+    # -- task construction -----------------------------------------------------
+
+    def _map_block_tasks(self, spec: MapReduceSpec, prepared: _Prepared):
+        engine = self.engine
+        arrays, groups = prepared.arrays, prepared.groups
+        extra = spec.extra_args
+        n_in = len(arrays)
+        pol = spec.policy
+        tasks: list[tuple[int, Callable[[], Any]]] = []
+
+        if isinstance(pol, SplIter) and not pol.materialize and spec.combine is not None:
+            # Fused iteration: ONE dispatch scanning the partition's local
+            # blocks, carrying the partition-local reduction.  Ragged tails
+            # scan per same-shape run — at most one extra dispatch per tail.
+            t = engine.task(
+                _partition_body(spec.fn, spec.combine, n_in),
+                key=("part", spec.fn, spec.combine, n_in),
+            )
+            for g in groups:
+                by_shape: dict[tuple, list[int]] = {}
+                for b in g.block_ids:
+                    by_shape.setdefault(arrays[0].blocks[b].shape, []).append(b)
+                for ids in by_shape.values():
+                    def thunk(ids=tuple(ids), t=t):
+                        stacks = tuple(
+                            jnp.stack([a.blocks[b] for b in ids], axis=0)
+                            for a in arrays
+                        )
+                        return t(*stacks, *extra)
+
+                    tasks.append((g.location, thunk))
+        elif isinstance(pol, SplIter) and pol.materialize:
+            # Materialized partition (paper §7): local concat, one call.
+            t = engine.task(spec.fn, key=("block", spec.fn))
+            for g in groups:
+                def thunk(g=g, t=t):
+                    bufs = tuple(
+                        jnp.concatenate([a.blocks[b] for b in g.block_ids], axis=0)
+                        for a in arrays
+                    )
+                    return t(*bufs, *extra)
+
+                tasks.append((g.location, thunk))
+        else:
+            # Baseline / Rechunk (single-block groups), or an un-reduced
+            # SplIter map: one dispatch per block.  Emitted in GLOBAL block
+            # order so an un-reduced compute() returns partials aligned
+            # with the blocking regardless of policy/partition layout.
+            t = engine.task(spec.fn, key=("block", spec.fn))
+            placed = sorted(
+                (b, g.location) for g in groups for b in g.block_ids
+            )
+            for b, loc in placed:
+                def thunk(b=b, t=t):
+                    return t(*(a.blocks[b] for a in arrays), *extra)
+
+                tasks.append((loc, thunk))
+        return tasks
+
+    def _partition_view_tasks(self, spec: MapReduceSpec, prepared: _Prepared):
+        arrays = prepared.arrays
+        tasks = []
+        for g in prepared.groups:
+            view = PartitionView(arrays=arrays, location=g.location, block_ids=g.block_ids)
+            tasks.append((g.location, lambda view=view: spec.fn(view)))
+        return tasks
+
+    # -- scheduling (backend-specific) ----------------------------------------
+
+    def _run(self, tasks: list[tuple[int, Callable[[], Any]]]) -> list[Any]:
+        raise NotImplementedError
+
+
+class LocalExecutor(_PlanExecutor):
+    """Sequential dispatch on the calling thread — the seed TaskEngine path."""
+
+    def _run(self, tasks):
+        return [thunk() for _, thunk in tasks]
+
+
+class ThreadedExecutor(_PlanExecutor):
+    """One worker thread per location: overlapped per-partition dispatch.
+
+    Determinism: partials land in a results list indexed by task position
+    and the merge runs in plan order on the calling thread, so the value is
+    bit-identical to :class:`LocalExecutor` regardless of thread timing.
+    """
+
+    def _run(self, tasks):
+        by_loc: dict[int, list[tuple[int, Callable[[], Any]]]] = {}
+        for i, (loc, thunk) in enumerate(tasks):
+            by_loc.setdefault(loc, []).append((i, thunk))
+        if len(by_loc) <= 1:
+            return [thunk() for _, thunk in tasks]
+
+        results: list[Any] = [None] * len(tasks)
+        errors: list[BaseException] = []
+
+        def worker(items):
+            try:
+                for i, thunk in items:
+                    results[i] = thunk()
+            except BaseException as e:  # noqa: BLE001 — re-raised on the caller
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(items,), daemon=True)
+            for items in by_loc.values()
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        return results

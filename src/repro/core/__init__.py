@@ -7,9 +7,12 @@ Public surface:
 * :class:`Partition` — logical block group; ``get_indexes`` /
   ``get_item_indexes`` / ``materialize``.
 * :func:`rechunk` — the materializing competitor, with traffic accounting.
-* :func:`run_map_reduce`, :class:`TaskEngine` — per-block vs per-partition
-  execution with dispatch accounting.
-* ``repro.core.apps`` — the paper's four applications.
+* :class:`TaskEngine`, :class:`EngineReport` — jit-cached task registration
+  with dispatch/trace/bytes accounting.
+* :func:`run_map_reduce` — DEPRECATED stringly-typed shim; execution now
+  lives in the plan-based ``repro.api`` layer (Collection / ExecutionPolicy
+  / Executor).
+* ``repro.core.apps`` — the paper's four applications (on ``repro.api``).
 """
 
 from repro.core.blocked import (

@@ -1,4 +1,9 @@
-"""The paper's four evaluation applications (§5), on the SplIter task engine."""
+"""The paper's four evaluation applications (§5), on the repro.api layer.
+
+Each app takes ``policy: ExecutionPolicy`` (Baseline / SplIter / Rechunk)
+and an optional ``executor`` (LocalExecutor / ThreadedExecutor); legacy
+mode strings are still coerced via :func:`repro.api.as_policy`.
+"""
 
 from repro.core.apps.histogram import histogram
 from repro.core.apps.kmeans import kmeans

@@ -6,9 +6,11 @@ the global loop feeds the final SVs back (few iterations).
 
 Order sensitivity: the labels ``y`` are a *separate* blocked collection that
 must stay aligned with the points ``x`` — the paper handles this with
-``get_indexes`` (§4.1).  Here the alignment is expressed by constructing the
-``y`` partition from the ``x`` partition's ``block_ids`` (exactly what
-``get_indexes`` returns).
+``get_indexes`` (§4.1).  Here ``Collection.zip(x, y)`` carries both arrays
+through one plan, so every :class:`~repro.api.PartitionView` yields
+block-aligned (points, labels) buffers; the level-0 group list is a single
+``map_partitions`` whose granularity (per block, per partition, per
+rechunked block) is entirely the policy's decision.
 
 Microkernel adaptation (DESIGN.md §2): sklearn's SMO-based SVC does not
 exist on TPU; we train a bias-free RBF kernel SVM by projected gradient
@@ -24,9 +26,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.api import Collection, Executor, ExecutionPolicy, LocalExecutor, SplIter, as_policy
 from repro.core.blocked import BlockedArray
-from repro.core.engine import EngineReport, TaskEngine
-from repro.core.spliter import Partition, spliter
+from repro.core.engine import EngineReport
 
 __all__ = ["cascade_svm", "svc_train", "CascadeSVMResult"]
 
@@ -87,23 +89,21 @@ def cascade_svm(
     gamma: float = 0.5,
     steps: int = 200,
     iterations: int = 2,
-    mode: str = "spliter",
-    partitions_per_location: int = 1,
+    policy: ExecutionPolicy | str = SplIter(),
+    executor: Executor | None = None,
 ) -> CascadeSVMResult:
-    """Run the cascade in one of the engine modes.
+    """Run the cascade under an execution policy.
 
-    ``baseline``: level-0 trains one task per *block* (paper Listing 8).
-    ``spliter``/``spliter_mat``: level-0 trains one task per *partition*
-    on the locally-concatenated blocks (paper Listing 9 — the partition is
-    consumed through ``get_indexes``-aligned x/y pairs).
-    ``rechunk``: materialize one block per location first (traffic!).
+    ``Baseline``: level-0 trains one task per *block* (paper Listing 8).
+    ``SplIter``: level-0 trains one task per *partition* on the
+    locally-concatenated blocks (paper Listing 9 — the partition is
+    consumed through index-aligned x/y pairs; materialization is inherent,
+    so ``SplIter(materialize=True)`` coincides with ``SplIter()``).
+    ``Rechunk``: materialize one block per location first (traffic!).
     """
     assert x.num_blocks == y.num_blocks
-    engine = TaskEngine()
-    report = engine.new_report(mode)
-    import time
-
-    t0 = time.perf_counter()
+    pol = as_policy(policy)
+    ex = executor if executor is not None else LocalExecutor()
 
     def train_task(bx, by, feed_x, feed_y):
         ax = jnp.concatenate([bx, feed_x], 0)
@@ -120,60 +120,46 @@ def cascade_svm(
             num_sv=num_sv,
         )
 
-    # Level-0 group list: (points, labels) pairs per task, built per mode.
-    if mode in ("baseline", "rechunk"):
-        wx, wy = x, y
-        if mode == "rechunk":
-            import math
+    with ex.scope(pol.mode_name) as report:
+        # Level-0 group list: aligned (points, labels) buffers per task —
+        # one plan, granularity decided by the policy.
+        groups = (
+            Collection.zip(Collection.from_blocked(x), Collection.from_blocked(y))
+            .split(pol)
+            .map_partitions(lambda view: view.materialized)
+            .compute(executor=ex)
+            .value
+        )
 
-            from repro.core.rechunk import rechunk
+        d = x.row_shape[0]
+        feed_x = jnp.zeros((0, d), x.dtype)
+        feed_y = jnp.zeros((0,), y.dtype)
 
-            target = math.ceil(x.num_rows / x.num_locations)
-            wx, st = rechunk(x, target)
-            report.bytes_moved += st.bytes_moved
-            wy, st = rechunk(y, target)
-            report.bytes_moved += st.bytes_moved
-        groups = [(wx.blocks[i], wy.blocks[i]) for i in range(wx.num_blocks)]
-    elif mode in ("spliter", "spliter_mat"):
-        parts = spliter(x, partitions_per_location=partitions_per_location)
-        groups = []
-        for p in parts:
-            # get_indexes-aligned label partition (paper §4.1 / Listing 9).
-            yp = Partition(source=y, location=p.location, block_ids=p.block_ids)
-            groups.append((p.materialize(), yp.materialize()))
-    else:  # pragma: no cover
-        raise ValueError(mode)
+        for _ in range(iterations):
+            t = ex.task(train_task, key=("train", feed_x.shape))
+            level = [t(bx, by, feed_x, feed_y) for bx, by in groups]
+            # Binary cascade: union pairs of SV sets and retrain (Graf et al.).
+            while len(level) > 1:
+                nxt = []
+                mt = ex.task(merge_task, key="merge")
+                for i in range(0, len(level) - 1, 2):
+                    (x1, y1, _), (x2, y2, _) = level[i], level[i + 1]
+                    nxt.append(mt(x1, y1, x2, y2))
+                    report.merges += 1
+                if len(level) % 2:
+                    nxt.append(level[-1])
+                level = nxt
+            sv_x, sv_y, sv_a = level[0]
+            feed_x, feed_y = sv_x, sv_y  # feedback loop
 
-    d = x.row_shape[0]
-    feed_x = jnp.zeros((0, d), x.dtype)
-    feed_y = jnp.zeros((0,), y.dtype)
-
-    for _ in range(iterations):
-        t = engine.task(train_task, key=("train", feed_x.shape))
-        level = [t(bx, by, feed_x, feed_y) for bx, by in groups]
-        # Binary cascade: union pairs of SV sets and retrain (Graf et al.).
-        while len(level) > 1:
-            nxt = []
-            mt = engine.task(merge_task, key="merge")
-            for i in range(0, len(level) - 1, 2):
-                (x1, y1, _), (x2, y2, _) = level[i], level[i + 1]
-                nxt.append(mt(x1, y1, x2, y2))
-                report.merges += 1
-            if len(level) % 2:
-                nxt.append(level[-1])
-            level = nxt
-        sv_x, sv_y, sv_a = level[0]
-        feed_x, feed_y = sv_x, sv_y  # feedback loop
-
-    # Final model: retrain on the winning SV set keeping ALL its points
-    # (Graf et al.: the last cascade level's full solution is the model).
-    refit = engine.task(
-        lambda fx, fy: svc_train(
-            fx, fy, c=c, gamma=gamma, steps=steps, num_sv=int(sv_x.shape[0])
-        ),
-        key=("refit", int(sv_x.shape[0])),
-    )
-    sv_x, sv_y, sv_a = refit(sv_x, sv_y)
-    sv_x, sv_y, sv_a = jax.block_until_ready((sv_x, sv_y, sv_a))
-    report.wall_s = time.perf_counter() - t0
+        # Final model: retrain on the winning SV set keeping ALL its points
+        # (Graf et al.: the last cascade level's full solution is the model).
+        refit = ex.task(
+            lambda fx, fy: svc_train(
+                fx, fy, c=c, gamma=gamma, steps=steps, num_sv=int(sv_x.shape[0])
+            ),
+            key=("refit", int(sv_x.shape[0])),
+        )
+        sv_x, sv_y, sv_a = refit(sv_x, sv_y)
+        sv_x, sv_y, sv_a = jax.block_until_ready((sv_x, sv_y, sv_a))
     return CascadeSVMResult(sv_x=sv_x, sv_y=sv_y, sv_alpha=sv_a, report=report)

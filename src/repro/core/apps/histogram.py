@@ -1,8 +1,9 @@
 """n-dimensional Histogram (paper §5.1) — embarrassingly parallel, memory-bound.
 
 Per block: ``histogramdd``; merge: summation.  The SplIter version performs
-the first summation inside ``compute_partition`` (locality-guaranteed), the
-final merge is a single reduction task — exactly paper Listings 4/5.
+the first summation inside the fused per-partition task (locality
+guaranteed), the final merge is a single reduction task — exactly paper
+Listings 4/5, expressed as one plan on the :mod:`repro.api` layer.
 """
 
 from __future__ import annotations
@@ -12,8 +13,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.api import Collection, Executor, ExecutionPolicy, SplIter, as_policy
 from repro.core.blocked import BlockedArray
-from repro.core.engine import EngineReport, run_map_reduce
+from repro.core.engine import EngineReport
 
 __all__ = ["histogram", "histogramdd_block"]
 
@@ -40,14 +42,15 @@ def histogram(
     bins: int = 8,
     lo: float = 0.0,
     hi: float = 1.0,
-    mode: str = "spliter",
-    partitions_per_location: int = 1,
+    policy: ExecutionPolicy | str = SplIter(),
+    executor: Executor | None = None,
 ) -> tuple[jax.Array, EngineReport]:
     block_fn = partial(histogramdd_block, bins=bins, lo=lo, hi=hi)
-    return run_map_reduce(
-        [x],
-        block_fn,
-        lambda a, b: a + b,
-        mode=mode,
-        partitions_per_location=partitions_per_location,
+    res = (
+        Collection.from_blocked(x)
+        .split(as_policy(policy))
+        .map_blocks(block_fn)
+        .reduce(lambda a, b: a + b)
+        .compute(executor=executor)
     )
+    return res.value, res.report

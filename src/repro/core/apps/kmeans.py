@@ -2,8 +2,14 @@
 
 Per block: pairwise distances → per-centroid partial sums and counts
 (``_partial_sum`` in dislib).  Merge: elementwise sum, then mean
-(``_recompute_centers``).  The iterative outer loop re-uses the same
-partitions every iteration, diluting the split cost (paper §6.3).
+(``_recompute_centers``).
+
+The iterative outer loop re-uses one persistent executor: task definitions
+are traced once, and the executor's prepare cache applies the split (or the
+rechunk, with its traffic bill) exactly once — paper §6.3.1 "this cost is
+only payed once, not for every iteration" — with no app-level special
+casing.  Centroids travel as ``extra_args`` so every iteration re-dispatches
+the same compiled task.
 """
 
 from __future__ import annotations
@@ -13,8 +19,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.api import Collection, Executor, ExecutionPolicy, LocalExecutor, SplIter, as_policy
 from repro.core.blocked import BlockedArray
-from repro.core.engine import EngineReport, TaskEngine, run_map_reduce
+from repro.core.engine import EngineReport
 
 __all__ = ["kmeans", "partial_sum_block", "KMeansResult"]
 
@@ -66,40 +73,24 @@ def kmeans(
     k: int = 8,
     iters: int = 10,
     seed: int = 0,
-    mode: str = "spliter",
-    partitions_per_location: int = 1,
+    policy: ExecutionPolicy | str = SplIter(),
+    executor: Executor | None = None,
 ) -> KMeansResult:
     d = x.row_shape[0]
     centers = jax.random.uniform(jax.random.key(seed), (k, d), x.dtype)
+    pol = as_policy(policy)
+    ex = executor if executor is not None else LocalExecutor()
+    data = Collection.from_blocked(x).split(pol)
+
     reports: list[EngineReport] = []
-
-    # rechunk (like SplIter's split) is paid ONCE, outside the loop — paper
-    # §6.3.1: "this cost is only payed once, not for every iteration".
-    work = x
-    eff_mode = mode
-    if mode == "rechunk":
-        from repro.core.rechunk import rechunk
-        import math
-
-        target = math.ceil(x.num_rows / x.num_locations)
-        work, st = rechunk(x, target)
-        pre = EngineReport(mode="rechunk")
-        pre.bytes_moved = st.bytes_moved
-        reports.append(pre)
-        eff_mode = "baseline"  # per-(big-)block tasks on the rechunked array
-
-    engine = TaskEngine()  # task definitions traced once, reused per iteration
     for _ in range(iters):
-        (sums, counts), rep = run_map_reduce(
-            [work],
-            partial_sum_block,
-            _combine,
-            mode=eff_mode,
-            partitions_per_location=partitions_per_location,
-            extra_args=(centers,),
-            engine=engine,
+        res = (
+            data.map_blocks(partial_sum_block, extra_args=(centers,))
+            .reduce(_combine)
+            .compute(executor=ex)
         )
+        sums, counts = res.value
         centers = sums / jnp.maximum(counts, 1.0)[:, None]
-        reports.append(rep)
+        reports.append(res.report)
 
     return KMeansResult(centers=centers, iterations=iters, reports=reports)

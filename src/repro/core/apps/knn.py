@@ -1,9 +1,12 @@
 """k-Nearest Neighbors (paper §5.4) — two-stage, order-sensitive, consolidation.
 
-*fit*: build one lookup structure per fit-block (baseline) or one per
+*fit*: build one lookup structure per fit-block (Baseline) or one per
 partition (SplIter — the paper's key insight: consolidation decouples the
 number of intermediate structures from the blocking and makes each lookup
-structure more efficient, Figs 7/8).
+structure more efficient, Figs 7/8).  Both cases are ONE
+``map_partitions`` plan: under Baseline every block is its own
+single-block partition, so the policy object carries the entire mode
+difference.
 
 *kneighbors*: every query block is looked up against every structure and the
 per-structure top-k results are merged — #tasks = #structures × #query
@@ -17,7 +20,7 @@ number of structures, per-structure lookup is sub-linear in its size
 (top-k over one big matrix beats K-way merge of many small top-ks).
 
 Order sensitivity: returned neighbor ids must be **global** row ids of the
-fit dataset — exactly what ``Partition.get_item_indexes`` provides (§4.1).
+fit dataset — exactly what ``PartitionView.item_indexes`` provides (§4.1).
 """
 
 from __future__ import annotations
@@ -26,11 +29,10 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api import Collection, Executor, ExecutionPolicy, LocalExecutor, SplIter, as_policy
 from repro.core.blocked import BlockedArray
-from repro.core.engine import EngineReport, TaskEngine
-from repro.core.spliter import spliter
+from repro.core.engine import EngineReport
 
 __all__ = ["knn", "KNNResult"]
 
@@ -66,68 +68,50 @@ def knn(
     queries: BlockedArray,
     *,
     k: int = 8,
-    mode: str = "spliter",
-    partitions_per_location: int = 1,
+    policy: ExecutionPolicy | str = SplIter(),
+    executor: Executor | None = None,
 ) -> KNNResult:
-    engine = TaskEngine()
-    report = engine.new_report(mode)
-    import time
+    pol = as_policy(policy)
+    ex = executor if executor is not None else LocalExecutor()
 
-    t0 = time.perf_counter()
+    with ex.scope(pol.mode_name) as report:
+        build_task = ex.task(lambda *bs: jnp.concatenate(bs, 0), key=("knn_fit",))
 
-    # ---- fit stage: build the lookup structures --------------------------
-    offs = fit.row_offsets()
-    if mode in ("baseline", "rechunk"):
-        wfit = fit
-        if mode == "rechunk":
-            import math
+        def build_structure(view):
+            # ONE consolidated structure per partition (paper Fig. 8); a
+            # single-block "partition" under Baseline.  Global row ids come
+            # from the view's item_indexes (paper §4.1).
+            pts = build_task(*view.blocks)
+            ids = jnp.asarray(view.item_indexes, jnp.int32)
+            return pts, ids
 
-            from repro.core.rechunk import rechunk
-
-            target = math.ceil(fit.num_rows / fit.num_locations)
-            wfit, st = rechunk(fit, target)
-            report.bytes_moved += st.bytes_moved
-            offs = wfit.row_offsets()
-        fit_task = engine.task(lambda b: b, key="fit_identity")
-        structures = []
-        for i in range(wfit.num_blocks):
-            pts = fit_task(wfit.blocks[i])  # the "tree build" task
-            ids = jnp.arange(offs[i], offs[i] + wfit.block_rows[i], dtype=jnp.int32)
-            structures.append((pts, ids))
-    elif mode in ("spliter", "spliter_mat"):
-        parts = spliter(fit, partitions_per_location=partitions_per_location)
-        fit_task = engine.task(
-            lambda *bs: jnp.concatenate(bs, 0), key=("fit_concat",)
+        # ---- fit stage: build the lookup structures ----------------------
+        structures = (
+            Collection.from_blocked(fit)
+            .split(pol)
+            .map_partitions(build_structure)
+            .compute(executor=ex)
+            .value
         )
-        structures = []
-        for p in parts:
-            # ONE consolidated structure per partition (paper Fig. 8);
-            # global row ids come from get_item_indexes (paper §4.1).
-            pts = fit_task(*p.blocks)
-            ids = jnp.asarray(p.get_item_indexes(), jnp.int32)
-            structures.append((pts, ids))
-    else:  # pragma: no cover
-        raise ValueError(mode)
 
-    # ---- kneighbors stage -------------------------------------------------
-    lookup_task = engine.task(lambda f, ids, q: _lookup(f, ids, q, k), key=("lk", k))
-    merge_task = engine.task(lambda a, b, c, d: _merge(a, b, c, d, k), key=("mg", k))
+        # ---- kneighbors stage --------------------------------------------
+        lookup_task = ex.task(lambda f, ids, q: _lookup(f, ids, q, k), key=("lk", k))
+        merge_task = ex.task(lambda a, b, c, d: _merge(a, b, c, d, k), key=("mg", k))
 
-    out_d, out_i = [], []
-    for qb in queries.blocks:
-        cand = None
-        for pts, ids in structures:
-            r = lookup_task(pts, ids, qb)
-            if cand is None:
-                cand = r
-            else:
-                cand = merge_task(cand[0], cand[1], r[0], r[1])
-                report.merges += 1
-        out_d.append(cand[0])
-        out_i.append(cand[1])
+        out_d, out_i = [], []
+        for qb in queries.blocks:
+            cand = None
+            for pts, ids in structures:
+                r = lookup_task(pts, ids, qb)
+                if cand is None:
+                    cand = r
+                else:
+                    cand = merge_task(cand[0], cand[1], r[0], r[1])
+                    report.merges += 1
+            out_d.append(cand[0])
+            out_i.append(cand[1])
 
-    distances = jnp.concatenate(out_d, 0)
-    indices = jnp.concatenate(out_i, 0)
-    distances, indices = jax.block_until_ready((distances, indices))
-    report.wall_s = time.perf_counter() - t0
+        distances = jnp.concatenate(out_d, 0)
+        indices = jnp.concatenate(out_i, 0)
+        distances, indices = jax.block_until_ready((distances, indices))
     return KNNResult(distances=distances, indices=indices, report=report)

@@ -1,49 +1,42 @@
-"""Task engine — per-block dispatch (baseline) vs fused per-partition execution.
+"""Task engine — jit-cached task registration and cost accounting.
 
-This is where the granularity coupling the paper attacks becomes concrete.
 In COMPSs/Dask a *task* is a scheduler-dispatched unit; in JAX the analogue
 is one invocation of a compiled executable (host dispatch + launch).  The
-engine runs map-reduce style workloads in four modes:
+:class:`TaskEngine` registers functions as tasks (jitted once per key) and
+counts dispatches, traces, merges and bytes moved in an
+:class:`EngineReport`, so benchmarks can reproduce the paper's figures and
+the structural claims (C1–C4 in DESIGN.md).
 
-``baseline``      one dispatch per block (paper Listing 4) + a merge task.
-``spliter``       SplIter (paper Listing 5): one dispatch per *partition*;
-                  the task iterates its local blocks with a fused
-                  ``lax.scan`` carrying the partition-local reduction —
-                  zero data movement, locality preserved.
-``spliter_mat``   SplIter with materialized partitions (paper §7): the
-                  partition's blocks are concatenated *locally* and the
-                  task consumes one contiguous buffer.
-``rechunk``       the competitor: materialize the dataset at one block per
-                  location (inter-location traffic!), then per-block tasks.
+Execution strategies live in ``repro.api``: a lazy
+:class:`~repro.api.Collection` builds an :class:`~repro.api.ExecutionPlan`
+which an :class:`~repro.api.Executor` backend (``LocalExecutor``,
+``ThreadedExecutor``) runs under a typed
+:class:`~repro.api.ExecutionPolicy` (``Baseline`` / ``SplIter`` /
+``Rechunk``).  Iterative applications pass a persistent executor so task
+*definitions* are traced once and re-dispatched every iteration — matching
+how COMPSs/Dask register a task once and invoke it many times.
+Loop-carried values (e.g. centroids) travel as traced ``extra_args``,
+never as baked-in constants.
 
-Every mode reports dispatch counts, traced-compile counts, wall time and
-bytes moved so benchmarks can reproduce the paper's figures and the
-structural claims (C1–C4 in DESIGN.md).
-
-Iterative applications (k-means, Cascade SVM) pass a persistent
-:class:`TaskEngine` so task *definitions* are traced once and re-dispatched
-every iteration — matching how COMPSs/Dask register a task once and invoke
-it many times.  Loop-carried values (e.g. centroids) travel as traced
-``extra_args``, never as baked-in constants.
+:func:`run_map_reduce` — the seed's stringly-typed entry point — remains
+only as a deprecated shim over the plan-based layer.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-import time
+import threading
+import warnings
 from typing import Any, Callable, Hashable, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.blocked import BlockedArray
-from repro.core.rechunk import rechunk
-from repro.core.spliter import Partition, spliter
 
 __all__ = ["EngineReport", "TaskEngine", "run_map_reduce", "MODES"]
 
+# Legacy mode strings, accepted by the deprecated shim (and mapped onto the
+# typed policies by repro.api.as_policy).
 MODES = ("baseline", "spliter", "spliter_mat", "rechunk")
 
 BlockFn = Callable[..., Any]           # (*blocks, *extra_args) -> partial pytree
@@ -57,7 +50,7 @@ class EngineReport:
     mode: str
     dispatches: int = 0          # compiled-executable invocations (the "tasks")
     merges: int = 0              # merge-task dispatches (subset of dispatches)
-    traces: int = 0              # distinct traced/compiled programs
+    traces: int = 0              # distinct traced/compiled programs (this report)
     bytes_moved: int = 0         # inter-location traffic (rechunk only; SplIter: 0)
     wall_s: float = 0.0
 
@@ -74,14 +67,28 @@ class EngineReport:
 
 
 class TaskEngine:
-    """Caches compiled 'tasks' and counts dispatches (the @task decorator)."""
+    """Caches compiled 'tasks' and counts dispatches (the @task decorator).
+
+    Trace accounting: ``traces_total`` counts every distinct registration
+    over the engine's lifetime; each report shows the *delta* accrued during
+    its own window (snapshotted at :meth:`new_report`), so iterative
+    workloads attribute traces to the iteration that actually paid them
+    instead of crediting whichever report happened to be current.
+
+    Counter updates are lock-protected: ``ThreadedExecutor`` dispatches
+    tasks from one worker thread per location.
+    """
 
     def __init__(self):
         self._cache: dict[Hashable, Callable] = {}
+        self._lock = threading.Lock()
+        self.traces_total = 0
+        self._trace_mark = 0
         self.report = EngineReport(mode="?")
 
     def new_report(self, mode: str) -> EngineReport:
         self.report = EngineReport(mode=mode)
+        self._trace_mark = self.traces_total
         return self.report
 
     def task(self, fn: Callable, *, key: Hashable = None) -> Callable:
@@ -91,32 +98,15 @@ class TaskEngine:
             jfn = jax.jit(fn)
 
             def dispatch(*args, _jfn=jfn, _self=self, **kw):
-                _self.report.dispatches += 1
+                with _self._lock:
+                    _self.report.dispatches += 1
                 return _jfn(*args, **kw)
 
             self._cache[key] = dispatch
-            self.report.traces += 1
+            with self._lock:
+                self.traces_total += 1
+                self.report.traces = self.traces_total - self._trace_mark
         return self._cache[key]
-
-
-def _merge_task(engine: TaskEngine, combine: CombineFn, partials: list[Any]) -> Any:
-    """Single merge task over the stacked partials (paper's @reduction task)."""
-
-    def merge(stacked):
-        def body(acc, p):
-            return combine(acc, p), None
-
-        first = jax.tree.map(lambda s: s[0], stacked)
-        rest = jax.tree.map(lambda s: s[1:], stacked)
-        acc, _ = jax.lax.scan(body, first, rest)
-        return acc
-
-    if len(partials) == 1:
-        return partials[0]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *partials)
-    out = engine.task(merge, key=("merge", combine))(stacked)
-    engine.report.merges += 1
-    return out
 
 
 def run_map_reduce(
@@ -129,95 +119,32 @@ def run_map_reduce(
     extra_args: tuple = (),
     engine: TaskEngine | None = None,
 ) -> tuple[Any, EngineReport]:
-    """Run ``reduce(combine, [block_fn(*blocks_i, *extra_args) for i])``.
+    """DEPRECATED shim over the plan-based layer — use :mod:`repro.api`.
 
-    ``inputs`` are blocking-aligned collections (e.g. Cascade SVM's points
-    and labels).  ``extra_args`` are traced operands shared by every task
-    (e.g. current centroids) — they are *arguments*, not constants, so
-    iterative callers re-dispatch without re-tracing.
+    ``run_map_reduce(inputs, f, c, mode=m)`` is equivalent to::
 
-    Returns ``(result, report)``.  The result is mode-independent up to
-    floating-point reassociation (hypothesis-tested invariant).
+        Collection.from_blocked(inputs).split(as_policy(m))
+            .map_blocks(f, extra_args=...).reduce(c)
+            .compute(executor=LocalExecutor(engine=engine))
+
+    Returns ``(result, report)`` exactly as before; results are
+    policy-independent up to floating-point reassociation.
     """
-    assert mode in MODES, mode
-    x0 = inputs[0]
-    for a in inputs[1:]:
-        assert a.num_blocks == x0.num_blocks, "inputs must be blocking-aligned"
-        assert np.array_equal(a.placements, x0.placements)
-    engine = engine or TaskEngine()
-    report = engine.new_report(mode)
-    n_in = len(inputs)
+    warnings.warn(
+        "run_map_reduce(mode=...) is deprecated; build a plan with "
+        "repro.api.Collection and run it with an Executor "
+        "(see DESIGN.md §8 for the migration table)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import Collection, LocalExecutor, as_policy
 
-    t0 = time.perf_counter()
-
-    if mode in ("baseline", "rechunk"):
-        arrs = list(inputs)
-        if mode == "rechunk":
-            # One block per location: the competitor's granularity fix.
-            target = math.ceil(x0.num_rows / x0.num_locations)
-            new_arrs = []
-            for a in arrs:
-                na, st = rechunk(a, target)
-                report.bytes_moved += st.bytes_moved
-                new_arrs.append(na)
-            arrs = new_arrs
-        t = engine.task(block_fn, key=("block", block_fn))
-        partials = [
-            t(*(a.blocks[i] for a in arrs), *extra_args)
-            for i in range(arrs[0].num_blocks)
-        ]
-        result = _merge_task(engine, combine, partials)
-
-    elif mode in ("spliter", "spliter_mat"):
-        parts = spliter(x0, partitions_per_location=partitions_per_location)
-
-        def partition_task(*operands):
-            data, extra = operands[:n_in], operands[n_in:]
-
-            def body(acc, blk):
-                p = block_fn(*blk, *extra)
-                return combine(acc, p), None
-
-            first = block_fn(*(s[0] for s in data), *extra)
-            acc, _ = jax.lax.scan(body, first, jax.tree.map(lambda s: s[1:], data))
-            return acc
-
-        partials = []
-        for part in parts:
-            zipped = [
-                Partition(source=a, location=part.location, block_ids=part.block_ids)
-                for a in inputs
-            ]
-            if mode == "spliter_mat":
-                # Materialized partition (paper §7): local concat, one call.
-                bufs = tuple(z.materialize() for z in zipped)
-                t = engine.task(block_fn, key=("block", block_fn))
-                partials.append(t(*bufs, *extra_args))
-            else:
-                # Fused iteration: ONE dispatch scanning the local blocks,
-                # carrying the partition-local reduction (paper Listing 5's
-                # compute_partition, expressed as lax.scan).  Ragged tails
-                # (dataset size not a multiple of the block size — normal
-                # for Dask/dislib arrays) scan per same-shape run, so a
-                # partition costs at most one extra dispatch for its tail.
-                by_shape: dict[tuple, list[int]] = {}
-                for j, bid in enumerate(part.block_ids):
-                    shp = x0.blocks[bid].shape
-                    by_shape.setdefault(shp, []).append(j)
-                t = engine.task(
-                    partition_task, key=("part", block_fn, combine, n_in)
-                )
-                for idxs in by_shape.values():
-                    stacks = tuple(
-                        jnp.stack([z.blocks[j] for j in idxs], axis=0)
-                        for z in zipped
-                    )
-                    partials.append(t(*stacks, *extra_args))
-        result = _merge_task(engine, combine, partials)
-
-    else:  # pragma: no cover
-        raise ValueError(mode)
-
-    result = jax.block_until_ready(result)
-    report.wall_s = time.perf_counter() - t0
-    return result, report
+    policy = as_policy(mode, partitions_per_location=partitions_per_location)
+    res = (
+        Collection.from_blocked(list(inputs))
+        .split(policy)
+        .map_blocks(block_fn, extra_args=tuple(extra_args))
+        .reduce(combine)
+        .compute(executor=LocalExecutor(engine=engine))
+    )
+    return res.value, res.report

@@ -82,31 +82,52 @@ class BlockedBatchPipeline:
 
     # ---- prefetching iterator ---------------------------------------------
 
-    def _worker(self, start_step: int):
+    def _worker(self, start_step: int, q: queue.Queue, stop: threading.Event):
+        # q/stop are passed in (not read off self) so a superseded worker
+        # keeps draining against ITS queue/event and can never be revived
+        # by a later re-iteration swapping the attributes underneath it.
         s = start_step
-        while not self._stop.is_set():
+        while not stop.is_set():
             item = (s, self._assemble(s))
-            while not self._stop.is_set():
+            while not stop.is_set():
                 try:
-                    self._q.put(item, timeout=0.1)
+                    q.put(item, timeout=0.1)
                     break
                 except queue.Full:
                     continue
             s += 1
 
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        # Re-iterating must not leak the previous prefetch worker: stop and
+        # join it first, then start a fresh worker bound to a fresh
+        # queue/event pair at the current cursor.
+        self.close()
+        self._stop = threading.Event()
         self._q = queue.Queue(maxsize=self._prefetch)
-        self._stop.clear()
         self._thread = threading.Thread(
-            target=self._worker, args=(self.state.step,), daemon=True
+            target=self._worker,
+            args=(self.state.step, self._q, self._stop),
+            daemon=True,
         )
         self._thread.start()
+        # Bind this iteration's queue/event locally: a superseded iterator
+        # must drain its own buffer and stop — never steal from (or advance
+        # the cursor of) a newer iteration that rebound the attributes.
+        q, stop = self._q, self._stop
         while True:
-            step, batch = self._q.get()
-            self.state.step = step + 1
+            try:
+                step, batch = q.get(timeout=0.1)
+            except queue.Empty:
+                if stop.is_set():
+                    return
+                continue
+            if not stop.is_set():
+                self.state.step = step + 1
             yield batch
 
     def close(self):
+        """Stop the prefetch worker.  Idempotent; safe with no worker."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=2.0)
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout=2.0)

@@ -1,0 +1,40 @@
+"""jax version compatibility shims for the distribution substrate.
+
+``jax.shard_map`` (with ``check_vma``) only exists on newer jax; older
+releases ship it as ``jax.experimental.shard_map.shard_map`` with the
+``check_rep`` spelling.  Every shard_map in this repo goes through
+:func:`shard_map` so the call sites stay on the modern API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` with a fallback for older jax.
+
+    ``psum(1, axis)`` is the historical idiom: it is special-cased to fold
+    to a concrete integer, which is exactly what the newer helper returns.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+try:  # jax >= 0.6: public API
+    from jax import shard_map as _new_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _new_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+
+except ImportError:  # older jax: experimental module, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _exp_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )

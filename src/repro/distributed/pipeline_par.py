@@ -22,7 +22,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.distributed.compat import shard_map
 
 __all__ = ["gpipe"]
 

@@ -122,7 +122,7 @@ def _lower_train(
         step=NamedSharding(mesh, P()),
     )
     b_sh = {
-        k: NamedSharding(mesh, P(None, dp) + (None,) * (v.ndim - 2))
+        k: NamedSharding(mesh, P(None, dp, *(None,) * (v.ndim - 2)))
         for k, v in blocks.items()
     }
     rules = train_rules_sp(mesh) if sp else train_rules(mesh)
@@ -156,7 +156,7 @@ def _lower_prefill(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell):
 
     p_sh = params_shardings(params, mesh, fsdp_axis=_serving_fsdp(cfg))
     b_sh = {
-        k: NamedSharding(mesh, P(dp) + (None,) * (v.ndim - 1))
+        k: NamedSharding(mesh, P(dp, *(None,) * (v.ndim - 1)))
         for k, v in specs.items()
     }
     c_sh = cache_shardings(cache, mesh)

@@ -12,19 +12,17 @@ import numpy as np
 
 
 def _mesh(shape, axes):
-    import jax
+    from repro.launch.mesh import compat_make_mesh
 
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def check_hierarchical_psum() -> None:
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
 
+    from repro.distributed.compat import shard_map
     from repro.distributed.collectives import hierarchical_psum
 
     mesh = _mesh((2, 4), ("pod", "data"))
@@ -50,8 +48,8 @@ def check_compressed_psum() -> None:
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
 
+    from repro.distributed.compat import shard_map
     from repro.distributed.collectives import compressed_psum_pod
 
     mesh = _mesh((2, 4), ("pod", "data"))
@@ -126,7 +124,7 @@ def check_sharded_train_step() -> None:
 
     p_sh = params_shardings(params, mesh)
     b_sh = {
-        k: NamedSharding(mesh, P(None, ("pod", "data")) + (None,) * (v.ndim - 2))
+        k: NamedSharding(mesh, P(None, ("pod", "data"), *(None,) * (v.ndim - 2)))
         for k, v in blocks.items()
     }
     params = jax.device_put(params, p_sh)

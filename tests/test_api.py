@@ -1,0 +1,259 @@
+"""The plan-based execution layer: policy equivalence, executors, the shim.
+
+Covers DESIGN.md §7.4/§6: every policy agrees on associative reductions up
+to fp reassociation — including ragged tails and partitions_per_location>1
+— and ThreadedExecutor is bit-identical to LocalExecutor; plus the
+deprecated run_map_reduce shim (warns, matches the new API).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    Baseline,
+    Collection,
+    LocalExecutor,
+    PlanError,
+    Rechunk,
+    SplIter,
+    ThreadedExecutor,
+    as_policy,
+)
+from repro.core.blocked import BlockedArray, contiguous_placement, round_robin_placement
+from repro.core.engine import run_map_reduce
+
+POLICIES = [
+    Baseline(),
+    SplIter(),
+    SplIter(materialize=True),
+    SplIter(partitions_per_location=3),
+    SplIter(partitions_per_location=3, materialize=True),
+    Rechunk(),
+    Rechunk(target_rows=17),
+]
+
+# (rows, block_rows, locations, placement) — uniform, ragged tail, ragged with
+# many locations, single location, more locations than blocks.
+DATASETS = [
+    (96, 8, 4, round_robin_placement),
+    (97, 12, 3, round_robin_placement),      # ragged tail
+    (341, 100, 5, contiguous_placement),     # ragged, uneven fill
+    (40, 7, 1, contiguous_placement),        # single location, ragged
+    (5, 2, 8, round_robin_placement),        # locations > blocks
+]
+
+
+def _blocked(rows, block_rows, locs, placement, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(rows, d)).astype(np.float32)
+    return pts, BlockedArray.from_array(
+        jnp.asarray(pts), block_rows, num_locations=locs, policy=placement
+    )
+
+
+def _moments_fn(b):
+    return jnp.sum(b, 0), jnp.sum(b * b, 0), jnp.asarray(b.shape[0], jnp.float32)
+
+
+def _moments_combine(a, b):
+    return a[0] + b[0], a[1] + b[1], a[2] + b[2]
+
+
+class TestModeEquivalence:
+    @pytest.mark.parametrize("ds", DATASETS, ids=lambda d: f"n{d[0]}b{d[1]}l{d[2]}")
+    def test_all_policies_agree(self, ds):
+        """C4: any policy grouping agrees up to float reassociation."""
+        pts, ba = _blocked(*ds)
+        ref = (pts.sum(0), (pts * pts).sum(0), np.float32(len(pts)))
+        for pol in POLICIES:
+            res = (
+                Collection.from_blocked(ba)
+                .split(pol)
+                .map_blocks(_moments_fn)
+                .reduce(_moments_combine)
+                .compute()
+            )
+            for got, want in zip(res.value, ref):
+                np.testing.assert_allclose(
+                    np.asarray(got), want, rtol=2e-4, atol=2e-4, err_msg=repr(pol)
+                )
+            assert res.report.bytes_moved == 0 or isinstance(pol, Rechunk)
+
+    @pytest.mark.parametrize("ds", DATASETS, ids=lambda d: f"n{d[0]}b{d[1]}l{d[2]}")
+    @pytest.mark.parametrize("pol", POLICIES, ids=lambda p: repr(p))
+    def test_threaded_identical_to_local(self, ds, pol):
+        """Local vs Threaded on the SAME policy must be bit-identical."""
+        _, ba = _blocked(*ds)
+        plan = (
+            Collection.from_blocked(ba)
+            .split(pol)
+            .map_blocks(_moments_fn)
+            .reduce(_moments_combine)
+        )
+        seq = plan.compute(executor=LocalExecutor())
+        thr = plan.compute(executor=ThreadedExecutor())
+        for a, b in zip(seq.value, thr.value):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert thr.report.dispatches == seq.report.dispatches
+        assert thr.report.bytes_moved == seq.report.bytes_moved
+
+    def test_spliter_dispatch_bound(self):
+        """C1: spliter dispatches ≤ partitions + ragged-tail extras + merge."""
+        _, ba = _blocked(97, 12, 3, round_robin_placement)
+        for ppl in (1, 2, 4):
+            res = (
+                Collection.from_blocked(ba)
+                .split(SplIter(partitions_per_location=ppl))
+                .map_blocks(_moments_fn)
+                .reduce(_moments_combine)
+                .compute()
+            )
+            # ≤ 2 shape-runs per partition (body + tail) + 1 merge.
+            assert res.report.dispatches <= 2 * 3 * ppl + 1
+
+
+class TestExecutorStatefulness:
+    def test_rechunk_paid_once_with_persistent_executor(self):
+        """C3: the prepare cache bills rechunk traffic exactly once."""
+        _, ba = _blocked(96, 8, 4, round_robin_placement)
+        ex = LocalExecutor()
+        data = Collection.from_blocked(ba).split(Rechunk())
+        plan = data.map_blocks(_moments_fn).reduce(_moments_combine)
+        first = plan.compute(executor=ex)
+        second = plan.compute(executor=ex)
+        assert first.report.bytes_moved > 0
+        assert second.report.bytes_moved == 0
+        assert second.report.dispatches == first.report.dispatches
+
+    def test_traces_attributed_to_paying_report(self):
+        """Per-report traces are the delta over the report's window."""
+        _, ba = _blocked(96, 8, 4, round_robin_placement)
+        ex = LocalExecutor()
+        plan = (
+            Collection.from_blocked(ba)
+            .split(SplIter())
+            .map_blocks(_moments_fn)
+            .reduce(_moments_combine)
+        )
+        r1 = plan.compute(executor=ex).report
+        r2 = plan.compute(executor=ex).report
+        assert r1.traces == 2          # partition task + merge task
+        assert r2.traces == 0          # cache hits only
+        assert ex.engine.traces_total == 2
+
+    def test_scope_accumulates_custom_dispatches(self):
+        _, ba = _blocked(40, 7, 1, contiguous_placement)
+        ex = LocalExecutor()
+        with ex.scope("spliter") as report:
+            res = (
+                Collection.from_blocked(ba)
+                .split(SplIter())
+                .map_blocks(_moments_fn)
+                .reduce(_moments_combine)
+                .compute(executor=ex)
+            )
+            assert res.report is report
+            t = ex.task(lambda v: v * 2, key="double")
+            t(jnp.ones(3))
+        assert report.dispatches >= 2
+        assert report.wall_s > 0
+
+
+class TestMapPartitions:
+    @pytest.mark.parametrize("pol", [Baseline(), SplIter(), SplIter(2), Rechunk()],
+                             ids=lambda p: p.mode_name + str(getattr(p, "partitions_per_location", "")))
+    def test_views_cover_all_rows_once(self, pol):
+        pts, ba = _blocked(97, 12, 3, round_robin_placement)
+        views = (
+            Collection.from_blocked(ba)
+            .split(pol)
+            .map_partitions(lambda v: (v.location, v.item_indexes))
+            .compute()
+            .value
+        )
+        allidx = np.concatenate([idx for _, idx in views])
+        assert sorted(allidx.tolist()) == list(range(97))
+
+    def test_zip_materialized_stays_aligned(self):
+        rng = np.random.default_rng(5)
+        pts = rng.normal(size=(60, 2)).astype(np.float32)
+        lab = np.arange(60, dtype=np.float32)
+        xb = BlockedArray.from_array(jnp.asarray(pts), 7, num_locations=3,
+                                     policy=round_robin_placement)
+        yb = BlockedArray.from_array(jnp.asarray(lab), 7, num_locations=3,
+                                     policy=round_robin_placement)
+        groups = (
+            Collection.zip(Collection.from_blocked(xb), Collection.from_blocked(yb))
+            .split(SplIter())
+            .map_partitions(lambda v: (v.materialized, v.item_indexes))
+            .compute()
+            .value
+        )
+        for (bx, by), idx in groups:
+            np.testing.assert_array_equal(np.asarray(by), lab[idx])
+            np.testing.assert_array_equal(np.asarray(bx), pts[idx])
+
+
+class TestPlanValidation:
+    def test_reduce_without_map_fails(self):
+        _, ba = _blocked(40, 7, 1, contiguous_placement)
+        with pytest.raises(PlanError):
+            Collection.from_blocked(ba).reduce(lambda a, b: a + b).plan()
+
+    def test_misaligned_zip_fails(self):
+        _, a = _blocked(40, 7, 2, contiguous_placement)
+        _, b = _blocked(40, 5, 2, contiguous_placement)
+        with pytest.raises(PlanError):
+            (Collection.zip(Collection.from_blocked(a), Collection.from_blocked(b))
+             .map_blocks(_moments_fn).plan())
+
+    def test_describe_names_every_stage(self):
+        _, ba = _blocked(40, 7, 2, contiguous_placement)
+        text = (
+            Collection.from_blocked(ba)
+            .split(SplIter())
+            .map_blocks(_moments_fn)
+            .reduce(_moments_combine)
+            .plan()
+            .describe()
+        )
+        for token in ("Source", "Split", "MapBlocks", "Reduce", "SplIter"):
+            assert token in text
+
+    def test_as_policy_coercion(self):
+        assert as_policy("baseline") == Baseline()
+        assert as_policy("spliter_mat", partitions_per_location=2) == SplIter(2, True)
+        assert as_policy(Rechunk()) == Rechunk()
+        with pytest.raises(ValueError):
+            as_policy("warp-drive")
+
+
+class TestDeprecatedShim:
+    def test_warns_and_matches_new_api(self):
+        pts, ba = _blocked(97, 12, 3, round_robin_placement)
+        with pytest.warns(DeprecationWarning, match="run_map_reduce"):
+            old_val, old_rep = run_map_reduce(
+                [ba], _moments_fn, _moments_combine, mode="spliter"
+            )
+        new = (
+            Collection.from_blocked(ba)
+            .split(SplIter())
+            .map_blocks(_moments_fn)
+            .reduce(_moments_combine)
+            .compute()
+        )
+        for a, b in zip(old_val, new.value):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert old_rep.dispatches == new.report.dispatches
+        assert old_rep.mode == "spliter"
+
+    @pytest.mark.parametrize("mode", ["baseline", "spliter", "spliter_mat", "rechunk"])
+    def test_all_legacy_modes_still_run(self, mode):
+        pts, ba = _blocked(96, 8, 4, round_robin_placement)
+        with pytest.warns(DeprecationWarning):
+            val, rep = run_map_reduce([ba], _moments_fn, _moments_combine, mode=mode)
+        np.testing.assert_allclose(
+            np.asarray(val[0]), pts.sum(0), rtol=2e-4, atol=2e-4
+        )
+        assert rep.mode == mode

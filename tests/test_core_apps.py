@@ -4,8 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MODES, BlockedArray, round_robin_placement
+from repro.api import Baseline, Rechunk, SplIter, ThreadedExecutor
+from repro.core import BlockedArray, round_robin_placement
 from repro.core.apps import cascade_svm, histogram, kmeans, knn
+
+POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
 
 
 @pytest.fixture(scope="module")
@@ -21,8 +24,8 @@ class TestHistogram:
     def test_all_modes_exact_match(self, points):
         x, ba = points
         ref = None
-        for mode in MODES:
-            h, rep = histogram(ba, bins=4, mode=mode)
+        for pol in POLICIES:
+            h, rep = histogram(ba, bins=4, policy=pol)
             assert int(h.sum()) == 512
             if ref is None:
                 ref = np.asarray(h)
@@ -30,7 +33,7 @@ class TestHistogram:
 
     def test_matches_numpy_histogramdd(self, points):
         x, ba = points
-        h, _ = histogram(ba, bins=4, lo=0.0, hi=1.0, mode="spliter")
+        h, _ = histogram(ba, bins=4, lo=0.0, hi=1.0, policy=SplIter())
         expected, _ = np.histogramdd(
             np.asarray(x), bins=4, range=[(0, 1)] * 3
         )
@@ -38,34 +41,39 @@ class TestHistogram:
 
     def test_dispatch_counts(self, points):
         _, ba = points
-        _, rb = histogram(ba, mode="baseline")
-        _, rs = histogram(ba, mode="spliter")
+        _, rb = histogram(ba, policy=Baseline())
+        _, rs = histogram(ba, policy=SplIter())
         assert rb.dispatches == ba.num_blocks + 1       # per block + merge
         assert rs.dispatches == ba.num_locations + 1    # per partition + merge
         assert rs.bytes_moved == 0
 
     def test_rechunk_moves_bytes_under_round_robin(self, points):
         _, ba = points
-        _, rr = histogram(ba, mode="rechunk")
+        _, rr = histogram(ba, policy=Rechunk())
         assert rr.bytes_moved > 0
 
 
 class TestKMeans:
     def test_modes_converge_identically(self, points):
         _, ba = points
-        res = {m: kmeans(ba, k=4, iters=5, mode=m) for m in MODES}
-        base = np.asarray(res["baseline"].centers)
-        for m in MODES:
+        res = {p: kmeans(ba, k=4, iters=5, policy=p) for p in POLICIES}
+        base = np.asarray(res[Baseline()].centers)
+        for p in POLICIES:
             np.testing.assert_allclose(
-                np.asarray(res[m].centers), base, rtol=2e-4, atol=2e-5
+                np.asarray(res[p].centers), base, rtol=2e-4, atol=2e-5
             )
+        # ThreadedExecutor is bit-identical to LocalExecutor on the same policy
+        thr = kmeans(ba, k=4, iters=5, policy=SplIter(), executor=ThreadedExecutor())
+        np.testing.assert_array_equal(
+            np.asarray(thr.centers), np.asarray(res[SplIter()].centers)
+        )
 
     def test_iterative_dispatch_amortization(self, points):
         """Task definitions are traced once; dispatches scale with iterations
         for the baseline but stay at #partitions for SplIter."""
         _, ba = points
-        rb = kmeans(ba, k=4, iters=5, mode="baseline")
-        rs = kmeans(ba, k=4, iters=5, mode="spliter")
+        rb = kmeans(ba, k=4, iters=5, policy=Baseline())
+        rs = kmeans(ba, k=4, iters=5, policy=SplIter())
         assert rb.total_dispatches == 5 * (ba.num_blocks + 1)
         assert rs.total_dispatches == 5 * (ba.num_locations + 1)
         # one trace of the block task + one of the merge across ALL iters
@@ -73,7 +81,7 @@ class TestKMeans:
 
     def test_centers_reduce_inertia(self, points):
         x, ba = points
-        r = kmeans(ba, k=8, iters=10, mode="spliter")
+        r = kmeans(ba, k=8, iters=10, policy=SplIter())
         xs = np.asarray(x)
         d2 = ((xs[:, None, :] - np.asarray(r.centers)[None]) ** 2).sum(-1)
         inertia = d2.min(1).mean()
@@ -101,7 +109,7 @@ class TestCascadeSVM:
     def test_classifies_train_data(self, labeled):
         x, y, xb, yb = labeled
         r = cascade_svm(
-            xb, yb, num_sv=128, steps=300, iterations=2, mode="spliter", c=10.0
+            xb, yb, num_sv=128, steps=300, iterations=2, policy=SplIter(), c=10.0
         )
         pred = np.sign(np.asarray(r.decision(jnp.asarray(x))))
         acc = (pred == y).mean()
@@ -110,8 +118,8 @@ class TestCascadeSVM:
     def test_label_alignment_via_get_indexes(self, labeled):
         """Shuffled-placement labels stay aligned with their points."""
         x, y, xb, yb = labeled
-        for mode in ("baseline", "spliter", "rechunk"):
-            r = cascade_svm(xb, yb, num_sv=16, steps=100, iterations=1, mode=mode)
+        for pol in (Baseline(), SplIter(), Rechunk()):
+            r = cascade_svm(xb, yb, num_sv=16, steps=100, iterations=1, policy=pol)
             # every reported SV must be an actual (x, y) pair from the data
             svx, svy = np.asarray(r.sv_x), np.asarray(r.sv_y)
             for i in range(len(svx)):
@@ -121,8 +129,8 @@ class TestCascadeSVM:
 
     def test_spliter_fewer_dispatches(self, labeled):
         _, _, xb, yb = labeled
-        rb = cascade_svm(xb, yb, num_sv=16, steps=50, iterations=1, mode="baseline")
-        rs = cascade_svm(xb, yb, num_sv=16, steps=50, iterations=1, mode="spliter")
+        rb = cascade_svm(xb, yb, num_sv=16, steps=50, iterations=1, policy=Baseline())
+        rs = cascade_svm(xb, yb, num_sv=16, steps=50, iterations=1, policy=SplIter())
         assert rs.report.dispatches < rb.report.dispatches
 
 
@@ -140,7 +148,7 @@ class TestKNN:
 
     def test_matches_bruteforce_numpy(self, data):
         fit, q, fb, qb = data
-        r = knn(fb, qb, k=5, mode="spliter")
+        r = knn(fb, qb, k=5, policy=SplIter())
         d2 = ((q[:, None, :] - fit[None]) ** 2).sum(-1)
         expected = np.argsort(d2, axis=1)[:, :5]
         got = np.asarray(r.indices)
@@ -154,8 +162,8 @@ class TestKNN:
     def test_global_item_indexes(self, data):
         """Returned ids are GLOBAL fit rows — the get_item_indexes contract."""
         fit, q, fb, qb = data
-        for mode in MODES:
-            r = knn(fb, qb, k=3, mode=mode)
+        for pol in POLICIES:
+            r = knn(fb, qb, k=3, policy=pol)
             ids = np.asarray(r.indices)
             assert ids.min() >= 0 and ids.max() < len(fit)
             d = np.asarray(r.distances)
@@ -167,8 +175,8 @@ class TestKNN:
 
     def test_consolidation_shrinks_tasks_and_merges(self, data):
         _, _, fb, qb = data
-        rb = knn(fb, qb, k=5, mode="baseline").report
-        rs = knn(fb, qb, k=5, mode="spliter").report
+        rb = knn(fb, qb, k=5, policy=Baseline()).report
+        rs = knn(fb, qb, k=5, policy=SplIter()).report
         # paper Table 1 / Fig 21: tasks = #structures x #query blocks
         assert rs.dispatches < rb.dispatches
         assert rs.merges < rb.merges

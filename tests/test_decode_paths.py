@@ -14,9 +14,9 @@ from repro.models import build_model
 
 
 def _mesh11():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro.launch.mesh import compat_make_mesh
+
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ["qwen3-32b", "mixtral-8x7b", "qwen2-72b"])

@@ -1,18 +1,22 @@
 """Ragged-tail blocking: dataset sizes that are not multiples of the block
-size (normal for Dask/dislib arrays) must work in every engine mode."""
+size (normal for Dask/dislib arrays) must work under every policy."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import Baseline, Collection, Rechunk, SplIter
 from repro.core.apps.histogram import histogram
 from repro.core.blocked import BlockedArray, round_robin_placement
-from repro.core.engine import run_map_reduce
 
 
-@pytest.mark.parametrize("mode", ["baseline", "spliter", "spliter_mat", "rechunk"])
+@pytest.mark.parametrize(
+    "policy",
+    [Baseline(), SplIter(), SplIter(materialize=True), Rechunk()],
+    ids=lambda p: p.mode_name,
+)
 @pytest.mark.parametrize("rows,block_rows", [(1000, 96), (341, 100), (97, 96)])
-def test_ragged_histogram_all_modes(mode, rows, block_rows):
+def test_ragged_histogram_all_policies(policy, rows, block_rows):
     rng = np.random.default_rng(0)
     pts = rng.random((rows, 3)).astype(np.float32)
     x = BlockedArray.from_array(
@@ -20,7 +24,7 @@ def test_ragged_histogram_all_modes(mode, rows, block_rows):
         policy=round_robin_placement,
     )
     assert not x.uniform or rows % block_rows == 0
-    h, rep = histogram(x, bins=4, mode=mode)
+    h, rep = histogram(x, bins=4, policy=policy)
     ref = np.histogramdd(pts, bins=4, range=[(0, 1)] * 3)[0]
     np.testing.assert_array_equal(np.asarray(h), ref)
 
@@ -32,8 +36,12 @@ def test_ragged_spliter_dispatch_accounting():
     x = BlockedArray.from_array(
         jnp.asarray(pts), 96, num_locations=2, policy=round_robin_placement,
     )
-    result, rep = run_map_reduce(
-        [x], lambda b: b.sum(0), lambda a, b: a + b, mode="spliter"
+    result, rep = (
+        Collection.from_blocked(x)
+        .split(SplIter())
+        .map_blocks(lambda b: b.sum(0))
+        .reduce(lambda a, b: a + b)
+        .compute()
     )
     np.testing.assert_allclose(np.asarray(result), pts.sum(0), rtol=1e-5)
     # 2 locations; the tail block adds ≤1 dispatch per location + 1 merge
