@@ -18,9 +18,10 @@ from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.histogram import histogram
 from repro.core.blocked import BlockedArray, round_robin_placement
 
-from benchmarks.harness import Table, timeit, winsorized
+from benchmarks.harness import Table, report_row, smoke_executors, timeit, winsorized
 
 POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
+SMOKE_POLICIES = POLICIES + (SplIter(fusion="pallas"),)
 
 
 def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 5, seed=0):
@@ -44,6 +45,20 @@ def _run(x, policy, *, bins, repeats):
     stats = winsorized(timeit(once, repeats=repeats))
     rep = rep_box["rep"]
     return stats, rep
+
+
+def smoke() -> list[dict]:
+    """Toy-size policy×executor grid for the CI smoke job (BENCH_histogram)."""
+    x = _dataset(2, 4, 2048, d=2)
+    rows = []
+    for pol in SMOKE_POLICIES:
+        for name, ex in smoke_executors():
+            histogram(x, bins=8, policy=pol, executor=ex)       # trace + prepare
+            _, rep = histogram(x, bins=8, policy=pol, executor=ex)  # steady state
+            rows.append(report_row(pol, name, rep))
+            if hasattr(ex, "close"):
+                ex.close()
+    return rows
 
 
 def bench(quick: bool = True) -> list[Table]:

@@ -14,9 +14,10 @@ from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.kmeans import kmeans
 from repro.core.blocked import BlockedArray, round_robin_placement
 
-from benchmarks.harness import Table, timeit, winsorized
+from benchmarks.harness import Table, policy_label, smoke_executors, timeit, winsorized
 
 POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
+SMOKE_POLICIES = POLICIES + (SplIter(fusion="pallas"),)
 
 
 def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 20, seed=0):
@@ -40,6 +41,32 @@ def _run(x, policy, *, k, iters, repeats):
     stats = winsorized(timeit(once, repeats=repeats))
     res = box["res"]
     return stats, res
+
+
+def smoke() -> list[dict]:
+    """Toy-size policy×executor grid for the CI smoke job (BENCH_kmeans).
+
+    Iterative app: rows aggregate the whole 3-iteration run (dispatches and
+    bytes summed, traces summed — 0 after warmup shows the jit-cache hit).
+    """
+    x = _dataset(2, 4, 1024, d=4)
+    rows = []
+    for pol in SMOKE_POLICIES:
+        for name, ex in smoke_executors():
+            kmeans(x, k=4, iters=3, policy=pol, executor=ex)        # warm
+            res = kmeans(x, k=4, iters=3, policy=pol, executor=ex)  # steady state
+            rows.append({
+                "policy": policy_label(pol),
+                "executor": name,
+                "wall_s": round(res.total_wall_s, 5),
+                "dispatches": res.total_dispatches,
+                "merges": sum(r.merges for r in res.reports),
+                "traces": sum(r.traces for r in res.reports),
+                "bytes_moved": res.total_bytes_moved,
+            })
+            if hasattr(ex, "close"):
+                ex.close()
+    return rows
 
 
 def bench(quick: bool = True) -> list[Table]:

@@ -17,7 +17,7 @@ from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.knn import _lookup, knn
 from repro.core.blocked import BlockedArray, round_robin_placement
 
-from benchmarks.harness import Table, timeit, winsorized
+from benchmarks.harness import Table, report_row, smoke_executors, timeit, winsorized
 
 POLICIES = (Baseline(), SplIter(), Rechunk())
 
@@ -27,6 +27,22 @@ def _blocked(arr, block_rows, locs):
         jnp.asarray(arr), block_rows, num_locations=locs,
         policy=round_robin_placement,
     )
+
+
+def smoke() -> list[dict]:
+    """Toy-size policy×executor grid for the CI smoke job (BENCH_knn)."""
+    rng = np.random.default_rng(0)
+    d = 3
+    fit = _blocked(rng.random((2 * 4 * 256, d)).astype(np.float32), 256, 2)
+    qry = _blocked(rng.random((512, d)).astype(np.float32), 256, 2)
+    rows = []
+    for pol in POLICIES:
+        for name, ex in smoke_executors():
+            res = knn(fit, qry, k=4, policy=pol, executor=ex)
+            rows.append(report_row(pol, name, res.report))
+            if hasattr(ex, "close"):
+                ex.close()
+    return rows
 
 
 def bench(quick: bool = True) -> list[Table]:

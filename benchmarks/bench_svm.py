@@ -15,7 +15,7 @@ from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.cascade_svm import cascade_svm
 from repro.core.blocked import BlockedArray, round_robin_placement
 
-from benchmarks.harness import Table, timeit, winsorized
+from benchmarks.harness import Table, report_row, smoke_executors, timeit, winsorized
 
 POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
 
@@ -44,6 +44,21 @@ def _run(x, y, policy, *, steps, repeats):
 
     stats = winsorized(timeit(once, repeats=repeats))
     return stats, box["res"]
+
+
+def smoke() -> list[dict]:
+    """Toy-size policy×executor grid for the CI smoke job (BENCH_svm)."""
+    x, y = _dataset(2, 4, 256, d=4)
+    rows = []
+    for pol in POLICIES:
+        for name, ex in smoke_executors():
+            res = cascade_svm(
+                x, y, num_sv=16, steps=30, iterations=1, policy=pol, executor=ex
+            )
+            rows.append(report_row(pol, name, res.report))
+            if hasattr(ex, "close"):
+                ex.close()
+    return rows
 
 
 def bench(quick: bool = True) -> list[Table]:

@@ -74,5 +74,30 @@ def dispatch_overhead(quick: bool = True) -> Table:
     return t
 
 
+def smoke() -> list[dict]:
+    """Tiny accum-mode sweep for the CI smoke job (BENCH_trainer).
+
+    The trainer has no executor axis; ``policy`` carries the accumulation
+    mode (the trainer-level baseline/SplIter/materialized triangle).
+    """
+    rows = []
+    for mode in ("per_block", "spliter", "materialized"):
+        cfg = TrainConfig(
+            global_batch=8, num_blocks=4, seq_len=32,
+            steps=2, accum_mode=mode, warmup_steps=1,
+        )
+        out = Trainer(_preset("lm1m"), cfg).run(resume=False)
+        rows.append({
+            "policy": mode,
+            "executor": "trainer",
+            "wall_s": round(out["wall_s"], 5),
+            "dispatches": out["dispatches"],
+            "merges": 0,
+            "traces": 0,
+            "bytes_moved": 0,
+        })
+    return rows
+
+
 def bench(quick: bool = True) -> list[Table]:
     return [trainer_accum_modes(quick), dispatch_overhead(quick)]

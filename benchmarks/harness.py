@@ -95,3 +95,40 @@ def _fmt(v: Any) -> str:
     if isinstance(v, float):
         return f"{v:.4g}"
     return str(v)
+
+
+# ---------------------------------------------------------------------------
+# smoke-job support (CI perf trajectory: BENCH_<app>.json per suite)
+# ---------------------------------------------------------------------------
+
+
+def policy_label(policy) -> str:
+    """Row label for a policy: mode name + the fusion knob when non-default."""
+    label = getattr(policy, "mode_name", str(policy))
+    if getattr(policy, "fusion", "auto") != "auto":
+        label += f"+{policy.fusion}"
+    return label
+
+
+def report_row(policy, executor_name: str, report, *, wall_s: float | None = None) -> dict:
+    """One BENCH_<app>.json row: structural metrics + wall for a config."""
+    return {
+        "policy": policy_label(policy),
+        "executor": executor_name,
+        "wall_s": round(report.wall_s if wall_s is None else wall_s, 5),
+        "dispatches": report.dispatches,
+        "merges": report.merges,
+        "traces": report.traces,
+        "bytes_moved": report.bytes_moved,
+    }
+
+
+def smoke_executors():
+    """Fresh (name, executor) pairs for the policy×executor smoke grid."""
+    from repro.api import LocalExecutor, MeshExecutor, ThreadedExecutor
+
+    return [
+        ("local", LocalExecutor()),
+        ("threaded", ThreadedExecutor()),
+        ("mesh", MeshExecutor()),
+    ]

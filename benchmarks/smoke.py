@@ -1,0 +1,70 @@
+"""Benchmark smoke job:  PYTHONPATH=src python -m benchmarks.smoke
+
+Runs every benchmark suite at toy size — the policy×executor grid per app —
+and emits one ``BENCH_<app>.json`` artifact each (wall, dispatches, merges,
+traces, bytes_moved per row).  CI runs this on every push so the perf
+trajectory of the execution layer (dispatch counts, collective traffic,
+jit-cache behaviour) is tracked from PR 2 on; the structural columns are
+exact on any host, wall-clock is indicative only.
+
+Exits non-zero if any suite fails, so a regression that breaks an app at
+toy size fails the job rather than silently dropping its artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.environ.get("REPRO_BENCH_DIR", "results/bench"))
+    ap.add_argument("--suite", action="append", default=None,
+                    help="subset of suites (default: all)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_histogram,
+        bench_kmeans,
+        bench_knn,
+        bench_svm,
+        bench_trainer,
+    )
+
+    suites = {
+        "histogram": bench_histogram,
+        "kmeans": bench_kmeans,
+        "svm": bench_svm,
+        "knn": bench_knn,
+        "trainer": bench_trainer,
+    }
+    selected = args.suite or list(suites)
+    os.makedirs(args.out, exist_ok=True)
+
+    t_all = time.perf_counter()
+    for name in selected:
+        t0 = time.perf_counter()
+        rows = suites[name].smoke()
+        elapsed = time.perf_counter() - t0
+        path = os.path.join(args.out, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(
+                {"app": name, "elapsed_s": round(elapsed, 2), "rows": rows},
+                f,
+                indent=1,
+            )
+        print(f"[{name}] {len(rows)} rows in {elapsed:.1f}s → {path}", flush=True)
+        for r in rows:
+            print(
+                f"  {r['policy']:<16} {r['executor']:<9} "
+                f"wall={r['wall_s']:<9} disp={r['dispatches']:<5} "
+                f"traces={r['traces']:<3} bytes={r['bytes_moved']}"
+            )
+    print(f"smoke done in {time.perf_counter() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,12 +5,21 @@ Public surface:
 * :class:`Collection` — fluent, lazy plan builder over blocked arrays:
   ``Collection.from_array(...).split(policy).map_blocks(fn).reduce(c)``.
 * :class:`ExecutionPolicy` and its concrete policies :class:`Baseline`,
-  :class:`SplIter`, :class:`Rechunk` — the typed replacement for the
-  seed's stringly ``mode`` flag.
-* :class:`Executor` protocol with :class:`LocalExecutor` (sequential,
-  seed-equivalent) and :class:`ThreadedExecutor` (one worker thread per
-  location) backends; both report costs via
-  :class:`~repro.core.engine.EngineReport`.
+  :class:`SplIter` (with its ``fusion="auto"|"scan"|"pallas"`` knob),
+  :class:`Rechunk` — the typed replacement for the seed's stringly ``mode``
+  flag.
+* The two-stage execution split: a **lowering pass**
+  (:func:`~repro.api.lowering.lower`) turns ``(plan, policy, backend
+  Capabilities)`` into a frozen :class:`TaskGraph` of placed, keyed
+  :class:`~repro.api.lowering.Task` descriptors; **scheduling** backends
+  consume it — :class:`LocalExecutor` (sequential, seed-equivalent),
+  :class:`ThreadedExecutor` (persistent worker thread per location) and
+  :class:`MeshExecutor` (sharded dispatch over a JAX device mesh).  All
+  report costs via :class:`~repro.core.engine.EngineReport`.
+* :class:`~repro.api.kernels.PartitionKernel` /
+  :func:`~repro.api.kernels.register_partition_kernel` — the registry
+  through which a ``map_blocks`` fn declares a fused Pallas partition
+  implementation (one ``pallas_call`` per partition).
 * :class:`ExecutionPlan` — the small IR a Collection chain builds;
   :class:`PartitionView` — what ``map_partitions`` callbacks receive;
   :class:`ComputeResult` — ``(value, report)``.
@@ -24,6 +33,14 @@ from repro.api.executors import (
     PartitionView,
     ThreadedExecutor,
 )
+from repro.api.kernels import (
+    PartitionKernel,
+    pallas_interpret,
+    partition_kernel_for,
+    register_partition_kernel,
+)
+from repro.api.lowering import Capabilities, Task, TaskGraph, lower, stable_task_key
+from repro.api.mesh_executor import MeshExecutor
 from repro.api.plan import ExecutionPlan, PlanError
 from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter, as_policy
 
@@ -32,8 +49,18 @@ __all__ = [
     "ComputeResult",
     "Executor",
     "LocalExecutor",
-    "PartitionView",
     "ThreadedExecutor",
+    "MeshExecutor",
+    "PartitionView",
+    "Capabilities",
+    "Task",
+    "TaskGraph",
+    "lower",
+    "stable_task_key",
+    "PartitionKernel",
+    "register_partition_kernel",
+    "partition_kernel_for",
+    "pallas_interpret",
     "ExecutionPlan",
     "PlanError",
     "Baseline",

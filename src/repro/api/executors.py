@@ -1,24 +1,28 @@
-"""Executor backends — run an :class:`~repro.api.plan.ExecutionPlan`.
+"""Executor backends — the scheduling half of the execution layer.
 
-The seed's ``run_map_reduce`` hard-wired execution strategy selection into
-one function; this module splits it into an :class:`Executor` contract with
-two backends:
+Execution is split into two explicit stages (DESIGN.md §5):
+
+1. **lowering** (:mod:`repro.api.lowering`): ``(ExecutionPlan, policy,
+   backend capabilities)`` → a frozen :class:`~repro.api.lowering.TaskGraph`
+   of placed, keyed task descriptors — all fusion/task-construction
+   decisions happen there;
+2. **scheduling** (this module): an :class:`Executor` prepares the policy's
+   placement (cached, LRU-bounded), lowers the plan against its declared
+   :class:`~repro.api.lowering.Capabilities`, and schedules the TaskGraph.
+
+Backends:
 
 :class:`LocalExecutor`
-    The seed :class:`~repro.core.engine.TaskEngine` behaviour, refactored:
-    sequential dispatch on the calling thread, with the same
+    Sequential dispatch on the calling thread, with the seed's
     dispatch/trace/bytes accounting in :class:`~repro.core.engine.EngineReport`.
 :class:`ThreadedExecutor`
-    One worker thread per *location*, overlapping per-partition (or
-    per-block) task dispatch across locations — the first step toward
-    genuinely concurrent location-parallel execution.  Partials are
-    collected by task index and merged in plan order, so results are
-    bit-identical to :class:`LocalExecutor`.
-
-Both backends cache the *prepared* form of ``(inputs, policy)`` — the
-partition structure, or the rechunked arrays with their traffic bill — so
-iterative workloads pay the split/rechunk cost once (paper §6.3.1) without
-app-level special casing.
+    A persistent worker thread per *location* (created on first use, reused
+    across ``execute`` calls so iterative workloads don't pay thread startup
+    per iteration), overlapping per-partition dispatch across locations.
+    Partials are collected by task index and merged in plan order, so
+    results are bit-identical to :class:`LocalExecutor`.
+:class:`~repro.api.mesh_executor.MeshExecutor`
+    Sharded dispatch over a JAX device mesh (own module).
 
 Executors also expose the engine-level ``task()`` registration for app
 stages that do not fit the map/reduce plan shape (k-NN's lookup/merge
@@ -29,18 +33,30 @@ report.
 
 from __future__ import annotations
 
+import atexit
+import collections
 import contextlib
 import dataclasses
 import math
+import queue
 import threading
 import time
+import weakref
 from typing import Any, Callable, Hashable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.api.plan import ExecutionPlan, MapReduceSpec
+from repro.api.lowering import (
+    Capabilities,
+    MergeSpec,
+    PartitionView,
+    PlacedGroup,
+    Task,
+    TaskGraph,
+    lower,
+)
+from repro.api.plan import ExecutionPlan
 from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter
 from repro.core.blocked import BlockedArray
 from repro.core.engine import EngineReport, TaskEngine
@@ -69,49 +85,6 @@ class ComputeResult:
         yield self.report
 
 
-@dataclasses.dataclass(frozen=True)
-class PartitionView:
-    """A single-location group of aligned blocks, as seen by map_partitions.
-
-    Generalizes :class:`~repro.core.spliter.Partition` to multi-input plans
-    (e.g. Cascade SVM's aligned points+labels) and to the Baseline policy,
-    where every block is its own single-block partition.
-    """
-
-    arrays: tuple[BlockedArray, ...]
-    location: int
-    block_ids: tuple[int, ...]
-
-    @property
-    def blocks(self) -> list[jax.Array]:
-        """Blocks of the first (or only) input array."""
-        return self.blocks_of(0)
-
-    def blocks_of(self, i: int) -> list[jax.Array]:
-        return [self.arrays[i].blocks[b] for b in self.block_ids]
-
-    @property
-    def num_rows(self) -> int:
-        return int(sum(self.arrays[0].block_rows[b] for b in self.block_ids))
-
-    @property
-    def item_indexes(self) -> np.ndarray:
-        """Global row ids of every element (paper §4.1 ``get_item_indexes``)."""
-        x = self.arrays[0]
-        offs = x.row_offsets()
-        rows = x.block_rows
-        return np.concatenate(
-            [np.arange(offs[b], offs[b] + rows[b], dtype=np.int64) for b in self.block_ids]
-        )
-
-    @property
-    def materialized(self) -> tuple[jax.Array, ...]:
-        """Local concat of each input's blocks — intra-location copy only."""
-        return tuple(
-            jnp.concatenate(self.blocks_of(i), axis=0) for i in range(len(self.arrays))
-        )
-
-
 @runtime_checkable
 class Executor(Protocol):
     """The contract every execution backend satisfies (DESIGN.md §5)."""
@@ -124,49 +97,32 @@ class Executor(Protocol):
     def report(self) -> EngineReport: ...
 
 
-@dataclasses.dataclass(frozen=True)
-class _Group:
-    """Prepared task group: which blocks one task consumes, and where."""
-
-    location: int
-    block_ids: tuple[int, ...]
-
-
 @dataclasses.dataclass
 class _Prepared:
     """Cached result of applying a policy to a set of inputs.
 
     ``inputs`` retains the original arrays: the cache key uses their ids,
     so the entry must pin them alive — otherwise a gc'd input whose id is
-    reused by a new BlockedArray would silently hit a stale entry.
+    reused by a new BlockedArray would silently hit a stale entry.  The
+    cache itself is a small LRU (see ``_PlanExecutor._prepare``) so a
+    long-lived executor pins at most ``prepare_cache_size`` datasets, not
+    every dataset it ever saw.
     """
 
     inputs: tuple[BlockedArray, ...]
     arrays: tuple[BlockedArray, ...]
-    groups: list[_Group]
+    groups: list[PlacedGroup]
 
 
-def _partition_body(block_fn: Callable, combine: Callable, n_in: int) -> Callable:
-    """The fused per-partition task (paper Listing 5 as a ``lax.scan``)."""
+def _merge_partials(engine: TaskEngine, merge: MergeSpec, partials: list[Any]) -> Any:
+    """Single merge task over the stacked partials (paper's @reduction task).
 
-    def partition_task(*operands):
-        data, extra = operands[:n_in], operands[n_in:]
+    Keyed by the MergeSpec's stable key — NOT the combine object, which apps
+    typically recreate per call — so iterative workloads hit the jit cache.
+    """
+    combine = merge.combine
 
-        def body(acc, blk):
-            p = block_fn(*blk, *extra)
-            return combine(acc, p), None
-
-        first = block_fn(*(s[0] for s in data), *extra)
-        acc, _ = jax.lax.scan(body, first, jax.tree.map(lambda s: s[1:], data))
-        return acc
-
-    return partition_task
-
-
-def _merge_partials(engine: TaskEngine, combine: Callable, partials: list[Any]) -> Any:
-    """Single merge task over the stacked partials (paper's @reduction task)."""
-
-    def merge(stacked):
+    def merge_fn(stacked):
         def body(acc, p):
             return combine(acc, p), None
 
@@ -178,18 +134,35 @@ def _merge_partials(engine: TaskEngine, combine: Callable, partials: list[Any]) 
     if len(partials) == 1:
         return partials[0]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *partials)
-    out = engine.task(merge, key=("merge", combine))(stacked)
+    out = engine.task(merge_fn, key=merge.key)(stacked)
     engine.report.merges += 1
     return out
 
 
 class _PlanExecutor:
-    """Shared plan normalization/prepare/merge; subclasses choose scheduling."""
+    """Shared prepare/lower/merge; subclasses schedule the TaskGraph."""
+
+    #: bound on cached (inputs, policy) preparations (LRU eviction).
+    prepare_cache_size: int = 8
 
     def __init__(self, engine: TaskEngine | None = None):
         self.engine = engine or TaskEngine()
-        self._prepare_cache: dict[tuple, _Prepared] = {}
+        self._prepare_cache: collections.OrderedDict[tuple, _Prepared] = (
+            collections.OrderedDict()
+        )
         self._scope_depth = 0
+
+    # -- backend capabilities (consumed by the lowering pass) -----------------
+
+    @property
+    def capabilities(self) -> Capabilities:
+        # prefer_pallas is resolved lazily: compiled Pallas beats the scan on
+        # TPU, interpret mode does not — and querying the backend at import
+        # time would lock jax device state before tests can set XLA_FLAGS.
+        return Capabilities(
+            name=type(self).__name__,
+            prefer_pallas=jax.default_backend() == "tpu",
+        )
 
     # -- engine passthroughs -------------------------------------------------
 
@@ -224,13 +197,10 @@ class _PlanExecutor:
         t0 = time.perf_counter()
 
         prepared = self._prepare(spec.inputs, spec.policy, report)
-        if spec.kind == "map_partitions":
-            tasks = self._partition_view_tasks(spec, prepared)
-        else:
-            tasks = self._map_block_tasks(spec, prepared)
-        partials = self._run(tasks)
-        if spec.combine is not None:
-            value = _merge_partials(self.engine, spec.combine, partials)
+        graph = lower(spec, prepared.arrays, prepared.groups, self.capabilities)
+        partials = self._schedule(graph)
+        if graph.merge is not None:
+            value = _merge_partials(self.engine, graph.merge, partials)
         else:
             value = partials
         value = jax.block_until_ready(value)
@@ -239,7 +209,13 @@ class _PlanExecutor:
             report.wall_s = time.perf_counter() - t0
         return ComputeResult(value=value, report=report)
 
-    # -- prepare: policy -> (arrays, task groups), cached ---------------------
+    def lower(self, plan: ExecutionPlan) -> TaskGraph:
+        """Lower a plan for this backend without running it (inspection)."""
+        spec = plan.spec
+        prepared = self._prepare(spec.inputs, spec.policy, self.engine.report)
+        return lower(spec, prepared.arrays, prepared.groups, self.capabilities)
+
+    # -- prepare: policy -> (arrays, task groups), LRU-cached ------------------
 
     def _prepare(
         self,
@@ -250,6 +226,7 @@ class _PlanExecutor:
         key = (tuple(id(a) for a in inputs), policy)
         hit = self._prepare_cache.get(key)
         if hit is not None:
+            self._prepare_cache.move_to_end(key)
             return hit
 
         x0 = inputs[0]
@@ -262,138 +239,151 @@ class _PlanExecutor:
                 arrays.append(na)
             arrays = tuple(arrays)
             groups = [
-                _Group(int(arrays[0].placements[i]), (i,))
+                PlacedGroup(int(arrays[0].placements[i]), (i,))
                 for i in range(arrays[0].num_blocks)
             ]
         elif isinstance(policy, SplIter):
             parts = spliter(x0, partitions_per_location=policy.partitions_per_location)
             arrays = inputs
-            groups = [_Group(p.location, p.block_ids) for p in parts]
+            groups = [PlacedGroup(p.location, p.block_ids) for p in parts]
         elif isinstance(policy, Baseline):
             arrays = inputs
             groups = [
-                _Group(int(x0.placements[i]), (i,)) for i in range(x0.num_blocks)
+                PlacedGroup(int(x0.placements[i]), (i,)) for i in range(x0.num_blocks)
             ]
         else:  # pragma: no cover
             raise TypeError(f"unknown policy {policy!r}")
 
         prepared = _Prepared(inputs=inputs, arrays=arrays, groups=groups)
         self._prepare_cache[key] = prepared
+        while len(self._prepare_cache) > self.prepare_cache_size:
+            self._prepare_cache.popitem(last=False)
         return prepared
-
-    # -- task construction -----------------------------------------------------
-
-    def _map_block_tasks(self, spec: MapReduceSpec, prepared: _Prepared):
-        engine = self.engine
-        arrays, groups = prepared.arrays, prepared.groups
-        extra = spec.extra_args
-        n_in = len(arrays)
-        pol = spec.policy
-        tasks: list[tuple[int, Callable[[], Any]]] = []
-
-        if isinstance(pol, SplIter) and not pol.materialize and spec.combine is not None:
-            # Fused iteration: ONE dispatch scanning the partition's local
-            # blocks, carrying the partition-local reduction.  Ragged tails
-            # scan per same-shape run — at most one extra dispatch per tail.
-            t = engine.task(
-                _partition_body(spec.fn, spec.combine, n_in),
-                key=("part", spec.fn, spec.combine, n_in),
-            )
-            for g in groups:
-                by_shape: dict[tuple, list[int]] = {}
-                for b in g.block_ids:
-                    by_shape.setdefault(arrays[0].blocks[b].shape, []).append(b)
-                for ids in by_shape.values():
-                    def thunk(ids=tuple(ids), t=t):
-                        stacks = tuple(
-                            jnp.stack([a.blocks[b] for b in ids], axis=0)
-                            for a in arrays
-                        )
-                        return t(*stacks, *extra)
-
-                    tasks.append((g.location, thunk))
-        elif isinstance(pol, SplIter) and pol.materialize:
-            # Materialized partition (paper §7): local concat, one call.
-            t = engine.task(spec.fn, key=("block", spec.fn))
-            for g in groups:
-                def thunk(g=g, t=t):
-                    bufs = tuple(
-                        jnp.concatenate([a.blocks[b] for b in g.block_ids], axis=0)
-                        for a in arrays
-                    )
-                    return t(*bufs, *extra)
-
-                tasks.append((g.location, thunk))
-        else:
-            # Baseline / Rechunk (single-block groups), or an un-reduced
-            # SplIter map: one dispatch per block.  Emitted in GLOBAL block
-            # order so an un-reduced compute() returns partials aligned
-            # with the blocking regardless of policy/partition layout.
-            t = engine.task(spec.fn, key=("block", spec.fn))
-            placed = sorted(
-                (b, g.location) for g in groups for b in g.block_ids
-            )
-            for b, loc in placed:
-                def thunk(b=b, t=t):
-                    return t(*(a.blocks[b] for a in arrays), *extra)
-
-                tasks.append((loc, thunk))
-        return tasks
-
-    def _partition_view_tasks(self, spec: MapReduceSpec, prepared: _Prepared):
-        arrays = prepared.arrays
-        tasks = []
-        for g in prepared.groups:
-            view = PartitionView(arrays=arrays, location=g.location, block_ids=g.block_ids)
-            tasks.append((g.location, lambda view=view: spec.fn(view)))
-        return tasks
 
     # -- scheduling (backend-specific) ----------------------------------------
 
-    def _run(self, tasks: list[tuple[int, Callable[[], Any]]]) -> list[Any]:
+    def _bind(self, task: Task) -> Callable[[], Any]:
+        """A nullary thunk running one task through the engine's jit cache."""
+        if not task.counted:
+            return lambda: task.fn(*task.operands())
+        t = self.engine.task(task.fn, key=task.key)
+        return lambda: t(*task.operands())
+
+    def _schedule(self, graph: TaskGraph) -> list[Any]:
         raise NotImplementedError
 
 
 class LocalExecutor(_PlanExecutor):
     """Sequential dispatch on the calling thread — the seed TaskEngine path."""
 
-    def _run(self, tasks):
-        return [thunk() for _, thunk in tasks]
+    def _schedule(self, graph: TaskGraph) -> list[Any]:
+        return [self._bind(t)() for t in graph.tasks]
+
+
+class _LocationWorker:
+    """A persistent worker thread draining one location's job queue."""
+
+    def __init__(self, name: str):
+        self._jobs: queue.SimpleQueue = queue.SimpleQueue()
+        self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            job()
+
+    def submit(self, job: Callable[[], None]) -> None:
+        self._jobs.put(job)
+
+    def stop(self) -> None:
+        """Post the poison pill and JOIN: a worker that ran jax work must not
+        still be alive during XLA runtime teardown (C++ terminate at exit)."""
+        self._jobs.put(None)
+        self._thread.join(timeout=5.0)
+
+
+# Live pools, closed at interpreter exit so executors that were never
+# explicitly close()d don't leave worker threads running into teardown.
+_LIVE_POOLS: "weakref.WeakSet[ThreadedExecutor]" = None  # set below
+
+
+def _close_live_pools() -> None:
+    for ex in list(_LIVE_POOLS or ()):
+        ex.close()
 
 
 class ThreadedExecutor(_PlanExecutor):
-    """One worker thread per location: overlapped per-partition dispatch.
+    """One persistent worker thread per location: overlapped dispatch.
+
+    Workers are created lazily per location id and REUSED across ``execute``
+    calls, so iterative workloads pay thread startup once per executor
+    lifetime instead of once per iteration.  Call :meth:`close` (or rely on
+    daemon threads at interpreter exit) to stop them.
 
     Determinism: partials land in a results list indexed by task position
     and the merge runs in plan order on the calling thread, so the value is
     bit-identical to :class:`LocalExecutor` regardless of thread timing.
     """
 
-    def _run(self, tasks):
+    def __init__(self, engine: TaskEngine | None = None):
+        super().__init__(engine)
+        self._workers: dict[int, _LocationWorker] = {}
+        _LIVE_POOLS.add(self)
+
+    def _worker(self, location: int) -> _LocationWorker:
+        w = self._workers.get(location)
+        if w is None:
+            w = self._workers[location] = _LocationWorker(f"repro-loc-{location}")
+        return w
+
+    def _schedule(self, graph: TaskGraph) -> list[Any]:
+        thunks = [self._bind(t) for t in graph.tasks]
         by_loc: dict[int, list[tuple[int, Callable[[], Any]]]] = {}
-        for i, (loc, thunk) in enumerate(tasks):
-            by_loc.setdefault(loc, []).append((i, thunk))
-        if len(by_loc) <= 1:
-            return [thunk() for _, thunk in tasks]
+        for i, t in enumerate(graph.tasks):
+            by_loc.setdefault(t.location, []).append((i, thunks[i]))
+        cur = threading.current_thread()
+        nested = any(w._thread is cur for w in self._workers.values())
+        if len(by_loc) <= 1 or nested:
+            # Single location — or a nested compute() issued from inside one
+            # of our own workers (e.g. a map_partitions callback): submitting
+            # to the pool from a pool thread would deadlock the single-thread
+            # location queue, so run inline on the calling thread instead.
+            return [thunk() for thunk in thunks]
 
-        results: list[Any] = [None] * len(tasks)
+        results: list[Any] = [None] * len(thunks)
         errors: list[BaseException] = []
+        done = threading.Event()
+        remaining = [len(by_loc)]
+        lock = threading.Lock()
 
-        def worker(items):
+        def run(items):
             try:
                 for i, thunk in items:
                     results[i] = thunk()
             except BaseException as e:  # noqa: BLE001 — re-raised on the caller
                 errors.append(e)
+            finally:
+                with lock:
+                    remaining[0] -= 1
+                    if remaining[0] == 0:
+                        done.set()
 
-        threads = [
-            threading.Thread(target=worker, args=(items,), daemon=True)
-            for items in by_loc.values()
-        ]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        for loc, items in by_loc.items():
+            self._worker(loc).submit(lambda items=items: run(items))
+        done.wait()
         if errors:
             raise errors[0]
         return results
+
+    def close(self) -> None:
+        """Stop the worker pool (idempotent; workers respawn on next use)."""
+        for w in self._workers.values():
+            w.stop()
+        self._workers.clear()
+
+
+_LIVE_POOLS = weakref.WeakSet()
+atexit.register(_close_live_pools)

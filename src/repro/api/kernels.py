@@ -1,0 +1,112 @@
+"""Partition-kernel registry — fused Pallas implementations of block fns.
+
+The generic SplIter lowering fuses a partition's per-block work into one
+``lax.scan`` (paper Listing 5).  For block functions with a hand-written
+Pallas partition kernel (``repro.kernels.partition_reduce``) the lowering
+can do strictly better: ONE ``pallas_call`` whose *grid* iterates the
+partition's HBM blocks while the reduction accumulator stays in VMEM —
+the worksharing-task idea of Maroñas et al. (arXiv:2004.03258) expressed
+at the kernel level.
+
+The registry maps a *base* block function to a factory.  App modules
+register their kernels at import time (``repro/core/apps/histogram.py``,
+``.../kmeans.py``); the lowering pass resolves ``spec.fn`` — unwrapping
+``functools.partial`` layers so e.g. ``partial(histogramdd_block, bins=8)``
+finds the histogram kernel with the right static parameters — and emits a
+``partition_pallas`` task when the policy's ``fusion`` knob and the backend
+capabilities allow it.  Contract: for a stacked run ``(nblocks, rows, *row)``
+the kernel's result equals folding ``block_fn`` over the blocks with the
+plan's ``combine`` (up to float reassociation), so fused and generic
+lowerings are interchangeable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Hashable
+
+import jax
+
+__all__ = [
+    "PartitionKernel",
+    "register_partition_kernel",
+    "partition_kernel_for",
+    "pallas_interpret",
+]
+
+
+def pallas_interpret() -> bool:
+    """Whether registered kernels should run the Pallas interpreter.
+
+    Compiled Mosaic on TPU, interpreter elsewhere (CPU tests).  Resolved at
+    call time, not import time, so jax backend state is never touched by a
+    bare import.  Kernel factories thread this into their ``pallas_call``s —
+    a kernel that always interprets would be slower than the scan it
+    replaces on exactly the backend that prefers it.
+    """
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionKernel:
+    """A fused per-partition implementation of one block fn + combine.
+
+    Attributes:
+      name: human-readable kernel name (shows up in ``TaskGraph`` dumps).
+      key: stable jit-cache key — must encode every static parameter baked
+        into ``fn`` (e.g. ``("hist_dd", bins, lo, hi)``) so two plans with
+        different statics never share a compiled program.
+      fn: ``fn(stacked, *extra_args) -> partial`` where ``stacked`` is the
+        partition's same-shape blocks ``(nblocks, rows, *row_shape)`` and
+        the result matches the block-fn/combine fold over those blocks.
+      supports: optional shape guard ``(stacked_shape, extra_args) -> bool``;
+        returning False falls back to the generic scan lowering.
+    """
+
+    name: str
+    key: Hashable
+    fn: Callable
+    supports: Callable[[tuple, tuple], bool] | None = None
+
+    def supported(self, stacked_shape: tuple, extra_args: tuple) -> bool:
+        return self.supports is None or bool(self.supports(stacked_shape, extra_args))
+
+
+# base block fn -> factory(partial_args, partial_kwargs) -> PartitionKernel | None
+_REGISTRY: dict[Callable, Callable[[tuple, dict], PartitionKernel | None]] = {}
+
+
+def register_partition_kernel(
+    block_fn: Callable,
+    factory: Callable[[tuple, dict], PartitionKernel | None],
+) -> None:
+    """Register a fused-kernel factory for ``block_fn``.
+
+    ``factory(args, kwargs)`` receives the positional/keyword arguments
+    accumulated on any ``functools.partial`` wrappers around ``block_fn``
+    (empty tuples when the fn is used bare) and returns a
+    :class:`PartitionKernel`, or None when those statics have no fused
+    implementation.
+    """
+    _REGISTRY[block_fn] = factory
+
+
+def _unwrap(fn: Callable) -> tuple[Callable, tuple, dict]:
+    """Peel ``functools.partial`` layers, merging their args/kwargs."""
+    args: tuple = ()
+    kwargs: dict = {}
+    while isinstance(fn, functools.partial):
+        args = fn.args + args
+        kwargs = {**fn.keywords, **kwargs}
+        fn = fn.func
+    return fn, args, kwargs
+
+
+def partition_kernel_for(fn: Callable) -> PartitionKernel | None:
+    """Resolve the registered fused kernel for a (possibly partial) block fn."""
+    base, args, kwargs = _unwrap(fn)
+    factory = _REGISTRY.get(base)
+    if factory is None:
+        return None
+    return factory(args, kwargs)

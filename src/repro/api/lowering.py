@@ -1,0 +1,467 @@
+"""Lowering pass — (plan spec, prepared placement, capabilities) → TaskGraph.
+
+This is the first half of the execution layer's two-stage split
+(DESIGN.md §5): *lowering* turns a validated
+:class:`~repro.api.plan.MapReduceSpec` plus the prepared placement (the
+policy-derived task groups) into a frozen :class:`TaskGraph` of placed,
+keyed :class:`Task` descriptors; *scheduling* (the executor backends) then
+decides where and when each descriptor runs.  Everything execution-strategy
+dependent — fusion level, task keys, operand construction — is decided
+here, once, so a new backend is "implement scheduling over TaskGraph"
+rather than another fork of the task-construction logic.
+
+Fusion levels for a reduced ``map_blocks`` under ``SplIter``:
+
+``partition_scan``
+    The generic fusion (paper Listing 5): one task per same-shape run of a
+    partition's blocks, ``lax.scan`` carrying the partition-local reduction.
+``partition_pallas``
+    A registered fused kernel (``repro.api.kernels``): one ``pallas_call``
+    whose grid iterates the run's blocks while the accumulator stays in
+    VMEM.  Chosen by the policy's ``fusion`` knob ("pallas", or "auto" on
+    backends that prefer it) with automatic fallback to the scan when no
+    kernel is registered, the kernel rejects the shapes, or the plan has
+    multiple inputs.
+
+Task *keys* are stable across plan rebuilds: :func:`stable_task_key`
+derives a key from code objects, closures and ``functools.partial``
+statics, so an app that recreates its lambdas every call (the historical
+``("merge", combine)`` bug) still hits the engine's jit cache instead of
+re-tracing per call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Hashable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.kernels import PartitionKernel, partition_kernel_for
+from repro.api.plan import MapReduceSpec
+from repro.api.policy import SplIter
+from repro.core.blocked import BlockedArray
+
+__all__ = [
+    "Capabilities",
+    "PartitionView",
+    "PlacedGroup",
+    "Task",
+    "MergeSpec",
+    "TaskGraph",
+    "lower",
+    "stable_task_key",
+]
+
+
+# ---------------------------------------------------------------------------
+# stable task keys (jit-cache identity that survives plan rebuilds)
+# ---------------------------------------------------------------------------
+
+
+def stable_task_key(fn: Callable) -> Hashable:
+    """A hashable identity for ``fn`` stable across re-creations.
+
+    App-level lambdas and ``functools.partial`` wrappers are rebuilt on
+    every call (``histogram()`` makes a fresh ``partial`` and a fresh merge
+    lambda each time); keying the engine's jit cache on the *object* made
+    every call re-trace.  Two callables get the same key iff they share the
+    same code object, the same default arguments, the same closure cell
+    values, and (for partials) the same statics — i.e. they compute the
+    same function.  Anything non-hashable falls back to the object itself
+    (identity keying, the previous behaviour).
+    """
+    if isinstance(fn, functools.partial):
+        inner = stable_task_key(fn.func)
+        try:
+            statics = (tuple(fn.args), tuple(sorted(fn.keywords.items())))
+            hash(statics)
+        except TypeError:
+            return fn
+        return ("partial", inner, statics)
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return fn  # builtins / callables: identity is the best we can do
+    # id(__globals__) guards against identical bytecode resolving different
+    # global bindings (two modules defining the same-looking fn): the module
+    # dict outlives its functions, so the id is stable across re-creations
+    # within a module but distinct across modules.
+    parts: list[Any] = [code, id(getattr(fn, "__globals__", None))]
+    defaults = getattr(fn, "__defaults__", None)
+    cells = getattr(fn, "__closure__", None)
+    try:
+        if defaults:
+            hash(defaults)
+            parts.append(defaults)
+        if cells:
+            vals = tuple(c.cell_contents for c in cells)
+            hash(vals)
+            parts.append(vals)
+    except (TypeError, ValueError):  # unhashable default/cell, or empty cell
+        return fn
+    return ("fn", *parts)
+
+
+# ---------------------------------------------------------------------------
+# backend capabilities
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What an executor backend can (and wants to) run.
+
+    Attributes:
+      name: backend label (diagnostics only).
+      pallas_fusion: backend can execute fused Pallas partition kernels;
+        False lowers everything to the generic scan.
+      prefer_pallas: under ``fusion="auto"`` pick the Pallas kernel when one
+        is registered.  Backends where the kernel runs compiled (TPU) prefer
+        it; interpret-mode backends (CPU tests) keep the scan, which is the
+        per-backend granularity trade-off of Bora et al. (arXiv:2202.11464).
+      grouped_dispatch: backend consumes location groups as single sharded
+        dispatches (MeshExecutor) rather than per-task calls.
+    """
+
+    name: str = "local"
+    pallas_fusion: bool = True
+    prefer_pallas: bool = False
+    grouped_dispatch: bool = False
+
+
+# ---------------------------------------------------------------------------
+# prepared placement + partition views
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacedGroup:
+    """One policy-derived task group: which blocks one task consumes, where."""
+
+    location: int
+    block_ids: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionView:
+    """A single-location group of aligned blocks, as seen by map_partitions.
+
+    Generalizes :class:`~repro.core.spliter.Partition` to multi-input plans
+    (e.g. Cascade SVM's aligned points+labels) and to the Baseline policy,
+    where every block is its own single-block partition.
+    """
+
+    arrays: tuple[BlockedArray, ...]
+    location: int
+    block_ids: tuple[int, ...]
+
+    @property
+    def blocks(self) -> list[jax.Array]:
+        """Blocks of the first (or only) input array."""
+        return self.blocks_of(0)
+
+    def blocks_of(self, i: int) -> list[jax.Array]:
+        return [self.arrays[i].blocks[b] for b in self.block_ids]
+
+    @property
+    def num_rows(self) -> int:
+        return int(sum(self.arrays[0].block_rows[b] for b in self.block_ids))
+
+    @property
+    def item_indexes(self) -> np.ndarray:
+        """Global row ids of every element (paper §4.1 ``get_item_indexes``)."""
+        x = self.arrays[0]
+        offs = x.row_offsets()
+        rows = x.block_rows
+        return np.concatenate(
+            [np.arange(offs[b], offs[b] + rows[b], dtype=np.int64) for b in self.block_ids]
+        )
+
+    @property
+    def materialized(self) -> tuple[jax.Array, ...]:
+        """Local concat of each input's blocks — intra-location copy only."""
+        return tuple(
+            jnp.concatenate(self.blocks_of(i), axis=0) for i in range(len(self.arrays))
+        )
+
+
+# ---------------------------------------------------------------------------
+# the TaskGraph IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One placed, keyed task descriptor.
+
+    ``operands()`` builds the operand tuple lazily (stacking/concatenating
+    block buffers only when the task actually runs); the first ``n_data``
+    operands are per-task data, the rest are plan-wide traced extras shared
+    by every task of the same ``key`` — the distinction grouped backends
+    (MeshExecutor) use to stack data across tasks while replicating extras.
+
+    ``counted=False`` marks tasks that are *driver* work rather than engine
+    dispatches (map_partitions views: the view callback itself dispatches
+    engine tasks).
+    """
+
+    index: int
+    location: int
+    kind: str                # "block" | "partition_scan" | "partition_pallas"
+                             # | "partition_materialized" | "partition_view"
+    key: Hashable
+    fn: Callable
+    operands: Callable[[], tuple]
+    block_ids: tuple[int, ...]
+    n_data: int = 1
+    counted: bool = True
+    kernel_name: str | None = None
+    #: ((shape, dtype_str), ...) of the per-task data operands — lets grouped
+    #: backends bucket same-signature tasks WITHOUT materializing operands.
+    data_shapes: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeSpec:
+    """The final fold over task partials (the paper's @reduction task)."""
+
+    combine: Callable[[Any, Any], Any]
+    key: Hashable
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskGraph:
+    """Frozen result of lowering: placed tasks + the merge contract.
+
+    Executors consume this and nothing else: scheduling a TaskGraph must
+    produce the per-task partials in ``tasks`` order (or a single
+    already-merged value when the backend fuses the merge into its
+    dispatch), then apply ``merge`` in plan order.
+    """
+
+    tasks: tuple[Task, ...]
+    merge: MergeSpec | None
+    spec: MapReduceSpec
+
+    @property
+    def locations(self) -> tuple[int, ...]:
+        return tuple(sorted({t.location for t in self.tasks}))
+
+    def by_location(self) -> dict[int, list[Task]]:
+        out: dict[int, list[Task]] = {}
+        for t in self.tasks:
+            out.setdefault(t.location, []).append(t)
+        return out
+
+    def describe(self) -> str:
+        """One line per task: index, placement, kind, key summary."""
+        lines = []
+        for t in self.tasks:
+            extra = f" kernel={t.kernel_name}" if t.kernel_name else ""
+            lines.append(
+                f"[{t.index}] loc={t.location} {t.kind} blocks={t.block_ids}{extra}"
+            )
+        if self.merge is not None:
+            lines.append(f"[merge] {self.merge.key!r}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def _partition_body(block_fn: Callable, combine: Callable, n_in: int) -> Callable:
+    """The fused per-partition task (paper Listing 5 as a ``lax.scan``)."""
+
+    def partition_task(*operands):
+        data, extra = operands[:n_in], operands[n_in:]
+
+        def body(acc, blk):
+            p = block_fn(*blk, *extra)
+            return combine(acc, p), None
+
+        first = block_fn(*(s[0] for s in data), *extra)
+        acc, _ = jax.lax.scan(body, first, jax.tree.map(lambda s: s[1:], data))
+        return acc
+
+    return partition_task
+
+
+def _pick_fusion(
+    policy,
+    caps: Capabilities,
+    kernel: PartitionKernel | None,
+    stacked_shape: tuple,
+    extra_args: tuple,
+) -> str:
+    """Resolve the SplIter ``fusion`` knob for one same-shape run."""
+    mode = getattr(policy, "fusion", "auto")
+    if mode == "scan" or not caps.pallas_fusion:
+        return "scan"
+    if kernel is None or not kernel.supported(stacked_shape, extra_args):
+        return "scan"  # automatic fallback: no kernel, or shapes rejected
+    if mode == "pallas":
+        return "pallas"
+    return "pallas" if caps.prefer_pallas else "scan"
+
+
+def lower(
+    spec: MapReduceSpec,
+    arrays: tuple[BlockedArray, ...],
+    groups: list[PlacedGroup],
+    caps: Capabilities,
+) -> TaskGraph:
+    """Lower a normalized plan over prepared placement into a TaskGraph.
+
+    ``arrays``/``groups`` are the policy's prepared form (already rechunked
+    for ``Rechunk``; the original arrays plus partition groups otherwise) —
+    executors compute them once per ``(inputs, policy)`` and cache.
+    """
+    merge = (
+        MergeSpec(spec.combine, key=("merge", stable_task_key(spec.combine)))
+        if spec.combine is not None
+        else None
+    )
+
+    if spec.kind == "map_partitions":
+        tasks = _lower_partition_views(spec, arrays, groups)
+    else:
+        tasks = _lower_map_blocks(spec, arrays, groups, caps)
+    return TaskGraph(tasks=tuple(tasks), merge=merge, spec=spec)
+
+
+def _lower_partition_views(spec, arrays, groups) -> list[Task]:
+    tasks = []
+    for g in groups:
+        view = PartitionView(arrays=arrays, location=g.location, block_ids=g.block_ids)
+        tasks.append(
+            Task(
+                index=len(tasks),
+                location=g.location,
+                kind="partition_view",
+                key=None,
+                fn=spec.fn,
+                operands=(lambda view=view: (view,)),
+                block_ids=g.block_ids,
+                n_data=1,
+                counted=False,
+            )
+        )
+    return tasks
+
+
+def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
+    extra = spec.extra_args
+    n_in = len(arrays)
+    pol = spec.policy
+    fn_key = stable_task_key(spec.fn)
+    tasks: list[Task] = []
+
+    fused = isinstance(pol, SplIter) and not pol.materialize and spec.combine is not None
+    if fused:
+        # Fused iteration: ONE dispatch scanning (or pallas-gridding) the
+        # partition's local blocks, carrying the partition-local reduction.
+        # Ragged tails lower per same-shape run — at most one extra task per
+        # tail, so C1's dispatch bound survives the fusion choice.
+        kernel = partition_kernel_for(spec.fn) if n_in == 1 else None
+        scan_fn = _partition_body(spec.fn, spec.combine, n_in)
+        scan_key = ("part", fn_key, stable_task_key(spec.combine), n_in)
+        for g in groups:
+            by_shape: dict[tuple, list[int]] = {}
+            for b in g.block_ids:
+                by_shape.setdefault(arrays[0].blocks[b].shape, []).append(b)
+            for shape, ids in by_shape.items():
+                ids = tuple(ids)
+                stacked_shape = (len(ids), *shape)
+                choice = _pick_fusion(pol, caps, kernel, stacked_shape, extra)
+
+                def operands(ids=ids):
+                    return tuple(
+                        jnp.stack([a.blocks[b] for b in ids], axis=0) for a in arrays
+                    ) + tuple(extra)
+
+                if choice == "pallas":
+                    task_fn, key, kname = kernel.fn, ("pallas", kernel.key), kernel.name
+                else:
+                    task_fn, key, kname = scan_fn, scan_key, None
+                tasks.append(
+                    Task(
+                        index=len(tasks),
+                        location=g.location,
+                        kind=f"partition_{choice}",
+                        key=key,
+                        fn=task_fn,
+                        operands=operands,
+                        block_ids=ids,
+                        n_data=n_in,
+                        kernel_name=kname,
+                        data_shapes=tuple(
+                            (
+                                (len(ids), *a.blocks[ids[0]].shape),
+                                str(a.blocks[ids[0]].dtype),
+                            )
+                            for a in arrays
+                        ),
+                    )
+                )
+    elif isinstance(pol, SplIter) and pol.materialize:
+        # Materialized partition (paper §7): local concat, one call.
+        for g in groups:
+            def operands(g=g):
+                return tuple(
+                    jnp.concatenate([a.blocks[b] for b in g.block_ids], axis=0)
+                    for a in arrays
+                ) + tuple(extra)
+
+            tasks.append(
+                Task(
+                    index=len(tasks),
+                    location=g.location,
+                    kind="partition_materialized",
+                    key=("block", fn_key),
+                    fn=spec.fn,
+                    operands=operands,
+                    block_ids=g.block_ids,
+                    n_data=n_in,
+                    data_shapes=tuple(
+                        (
+                            (
+                                sum(a.blocks[b].shape[0] for b in g.block_ids),
+                                *a.blocks[g.block_ids[0]].shape[1:],
+                            ),
+                            str(a.blocks[g.block_ids[0]].dtype),
+                        )
+                        for a in arrays
+                    ),
+                )
+            )
+    else:
+        # Baseline / Rechunk (single-block groups), or an un-reduced SplIter
+        # map: one task per block, in GLOBAL block order so an un-reduced
+        # compute() returns partials aligned with the blocking regardless of
+        # policy/partition layout.
+        placed = sorted((b, g.location) for g in groups for b in g.block_ids)
+        for b, loc in placed:
+            def operands(b=b):
+                return tuple(a.blocks[b] for a in arrays) + tuple(extra)
+
+            tasks.append(
+                Task(
+                    index=len(tasks),
+                    location=loc,
+                    kind="block",
+                    key=("block", fn_key),
+                    fn=spec.fn,
+                    operands=operands,
+                    block_ids=(b,),
+                    n_data=n_in,
+                    data_shapes=tuple(
+                        (a.blocks[b].shape, str(a.blocks[b].dtype)) for a in arrays
+                    ),
+                )
+            )
+    return tasks

@@ -61,13 +61,22 @@ class SplIter(ExecutionPolicy):
         contiguous buffer before the task consumes it (paper §7; recovers
         the rechunk advantage for compute-bound apps with zero
         inter-location traffic).
+      fusion: how the per-partition iteration is fused by the lowering pass
+        (DESIGN.md §5.2): ``"scan"`` forces the generic ``lax.scan`` body;
+        ``"pallas"`` requests the registered fused Pallas partition kernel
+        (one ``pallas_call`` per same-shape run, accumulator in VMEM),
+        falling back to the scan when no kernel is registered or the
+        shapes are rejected; ``"auto"`` lets the backend capabilities
+        decide (compiled Pallas on TPU, scan elsewhere).
     """
 
     partitions_per_location: int = 1
     materialize: bool = False
+    fusion: str = "auto"
 
     def __post_init__(self):
         assert self.partitions_per_location >= 1, self.partitions_per_location
+        assert self.fusion in ("auto", "scan", "pallas"), self.fusion
 
     @property
     def mode_name(self) -> str:

@@ -4,6 +4,12 @@ Per block: ``histogramdd``; merge: summation.  The SplIter version performs
 the first summation inside the fused per-partition task (locality
 guaranteed), the final merge is a single reduction task — exactly paper
 Listings 4/5, expressed as one plan on the :mod:`repro.api` layer.
+
+A fused Pallas partition kernel
+(:func:`repro.kernels.partition_reduce.partition_histogramdd`) is
+registered for :func:`histogramdd_block`, so ``SplIter(fusion="pallas")``
+lowers each partition to ONE ``pallas_call`` whose grid iterates the
+partition's blocks with the flat-grid accumulator resident in VMEM.
 """
 
 from __future__ import annotations
@@ -14,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import Collection, Executor, ExecutionPolicy, SplIter, as_policy
+from repro.api.kernels import PartitionKernel, pallas_interpret, register_partition_kernel
 from repro.core.blocked import BlockedArray
 from repro.core.engine import EngineReport
+from repro.kernels.partition_reduce import partition_histogramdd
 
 __all__ = ["histogram", "histogramdd_block"]
 
@@ -34,6 +42,30 @@ def histogramdd_block(block: jax.Array, *, bins: int, lo: float, hi: float) -> j
         flat = flat * bins + idx[:, k]
     counts = jnp.zeros((bins**d,), jnp.int32).at[flat].add(1)
     return counts.reshape((bins,) * d)
+
+
+def _histogram_kernel_factory(args: tuple, kwargs: dict) -> PartitionKernel | None:
+    """Fused-kernel factory: partial(histogramdd_block, bins=, lo=, hi=)."""
+    if args or set(kwargs) != {"bins", "lo", "hi"}:
+        return None
+    bins, lo, hi = kwargs["bins"], kwargs["lo"], kwargs["hi"]
+
+    def supports(stacked_shape: tuple, extra_args: tuple) -> bool:
+        # flat one-hot grid: keep the VMEM accumulator (bins**d cells) sane
+        d = stacked_shape[-1]
+        return not extra_args and bins**d <= 1 << 20
+
+    return PartitionKernel(
+        name="partition_histogramdd",
+        key=("hist_dd", bins, lo, hi),
+        fn=lambda stacked: partition_histogramdd(
+            stacked, bins=bins, lo=lo, hi=hi, interpret=pallas_interpret()
+        ),
+        supports=supports,
+    )
+
+
+register_partition_kernel(histogramdd_block, _histogram_kernel_factory)
 
 
 def histogram(

@@ -20,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import Collection, Executor, ExecutionPolicy, LocalExecutor, SplIter, as_policy
+from repro.api.kernels import PartitionKernel, pallas_interpret, register_partition_kernel
 from repro.core.blocked import BlockedArray
 from repro.core.engine import EngineReport
+from repro.kernels.partition_reduce import partition_kmeans
 
 __all__ = ["kmeans", "partial_sum_block", "KMeansResult"]
 
@@ -46,6 +48,23 @@ def partial_sum_block(block: jax.Array, centers: jax.Array):
 
 def _combine(a, b):
     return a[0] + b[0], a[1] + b[1]
+
+
+def _kmeans_kernel_factory(args: tuple, kwargs: dict) -> PartitionKernel | None:
+    """Fused-kernel factory: bare ``partial_sum_block`` (centers via extra_args)."""
+    if args or kwargs:
+        return None
+    return PartitionKernel(
+        name="partition_kmeans",
+        key=("kmeans_partial",),
+        fn=lambda stacked, centers: partition_kmeans(
+            stacked, centers, interpret=pallas_interpret()
+        ),
+        supports=lambda stacked_shape, extra_args: len(extra_args) == 1,
+    )
+
+
+register_partition_kernel(partial_sum_block, _kmeans_kernel_factory)
 
 
 @dataclasses.dataclass

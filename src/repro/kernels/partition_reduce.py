@@ -18,9 +18,19 @@ Two ops, matching the paper's memory-bound applications:
   distances to centroids via MXU matmul, hard assignment, one-hot matmul
   accumulation of per-centroid sums and counts in VMEM.
 
+* :func:`partition_histogramdd` — the d-dimensional generalization used by
+  the histogram app's fused lowering: rows are digitized per dimension,
+  combined into a flat ``bins**d`` cell index, and accumulated scatter-free
+  via a one-hot matmul; the flat-grid accumulator stays in VMEM across the
+  partition's blocks.  Bit-exact against the per-block
+  ``histogramdd_block`` + sum-combine path (integer counts, float32
+  accumulation is exact below 2**24).
+
 Inputs are the partition's stacked blocks ``(nblocks, rows, d)`` — i.e.
 ``Partition.stacked()`` — so the engine can hand a partition straight to
-the kernel.
+the kernel.  The execution layer reaches these through the kernel registry
+(``repro.api.kernels``): lowering a ``SplIter(fusion="pallas")`` plan emits
+one such call per same-shape run of a partition.
 """
 
 from __future__ import annotations
@@ -29,6 +39,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -93,6 +104,71 @@ def partition_histogram(
         interpret=interpret,
     )(stacked)
     return out[0]
+
+
+# ---------------------------------------------------------------------------
+# d-dimensional histogram (the histogram app's block fn, fused)
+# ---------------------------------------------------------------------------
+
+
+def _histdd_kernel(x_ref, o_ref, acc, *, bins, lo, hi, nblocks):
+    ib = pl.program_id(0)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    x = x_ref[0].astype(jnp.float32)            # (rows, d) — one HBM block
+    rows, d = x.shape
+    # digitize per dimension exactly like histogramdd_block (truncate + clip)
+    scaled = (x - lo) / (hi - lo) * bins
+    idx = jnp.clip(scaled.astype(jnp.int32), 0, bins - 1)        # (rows, d)
+    # flat cell id: row-major over the (bins,)*d grid (static unroll over d —
+    # no captured weight constants, which pallas_call rejects)
+    flat = jnp.zeros((rows, 1), jnp.int32)
+    for k in range(d):
+        flat = flat * bins + idx[:, k : k + 1]                   # (rows, 1)
+    cells = bins**d
+    onehot = (
+        flat == jax.lax.broadcasted_iota(jnp.int32, (rows, cells), 1)
+    ).astype(jnp.float32)                        # (rows, cells)
+    ones = jnp.ones((1, rows), jnp.float32)
+    acc[...] += jax.lax.dot_general(
+        ones, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (1, cells)
+
+    @pl.when(ib == nblocks - 1)
+    def _flush():
+        o_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "lo", "hi", "interpret"))
+def partition_histogramdd(
+    stacked: jax.Array,  # (nblocks, rows, d)
+    *,
+    bins: int = 8,
+    lo: float = 0.0,
+    hi: float = 1.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """d-dimensional histogram of a whole partition → ``(bins,)*d`` int32.
+
+    Equals ``sum(histogramdd_block(b) for b in blocks)`` bit-exactly — the
+    contract the kernel registry requires for fused/generic interchange.
+    """
+    nb, rows, d = stacked.shape
+    cells = bins**d
+    out = pl.pallas_call(
+        functools.partial(_histdd_kernel, bins=bins, lo=lo, hi=hi, nblocks=nb),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, rows, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, cells), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, cells), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, cells), jnp.float32)],
+        interpret=interpret,
+    )(stacked)
+    return out[0].astype(jnp.int32).reshape((bins,) * d)
 
 
 # ---------------------------------------------------------------------------

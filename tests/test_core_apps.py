@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import Baseline, Rechunk, SplIter, ThreadedExecutor
+from repro.api import Baseline, LocalExecutor, MeshExecutor, Rechunk, SplIter, ThreadedExecutor
 from repro.core import BlockedArray, round_robin_placement
 from repro.core.apps import cascade_svm, histogram, kmeans, knn
 
@@ -180,3 +180,51 @@ class TestKNN:
         # paper Table 1 / Fig 21: tasks = #structures x #query blocks
         assert rs.dispatches < rb.dispatches
         assert rs.merges < rb.merges
+
+
+class TestPallasFusionApps:
+    """Acceptance: histogram and k-means end-to-end through
+    SplIter(fusion="pallas") on LocalExecutor AND MeshExecutor, equal to
+    Baseline within float32 reassociation, dispatches within the C1 bound."""
+
+    def test_histogram_pallas_local_and_mesh(self, points):
+        _, ba = points
+        ref, _ = histogram(ba, bins=4, policy=Baseline())
+        for ex in (LocalExecutor(), ThreadedExecutor(), MeshExecutor()):
+            h, rep = histogram(
+                ba, bins=4, policy=SplIter(fusion="pallas"), executor=ex
+            )
+            np.testing.assert_array_equal(
+                np.asarray(h), np.asarray(ref), err_msg=type(ex).__name__
+            )
+            assert rep.dispatches <= ba.num_locations + 1  # C1
+            assert rep.bytes_moved == 0                    # 1 host device
+
+    def test_kmeans_pallas_local_and_mesh(self, points):
+        _, ba = points
+        base = kmeans(ba, k=4, iters=5, policy=Baseline())
+        for ex in (LocalExecutor(), MeshExecutor()):
+            r = kmeans(
+                ba, k=4, iters=5, policy=SplIter(fusion="pallas"), executor=ex
+            )
+            np.testing.assert_allclose(
+                np.asarray(r.centers), np.asarray(base.centers),
+                rtol=2e-4, atol=2e-4, err_msg=type(ex).__name__,
+            )
+            assert r.total_dispatches <= 5 * (ba.num_locations + 1)  # C1
+
+    def test_knn_and_svm_run_on_mesh_executor(self):
+        """Apps built on scope()/task()/map_partitions use the fallback
+        scheduling path — every plan the other backends accept runs here."""
+        rng = np.random.default_rng(2)
+        fit = rng.normal(size=(120, 3)).astype(np.float32)
+        q = rng.normal(size=(32, 3)).astype(np.float32)
+        fb = BlockedArray.from_array(
+            jnp.asarray(fit), 16, num_locations=4, policy=round_robin_placement
+        )
+        qb = BlockedArray.from_array(jnp.asarray(q), 16, num_locations=4)
+        r_mesh = knn(fb, qb, k=3, policy=SplIter(), executor=MeshExecutor())
+        r_loc = knn(fb, qb, k=3, policy=SplIter(), executor=LocalExecutor())
+        np.testing.assert_array_equal(
+            np.asarray(r_mesh.indices), np.asarray(r_loc.indices)
+        )

@@ -37,6 +37,7 @@ def _run(mode: str) -> None:
         "elastic_restore",
         "cache_write",
         "heads_cache",
+        "mesh_exec",
     ],
 )
 def test_distributed(mode):

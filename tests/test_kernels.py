@@ -9,8 +9,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:  # only the property sweep at the bottom needs hypothesis
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -97,6 +101,46 @@ class TestPartitionReduce:
         np.testing.assert_allclose(np.asarray(sums), np.asarray(rs), rtol=1e-5, atol=1e-5)
         np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
 
+    @pytest.mark.parametrize("nb,rows,d,bins", [
+        (1, 16, 1, 8), (4, 32, 2, 4), (3, 8, 3, 4), (2, 64, 1, 128),
+    ])
+    def test_histogramdd_matches_block_fn(self, nb, rows, d, bins):
+        """The fused-kernel contract: partition_histogramdd == folding the
+        app's histogramdd_block over the stacked blocks with + (bit-exact)."""
+        from repro.core.apps.histogram import histogramdd_block
+        from repro.kernels.partition_reduce import partition_histogramdd
+
+        st_ = jnp.asarray(RNG.uniform(0, 1, (nb, rows, d)).astype(np.float32))
+        h = partition_histogramdd(st_, bins=bins, lo=0.0, hi=1.0)
+        want = sum(
+            histogramdd_block(st_[i], bins=bins, lo=0.0, hi=1.0) for i in range(nb)
+        )
+        assert h.shape == (bins,) * d and h.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(want))
+        assert int(h.sum()) == nb * rows          # one cell per row
+
+    def test_histogramdd_outliers_clamped(self):
+        from repro.core.apps.histogram import histogramdd_block
+        from repro.kernels.partition_reduce import partition_histogramdd
+
+        st_ = jnp.asarray(RNG.normal(0.5, 2.0, (3, 16, 2)).astype(np.float32))
+        h = partition_histogramdd(st_, bins=4, lo=0.0, hi=1.0)
+        want = sum(histogramdd_block(st_[i], bins=4, lo=0.0, hi=1.0) for i in range(3))
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(want))
+
+    def test_histogramdd_block_count_invariance(self):
+        """Same data, different block counts → identical flat grid (the
+        kernel-level granularity-decoupling claim, d-dimensional)."""
+        from repro.kernels.partition_reduce import partition_histogramdd
+
+        x = jnp.asarray(RNG.uniform(0, 1, (64, 2)).astype(np.float32))
+        outs = [
+            partition_histogramdd(x.reshape(nb, -1, 2), bins=4, lo=0.0, hi=1.0)
+            for nb in (1, 2, 4, 8)
+        ]
+        for h in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(h), np.asarray(outs[0]))
+
     def test_kmeans_block_count_invariance(self):
         """Same data split into different block counts → identical result
         (the kernel-level SplIter granularity-decoupling claim)."""
@@ -144,21 +188,29 @@ class TestSSDScan:
             np.testing.assert_allclose(np.asarray(hf), np.asarray(hbase), rtol=3e-4, atol=3e-4)
 
 
-@given(
-    lq=st.sampled_from([16, 32, 64]),
-    h=st.sampled_from([2, 4]),
-    hkv=st.sampled_from([1, 2]),
-    d=st.sampled_from([8, 16]),
-    causal=st.booleans(),
-    seed=st.integers(0, 2**16),
-)
-@settings(max_examples=12, deadline=None)
-def test_flash_attention_property(lq, h, hkv, d, causal, seed):
-    """Hypothesis sweep: kernel == oracle over random geometry."""
-    rng = np.random.default_rng(seed)
-    q = jnp.asarray(rng.normal(size=(1, lq, h, d)).astype(np.float32))
-    k = jnp.asarray(rng.normal(size=(1, lq, hkv, d)).astype(np.float32))
-    v = jnp.asarray(rng.normal(size=(1, lq, hkv, d)).astype(np.float32))
-    o = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
-    r = ref.attention_ref(q, k, v, causal=causal)
-    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=3e-5, atol=3e-5)
+if HAVE_HYPOTHESIS:
+
+    @given(
+        lq=st.sampled_from([16, 32, 64]),
+        h=st.sampled_from([2, 4]),
+        hkv=st.sampled_from([1, 2]),
+        d=st.sampled_from([8, 16]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_flash_attention_property(lq, h, hkv, d, causal, seed):
+        """Hypothesis sweep: kernel == oracle over random geometry."""
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(1, lq, h, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(1, lq, hkv, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, lq, hkv, d)).astype(np.float32))
+        o = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+        r = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=3e-5, atol=3e-5)
+
+else:  # keep the skip visible in the report when hypothesis is absent
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_flash_attention_property():
+        pass
