@@ -14,13 +14,19 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Baseline, Rechunk, SplIter
+from repro.api import Baseline, LocalExecutor, Rechunk, SplIter
 from repro.core.apps.histogram import histogram
 from repro.core.blocked import BlockedArray, round_robin_placement
 
 from benchmarks.harness import Table, report_row, smoke_executors, timeit, winsorized
 
-POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
+POLICIES = (
+    Baseline(),
+    SplIter(),
+    SplIter(materialize=True),
+    SplIter(partitions_per_location="auto"),
+    Rechunk(),
+)
 SMOKE_POLICIES = POLICIES + (SplIter(fusion="pallas"),)
 
 
@@ -35,16 +41,23 @@ def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 5, seed
 
 
 def _run(x, policy, *, bins, repeats):
+    # One persistent executor per measured row: repeated calls amortize
+    # prepare/tracing (paper §6.3.1) and give the spliter_auto row's tuner
+    # a schedule to advance through.  The traffic bill is paid by the FIRST
+    # call only (the later ones hit the prepare cache), so it is captured
+    # separately — the steady-state report would show bytes_moved == 0 for
+    # Rechunk and hide the very cost these tables contrast.
+    ex = LocalExecutor()
     rep_box = {}
 
     def once():
-        h, rep = histogram(x, bins=bins, policy=policy)
+        h, rep = histogram(x, bins=bins, policy=policy, executor=ex)
+        rep_box.setdefault("prep_bytes", rep.bytes_moved)
         rep_box["rep"] = rep
         return h
 
     stats = winsorized(timeit(once, repeats=repeats))
-    rep = rep_box["rep"]
-    return stats, rep
+    return stats, rep_box["rep"], rep_box["prep_bytes"]
 
 
 def smoke() -> list[dict]:
@@ -53,9 +66,9 @@ def smoke() -> list[dict]:
     rows = []
     for pol in SMOKE_POLICIES:
         for name, ex in smoke_executors():
-            histogram(x, bins=8, policy=pol, executor=ex)       # trace + prepare
-            _, rep = histogram(x, bins=8, policy=pol, executor=ex)  # steady state
-            rows.append(report_row(pol, name, rep))
+            _, cold = histogram(x, bins=8, policy=pol, executor=ex)  # trace+prepare
+            _, rep = histogram(x, bins=8, policy=pol, executor=ex)   # steady state
+            rows.append(report_row(pol, name, rep, prep_bytes=cold.bytes_moved))
             if hasattr(ex, "close"):
                 ex.close()
     return rows
@@ -71,9 +84,9 @@ def bench(quick: bool = True) -> list[Table]:
     for locs in (1, 2, 4, 8):
         x = _dataset(locs, 16, rows_per_loc)
         for pol in POLICIES:
-            stats, rep = _run(x, pol, bins=bins, repeats=repeats)
+            stats, rep, prep_bytes = _run(x, pol, bins=bins, repeats=repeats)
             t9.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
-                   dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
+                   dispatches=rep.dispatches, bytes_moved=prep_bytes,
                    **stats)
 
     # -- Fig 10: weak scaling, balanced (1 block/loc) -------------------------
@@ -81,9 +94,9 @@ def bench(quick: bool = True) -> list[Table]:
     for locs in (1, 2, 4, 8):
         x = _dataset(locs, 1, rows_per_loc)
         for pol in POLICIES:
-            stats, rep = _run(x, pol, bins=bins, repeats=repeats)
+            stats, rep, prep_bytes = _run(x, pol, bins=bins, repeats=repeats)
             t10.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
-                    dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
+                    dispatches=rep.dispatches, bytes_moved=prep_bytes,
                     **stats)
 
     # -- Fig 11: fragmentation sweep at 8 locations ---------------------------
@@ -91,9 +104,9 @@ def bench(quick: bool = True) -> list[Table]:
     for bpl in (1, 4, 16, 48):
         x = _dataset(8, bpl, rows_per_loc)
         for pol in POLICIES:
-            stats, rep = _run(x, pol, bins=bins, repeats=repeats)
+            stats, rep, prep_bytes = _run(x, pol, bins=bins, repeats=repeats)
             t11.add(blocks_per_loc=bpl, mode=pol.mode_name, blocks=x.num_blocks,
-                    dispatches=rep.dispatches, bytes_moved=rep.bytes_moved,
+                    dispatches=rep.dispatches, bytes_moved=prep_bytes,
                     **stats)
 
     return [t9, t10, t11]

@@ -16,7 +16,13 @@ from repro.core.blocked import BlockedArray, round_robin_placement
 
 from benchmarks.harness import Table, policy_label, smoke_executors, timeit, winsorized
 
-POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
+POLICIES = (
+    Baseline(),
+    SplIter(),
+    SplIter(materialize=True),
+    SplIter(partitions_per_location="auto"),
+    Rechunk(),
+)
 SMOKE_POLICIES = POLICIES + (SplIter(fusion="pallas"),)
 
 
@@ -53,8 +59,8 @@ def smoke() -> list[dict]:
     rows = []
     for pol in SMOKE_POLICIES:
         for name, ex in smoke_executors():
-            kmeans(x, k=4, iters=3, policy=pol, executor=ex)        # warm
-            res = kmeans(x, k=4, iters=3, policy=pol, executor=ex)  # steady state
+            warm = kmeans(x, k=4, iters=3, policy=pol, executor=ex)  # warm+prepare
+            res = kmeans(x, k=4, iters=3, policy=pol, executor=ex)   # steady state
             rows.append({
                 "policy": policy_label(pol),
                 "executor": name,
@@ -63,6 +69,9 @@ def smoke() -> list[dict]:
                 "merges": sum(r.merges for r in res.reports),
                 "traces": sum(r.traces for r in res.reports),
                 "bytes_moved": res.total_bytes_moved,
+                "prep_bytes": warm.total_bytes_moved,
+                "granularity": res.reports[-1].granularity,
+                "retunes": res.total_retunes,
             })
             if hasattr(ex, "close"):
                 ex.close()

@@ -11,13 +11,19 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Baseline, Rechunk, SplIter
+from repro.api import Baseline, LocalExecutor, Rechunk, SplIter
 from repro.core.apps.cascade_svm import cascade_svm
 from repro.core.blocked import BlockedArray, round_robin_placement
 
 from benchmarks.harness import Table, report_row, smoke_executors, timeit, winsorized
 
-POLICIES = (Baseline(), SplIter(), SplIter(materialize=True), Rechunk())
+POLICIES = (
+    Baseline(),
+    SplIter(),
+    SplIter(materialize=True),
+    SplIter(partitions_per_location="auto"),
+    Rechunk(),
+)
 
 
 def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 8, seed=0):
@@ -35,15 +41,22 @@ def _dataset(locs: int, blocks_per_loc: int, rows_per_loc: int, d: int = 8, seed
 
 
 def _run(x, y, policy, *, steps, repeats):
+    # One persistent executor per measured row: repeats amortize
+    # prepare/tracing and advance the spliter_auto row's tuning schedule.
+    # The rechunk traffic bill is paid by the FIRST call only (later calls
+    # hit the prepare cache), so capture it separately for the tables.
+    ex = LocalExecutor()
     box = {}
 
     def once():
-        res = cascade_svm(x, y, num_sv=32, steps=steps, iterations=1, policy=policy)
+        res = cascade_svm(x, y, num_sv=32, steps=steps, iterations=1,
+                          policy=policy, executor=ex)
+        box.setdefault("prep_bytes", res.report.bytes_moved)
         box["res"] = res
         return res.sv_x
 
     stats = winsorized(timeit(once, repeats=repeats))
-    return stats, box["res"]
+    return stats, box["res"], box["prep_bytes"]
 
 
 def smoke() -> list[dict]:
@@ -52,10 +65,15 @@ def smoke() -> list[dict]:
     rows = []
     for pol in POLICIES:
         for name, ex in smoke_executors():
-            res = cascade_svm(
-                x, y, num_sv=16, steps=30, iterations=1, policy=pol, executor=ex
-            )
-            rows.append(report_row(pol, name, res.report))
+            cold = None
+            for _ in range(3):  # 3 calls: the auto row's probe schedule advances
+                res = cascade_svm(
+                    x, y, num_sv=16, steps=30, iterations=1, policy=pol,
+                    executor=ex,
+                )
+                cold = cold if cold is not None else res.report
+            rows.append(report_row(pol, name, res.report,
+                                   prep_bytes=cold.bytes_moved))
             if hasattr(ex, "close"):
                 ex.close()
     return rows
@@ -70,27 +88,27 @@ def bench(quick: bool = True) -> list[Table]:
     for locs in (1, 2, 4, 8):
         x, y = _dataset(locs, 8, rows_per_loc)
         for pol in POLICIES:
-            stats, res = _run(x, y, pol, steps=steps, repeats=repeats)
+            stats, res, prep_bytes = _run(x, y, pol, steps=steps, repeats=repeats)
             t15.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.report.dispatches,
-                    bytes_moved=res.report.bytes_moved, **stats)
+                    bytes_moved=prep_bytes, **stats)
 
     t16 = Table("svm_weak_balanced", "paper Fig. 16")
     for locs in (1, 2, 4, 8):
         x, y = _dataset(locs, 1, rows_per_loc)
         for pol in POLICIES:
-            stats, res = _run(x, y, pol, steps=steps, repeats=repeats)
+            stats, res, prep_bytes = _run(x, y, pol, steps=steps, repeats=repeats)
             t16.add(locations=locs, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.report.dispatches,
-                    bytes_moved=res.report.bytes_moved, **stats)
+                    bytes_moved=prep_bytes, **stats)
 
     t17 = Table("svm_fragmentation", "paper Fig. 17")
     for bpl in (1, 2, 4, 8):
         x, y = _dataset(8, bpl, rows_per_loc)
         for pol in POLICIES:
-            stats, res = _run(x, y, pol, steps=steps, repeats=repeats)
+            stats, res, prep_bytes = _run(x, y, pol, steps=steps, repeats=repeats)
             t17.add(blocks_per_loc=bpl, mode=pol.mode_name, blocks=x.num_blocks,
                     dispatches=res.report.dispatches,
-                    bytes_moved=res.report.bytes_moved, **stats)
+                    bytes_moved=prep_bytes, **stats)
 
     return [t15, t16, t17]

@@ -95,6 +95,7 @@ def smoke() -> list[dict]:
             "merges": 0,
             "traces": 0,
             "bytes_moved": 0,
+            "prep_bytes": 0,
         })
     return rows
 

@@ -110,8 +110,22 @@ def policy_label(policy) -> str:
     return label
 
 
-def report_row(policy, executor_name: str, report, *, wall_s: float | None = None) -> dict:
-    """One BENCH_<app>.json row: structural metrics + wall for a config."""
+def report_row(
+    policy,
+    executor_name: str,
+    report,
+    *,
+    wall_s: float | None = None,
+    prep_bytes: int | None = None,
+) -> dict:
+    """One BENCH_<app>.json row: structural metrics + wall for a config.
+
+    ``report`` is the steady-state execution (prepare cache warm, jit cache
+    hit), so its ``bytes_moved`` shows the per-iteration traffic;
+    ``prep_bytes`` carries the FIRST call's one-time prepare traffic (the
+    rechunk bill) so baseline diffs can catch preparation regressions the
+    steady-state columns are blind to.
+    """
     return {
         "policy": policy_label(policy),
         "executor": executor_name,
@@ -120,6 +134,9 @@ def report_row(policy, executor_name: str, report, *, wall_s: float | None = Non
         "merges": report.merges,
         "traces": report.traces,
         "bytes_moved": report.bytes_moved,
+        "prep_bytes": report.bytes_moved if prep_bytes is None else prep_bytes,
+        "granularity": report.granularity,
+        "retunes": report.retunes,
     }
 
 

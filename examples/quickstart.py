@@ -91,3 +91,20 @@ print(f"mesh: dispatches={mesh.report.dispatches} "
 p0 = parts[0]
 print("get_indexes()      ->", p0.get_indexes()[:8])
 print("get_item_indexes() ->", p0.get_item_indexes()[:8], "...")
+
+# -- 9. adaptive granularity: no knob at all ----------------------------------
+# SplIter(partitions_per_location="auto") hands the last tuning knob to the
+# executor's cost-model autotuner: early iterations probe a deterministic
+# granularity ladder, a Tiny-Tasks cost model picks the winner (≤3 retunes),
+# and every retune is a LOGICAL regroup of the already-split blocks — the
+# prepare cache never re-splits and never moves a byte.
+ex = LocalExecutor()
+auto_plan = col.split(SplIter(partitions_per_location="auto")) \
+               .map_blocks(block_sum).reduce(combine)
+for i in range(5):
+    r = auto_plan.compute(executor=ex)
+    print(f"iter {i}: ppl={r.report.granularity} retunes={r.report.retunes} "
+          f"bytes_moved={r.report.bytes_moved}")
+print(f"prepare stats: {ex.prepare_stats}  (splits stays 1: regroup-without-resplit)")
+print("profile:", [(p.kind, p.calls, round(p.mean_dispatch_s * 1e3, 3))
+                   for p in ex.profile.snapshot()[:3]], "(kind, calls, mean dispatch ms)")

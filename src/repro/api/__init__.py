@@ -23,14 +23,23 @@ Public surface:
 * :class:`ExecutionPlan` — the small IR a Collection chain builds;
   :class:`PartitionView` — what ``map_partitions`` callbacks receive;
   :class:`ComputeResult` — ``(value, report)``.
+* The adaptive-granularity loop (DESIGN.md §9): every backend schedules
+  through one instrumented dependency-driven core that populates a
+  :class:`~repro.api.profile.ProfileStore` (per-task wall / dispatch
+  overhead / bytes); ``SplIter(partitions_per_location="auto")`` hands the
+  granularity knob to a per-workload :class:`~repro.api.autotune.Autotuner`
+  (measure → cost model → retune, ≤3 retunes, logical regroup only — zero
+  re-splits between retunes).
 """
 
+from repro.api.autotune import Autotuner, CostModel, fit_cost_model
 from repro.api.collection import Collection
 from repro.api.executors import (
     ComputeResult,
     Executor,
     LocalExecutor,
     PartitionView,
+    PrepareStats,
     ThreadedExecutor,
 )
 from repro.api.kernels import (
@@ -39,10 +48,18 @@ from repro.api.kernels import (
     partition_kernel_for,
     register_partition_kernel,
 )
-from repro.api.lowering import Capabilities, Task, TaskGraph, lower, stable_task_key
+from repro.api.lowering import (
+    Capabilities,
+    Task,
+    TaskGraph,
+    lower,
+    stable_task_key,
+    stacked_fold,
+)
 from repro.api.mesh_executor import MeshExecutor
 from repro.api.plan import ExecutionPlan, PlanError
 from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter, as_policy
+from repro.api.profile import ProfileEvent, ProfileStore, TaskProfile
 
 __all__ = [
     "Collection",
@@ -52,6 +69,14 @@ __all__ = [
     "ThreadedExecutor",
     "MeshExecutor",
     "PartitionView",
+    "PrepareStats",
+    "Autotuner",
+    "CostModel",
+    "fit_cost_model",
+    "ProfileEvent",
+    "ProfileStore",
+    "TaskProfile",
+    "stacked_fold",
     "Capabilities",
     "Task",
     "TaskGraph",

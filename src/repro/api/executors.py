@@ -10,6 +10,18 @@ Execution is split into two explicit stages (DESIGN.md §5):
    placement (cached, LRU-bounded), lowers the plan against its declared
    :class:`~repro.api.lowering.Capabilities`, and schedules the TaskGraph.
 
+All three backends schedule through ONE dependency-driven scheduler core
+(:meth:`_PlanExecutor._schedule`): the backend turns the TaskGraph into
+dispatch *units* (hook ``_plan_dispatches`` — one unit per task by default,
+one per sharded bucket on :class:`~repro.api.mesh_executor.MeshExecutor`),
+the core appends the merge as a unit depending on every task unit, and the
+backend drains the ready set (hook ``_drain`` — inline on the calling
+thread, or via the persistent per-location worker pool).  Every unit runs
+instrumented: the core emits a :class:`~repro.api.profile.ProfileEvent`
+(dispatch overhead, wall, bytes) into the executor's
+:class:`~repro.api.profile.ProfileStore` — the *measure* third of the
+adaptive-granularity loop (DESIGN.md §9).
+
 Backends:
 
 :class:`LocalExecutor`
@@ -19,10 +31,19 @@ Backends:
     A persistent worker thread per *location* (created on first use, reused
     across ``execute`` calls so iterative workloads don't pay thread startup
     per iteration), overlapping per-partition dispatch across locations.
-    Partials are collected by task index and merged in plan order, so
+    Partials are collected by unit index and merged in plan order, so
     results are bit-identical to :class:`LocalExecutor`.
 :class:`~repro.api.mesh_executor.MeshExecutor`
     Sharded dispatch over a JAX device mesh (own module).
+
+``SplIter(partitions_per_location="auto")`` closes the loop: the executor
+owns an :class:`~repro.api.autotune.Autotuner` per workload that proposes
+the granularity before each execution and is fed the measured wall time
+after it.  A granularity retune between iterations is **logical regrouping
+only**: the prepare cache keeps a ppl-independent :class:`_SplitBase` (the
+placement scan, paid once) and derives the retuned ``PlacedGroup`` list
+from the already-split blocks — zero re-splits, zero bytes moved
+(``prepare_stats`` counts hits/splits/regroups so tests can assert it).
 
 Executors also expose the engine-level ``task()`` registration for app
 stages that do not fit the map/reduce plan shape (k-NN's lookup/merge
@@ -47,6 +68,7 @@ from typing import Any, Callable, Hashable, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.api.autotune import Autotuner
 from repro.api.lowering import (
     Capabilities,
     MergeSpec,
@@ -55,13 +77,16 @@ from repro.api.lowering import (
     Task,
     TaskGraph,
     lower,
+    stable_task_key,
+    stacked_fold,
 )
-from repro.api.plan import ExecutionPlan
+from repro.api.plan import ExecutionPlan, MapReduceSpec
 from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter
+from repro.api.profile import ProfileStore
 from repro.core.blocked import BlockedArray
 from repro.core.engine import EngineReport, TaskEngine
 from repro.core.rechunk import rechunk
-from repro.core.spliter import spliter
+from repro.core.spliter import stripe_local_blocks
 
 __all__ = [
     "ComputeResult",
@@ -69,6 +94,7 @@ __all__ = [
     "Executor",
     "LocalExecutor",
     "ThreadedExecutor",
+    "PrepareStats",
 ]
 
 
@@ -97,6 +123,29 @@ class Executor(Protocol):
     def report(self) -> EngineReport: ...
 
 
+# ---------------------------------------------------------------------------
+# prepared placement: policy -> (arrays, task groups), regroup-aware
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PrepareStats:
+    """Counters over the prepare cache (DESIGN.md §9.3).
+
+    ``splits`` counts *physical* split derivations (the placement scan that
+    builds a :class:`_SplitBase`); ``regroups`` counts granularity changes
+    served by logically regrouping an already-split base — the
+    regroup-without-resplit path.  A well-behaved autotuned iteration shows
+    ``splits == 1`` and ``regroups == retunes`` with ``bytes_moved == 0``.
+    """
+
+    hits: int = 0        # prepare-cache hits (base or prepared entry)
+    misses: int = 0      # cache misses (entry built)
+    splits: int = 0      # placement scans (SplitBase builds)
+    regroups: int = 0    # ppl regroups served WITHOUT re-splitting
+    rechunks: int = 0    # physical rechunk preparations
+
+
 @dataclasses.dataclass
 class _Prepared:
     """Cached result of applying a policy to a set of inputs.
@@ -114,40 +163,133 @@ class _Prepared:
     groups: list[PlacedGroup]
 
 
+@dataclasses.dataclass
+class _SplitBase:
+    """The ppl-independent half of a SplIter preparation.
+
+    Holds the placement scan (which blocks live where — the paper's
+    dataClay-metadata / ``who_has`` query) once per (inputs) cache entry;
+    any ``partitions_per_location`` is then a *logical regrouping* of these
+    block-id lists (``stripe_local_blocks``) with zero data movement — the
+    regroup-without-resplit contract the autotuner relies on between
+    retunes.  Derived group lists are memoized per ppl (bounded by the
+    granularity ladder, a handful of entries).
+    """
+
+    inputs: tuple[BlockedArray, ...]
+    local_blocks: tuple[tuple[int, tuple[int, ...]], ...]  # (location, ids)
+    groups_by_ppl: dict[int, list[PlacedGroup]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def groups_for(self, ppl: int) -> tuple[list[PlacedGroup], bool]:
+        """Groups at a granularity; True when freshly derived (a regroup)."""
+        groups = self.groups_by_ppl.get(ppl)
+        if groups is not None:
+            return groups, False
+        derived = bool(self.groups_by_ppl)
+        groups = [
+            PlacedGroup(loc, ids)
+            for loc, local in self.local_blocks
+            for ids in stripe_local_blocks(local, ppl)
+        ]
+        self.groups_by_ppl[ppl] = groups
+        return groups, derived
+
+
 def _merge_partials(engine: TaskEngine, merge: MergeSpec, partials: list[Any]) -> Any:
     """Single merge task over the stacked partials (paper's @reduction task).
 
     Keyed by the MergeSpec's stable key — NOT the combine object, which apps
     typically recreate per call — so iterative workloads hit the jit cache.
+    The fold body is the shared :func:`~repro.api.lowering.stacked_fold`
+    (also the MeshExecutor's cross-rank fold — one source of truth).
     """
-    combine = merge.combine
-
-    def merge_fn(stacked):
-        def body(acc, p):
-            return combine(acc, p), None
-
-        first = jax.tree.map(lambda s: s[0], stacked)
-        rest = jax.tree.map(lambda s: s[1:], stacked)
-        acc, _ = jax.lax.scan(body, first, rest)
-        return acc
-
     if len(partials) == 1:
         return partials[0]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *partials)
-    out = engine.task(merge_fn, key=merge.key)(stacked)
+    out = engine.task(stacked_fold(merge.combine), key=merge.key)(stacked)
     engine.report.merges += 1
     return out
 
 
+# ---------------------------------------------------------------------------
+# the shared scheduler core: dispatch units + dependency bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Unit:
+    """One schedulable unit: a task, a sharded bucket, or the merge.
+
+    ``run`` is a nullary thunk; ``deps`` are unit indices that must
+    complete first (the merge depends on every task unit — the dependency
+    edge all three backends honor through the shared core).
+    """
+
+    index: int
+    location: int                  # -1: any thread (merge / sharded bucket)
+    tasks: tuple[Task, ...]        # graph descriptors covered (merge: ())
+    run: Callable[[], Any] | None
+    deps: tuple[int, ...] = ()
+    kind: str = "task"
+
+
+class _SchedulerState:
+    """Thread-safe dependency/result bookkeeping for one TaskGraph run."""
+
+    def __init__(self, units: list[_Unit]):
+        self.units = units
+        self.results: list[Any] = [None] * len(units)
+        self.errors: list[BaseException] = []
+        self._lock = threading.Lock()
+        self._indegree = [len(u.deps) for u in units]
+        self._dependents: list[list[int]] = [[] for _ in units]
+        for u in units:
+            for d in u.deps:
+                self._dependents[d].append(u.index)
+        self._remaining = len(units)
+        self.done = threading.Event()
+        if not units:
+            self.done.set()
+
+    def initial_ready(self) -> list[_Unit]:
+        return [u for u in self.units if not u.deps]
+
+    def complete(self, unit: _Unit, value: Any) -> list[_Unit]:
+        """Record a result; return units that just became ready."""
+        newly: list[_Unit] = []
+        with self._lock:
+            self.results[unit.index] = value
+            for di in self._dependents[unit.index]:
+                self._indegree[di] -= 1
+                if self._indegree[di] == 0:
+                    newly.append(self.units[di])
+            self._remaining -= 1
+            if self._remaining == 0:
+                self.done.set()
+        return newly
+
+    def fail(self, exc: BaseException) -> None:
+        with self._lock:
+            self.errors.append(exc)
+        self.done.set()
+
+
 class _PlanExecutor:
-    """Shared prepare/lower/merge; subclasses schedule the TaskGraph."""
+    """Shared prepare/lower/schedule core; subclasses customize dispatch."""
 
     #: bound on cached (inputs, policy) preparations (LRU eviction).
     prepare_cache_size: int = 8
 
     def __init__(self, engine: TaskEngine | None = None):
         self.engine = engine or TaskEngine()
-        self._prepare_cache: collections.OrderedDict[tuple, _Prepared] = (
+        self._prepare_cache: collections.OrderedDict[tuple, Any] = (
+            collections.OrderedDict()
+        )
+        self.prepare_stats = PrepareStats()
+        self.profile = ProfileStore()
+        self._tuners: collections.OrderedDict[tuple, tuple] = (
             collections.OrderedDict()
         )
         self._scope_depth = 0
@@ -195,25 +337,114 @@ class _PlanExecutor:
         else:
             report = self.engine.report
         t0 = time.perf_counter()
+        traces0 = self.engine.traces_total
 
-        prepared = self._prepare(spec.inputs, spec.policy, report)
+        policy, tuner = self._resolve_policy(spec)
+        if (
+            tuner is not None
+            and tuner.last_ppl is not None
+            and policy.partitions_per_location != tuner.last_ppl
+        ):
+            report.retunes += 1
+        prepared = self._prepare(spec.inputs, policy, report)
         graph = lower(spec, prepared.arrays, prepared.groups, self.capabilities)
-        partials = self._schedule(graph)
-        if graph.merge is not None:
-            value = _merge_partials(self.engine, graph.merge, partials)
-        else:
-            value = partials
+        # Per-unit wall profiling (block_until_ready between units) would
+        # serialize the async-dispatch pipeline, so it is enabled only for
+        # the tuner's probe iterations — the window that needs real
+        # per-task walls and is trace-dominated anyway.
+        sync_prev = self.profile.sync
+        if tuner is not None and tuner.probing:
+            self.profile.sync = True
+        try:
+            value = self._schedule(graph)
+        finally:
+            self.profile.sync = sync_prev
         value = jax.block_until_ready(value)
+        dt = time.perf_counter() - t0
 
+        if isinstance(policy, SplIter):
+            report.granularity = policy.partitions_per_location
+        if tuner is not None:
+            self._feed_tuner(tuner, policy, graph, dt, traced=(
+                self.engine.traces_total > traces0
+            ))
         if own_report:
-            report.wall_s = time.perf_counter() - t0
+            report.wall_s = dt
         return ComputeResult(value=value, report=report)
 
     def lower(self, plan: ExecutionPlan) -> TaskGraph:
         """Lower a plan for this backend without running it (inspection)."""
         spec = plan.spec
-        prepared = self._prepare(spec.inputs, spec.policy, self.engine.report)
+        policy, _ = self._resolve_policy(spec)
+        prepared = self._prepare(spec.inputs, policy, self.engine.report)
         return lower(spec, prepared.arrays, prepared.groups, self.capabilities)
+
+    # -- autotuning: resolve SplIter("auto") against the workload's tuner ------
+
+    def _resolve_policy(
+        self, spec: MapReduceSpec
+    ) -> tuple[ExecutionPolicy, Autotuner | None]:
+        pol = spec.policy
+        if not (isinstance(pol, SplIter) and pol.autotuned):
+            return pol, None
+        tuner = self._tuner_for(spec, pol)
+        return (
+            dataclasses.replace(pol, partitions_per_location=tuner.propose()),
+            tuner,
+        )
+
+    def _tuner_for(self, spec: MapReduceSpec, pol: SplIter) -> Autotuner:
+        key = (
+            tuple(id(a) for a in spec.inputs),
+            spec.kind,
+            stable_task_key(spec.fn),
+            pol,
+        )
+        entry = self._tuners.get(key)
+        if entry is not None:
+            self._tuners.move_to_end(key)
+            return entry[1]
+        x0 = spec.inputs[0]
+        counts = [len(x0.blocks_at(loc)) for loc in range(x0.num_locations)]
+        tuner = Autotuner(counts, seed=pol.autotune_seed)
+        # The entry pins the inputs (id-keyed, like the prepare cache) and
+        # shares its LRU bound.
+        self._tuners[key] = (spec.inputs, tuner)
+        while len(self._tuners) > self.prepare_cache_size:
+            self._tuners.popitem(last=False)
+        return tuner
+
+    def _feed_tuner(
+        self,
+        tuner: Autotuner,
+        policy: SplIter,
+        graph: TaskGraph,
+        wall_s: float,
+        *,
+        traced: bool,
+    ) -> None:
+        counted = sum(1 for t in graph.tasks if t.counted)
+        span = max((len(t.block_ids) for t in graph.tasks), default=0)
+        tuner.observe(
+            policy.partitions_per_location,
+            wall_s,
+            n_tasks=counted or None,
+            span=span or None,
+            traced=traced,
+            # The overhead hint is scoped to THIS workload's task keys so
+            # other policies/datasets run through the same executor don't
+            # pollute the 1–2-sample fallback model.
+            overhead_s=self.profile.mean_task_overhead_s(
+                kinds=(
+                    "block",
+                    "partition_scan",
+                    "partition_pallas",
+                    "partition_materialized",
+                    "sharded",
+                ),
+                keys={t.key for t in graph.tasks if t.counted},
+            ),
+        )
 
     # -- prepare: policy -> (arrays, task groups), LRU-cached ------------------
 
@@ -223,14 +454,48 @@ class _PlanExecutor:
         policy: ExecutionPolicy,
         report: EngineReport,
     ) -> _Prepared:
-        key = (tuple(id(a) for a in inputs), policy)
+        stats = self.prepare_stats
+        ids = tuple(id(a) for a in inputs)
+
+        if isinstance(policy, SplIter):
+            # SplIter preparations share ONE ppl-independent base per input
+            # set: the placement scan is paid once; every granularity —
+            # including autotuner retunes — is a logical regroup of the
+            # already-split block-id lists (zero movement, zero re-splits).
+            ppl = policy.partitions_per_location
+            assert isinstance(ppl, int), "auto must be resolved before prepare"
+            key = (ids, SplIter)
+            base = self._prepare_cache.get(key)
+            if base is not None:
+                self._prepare_cache.move_to_end(key)
+                stats.hits += 1
+            else:
+                stats.misses += 1
+                stats.splits += 1
+                x0 = inputs[0]
+                local_blocks = []
+                for loc in range(x0.num_locations):
+                    local = x0.blocks_at(loc)
+                    if local:
+                        local_blocks.append((loc, tuple(local)))
+                base = _SplitBase(inputs=inputs, local_blocks=tuple(local_blocks))
+                self._cache_put(key, base)
+            groups, regrouped = base.groups_for(ppl)
+            if regrouped:
+                stats.regroups += 1
+            return _Prepared(inputs=inputs, arrays=inputs, groups=groups)
+
+        key = (ids, policy)
         hit = self._prepare_cache.get(key)
         if hit is not None:
             self._prepare_cache.move_to_end(key)
+            stats.hits += 1
             return hit
+        stats.misses += 1
 
         x0 = inputs[0]
         if isinstance(policy, Rechunk):
+            stats.rechunks += 1
             target = policy.target_rows or math.ceil(x0.num_rows / x0.num_locations)
             arrays = []
             for a in inputs:
@@ -242,10 +507,6 @@ class _PlanExecutor:
                 PlacedGroup(int(arrays[0].placements[i]), (i,))
                 for i in range(arrays[0].num_blocks)
             ]
-        elif isinstance(policy, SplIter):
-            parts = spliter(x0, partitions_per_location=policy.partitions_per_location)
-            arrays = inputs
-            groups = [PlacedGroup(p.location, p.block_ids) for p in parts]
         elif isinstance(policy, Baseline):
             arrays = inputs
             groups = [
@@ -255,12 +516,15 @@ class _PlanExecutor:
             raise TypeError(f"unknown policy {policy!r}")
 
         prepared = _Prepared(inputs=inputs, arrays=arrays, groups=groups)
-        self._prepare_cache[key] = prepared
-        while len(self._prepare_cache) > self.prepare_cache_size:
-            self._prepare_cache.popitem(last=False)
+        self._cache_put(key, prepared)
         return prepared
 
-    # -- scheduling (backend-specific) ----------------------------------------
+    def _cache_put(self, key: tuple, entry: Any) -> None:
+        self._prepare_cache[key] = entry
+        while len(self._prepare_cache) > self.prepare_cache_size:
+            self._prepare_cache.popitem(last=False)
+
+    # -- the shared scheduler core ---------------------------------------------
 
     def _bind(self, task: Task) -> Callable[[], Any]:
         """A nullary thunk running one task through the engine's jit cache."""
@@ -269,15 +533,82 @@ class _PlanExecutor:
         t = self.engine.task(task.fn, key=task.key)
         return lambda: t(*task.operands())
 
-    def _schedule(self, graph: TaskGraph) -> list[Any]:
-        raise NotImplementedError
+    def _plan_dispatches(self, graph: TaskGraph) -> list[_Unit]:
+        """TaskGraph → dispatch units (backend hook; default one per task)."""
+        return [
+            _Unit(index=i, location=t.location, tasks=(t,), run=self._bind(t),
+                  kind=t.kind)
+            for i, t in enumerate(graph.tasks)
+        ]
+
+    def _schedule(self, graph: TaskGraph) -> Any:
+        """Run a TaskGraph through the shared dependency-driven core.
+
+        One implementation for every backend: plan dispatch units (hook),
+        append the merge as a unit depending on all of them, drain the
+        ready set (hook) with per-unit profiling.  Returns the merged value
+        when the graph has a merge, else the per-task partials in plan
+        order.
+        """
+        units = list(self._plan_dispatches(graph))
+        merge_unit = None
+        if graph.merge is not None:
+            merge_unit = _Unit(
+                index=len(units),
+                location=-1,
+                tasks=(),
+                run=None,
+                deps=tuple(u.index for u in units),
+                kind="merge",
+            )
+            units.append(merge_unit)
+        state = _SchedulerState(units)
+        if merge_unit is not None:
+            deps = merge_unit.deps
+
+            def run_merge():
+                partials = [state.results[i] for i in deps]
+                return _merge_partials(self.engine, graph.merge, partials)
+
+            merge_unit.run = run_merge
+        if units:
+            self._drain(state)
+        if state.errors:
+            raise state.errors[0]
+        if merge_unit is not None:
+            return state.results[merge_unit.index]
+        return list(state.results)
+
+    def _run_unit(self, unit: _Unit, state: _SchedulerState) -> list[_Unit]:
+        """Profiled execution of one ready unit; returns newly-ready units."""
+        try:
+            t0 = time.perf_counter()
+            value = unit.run()
+            t1 = time.perf_counter()
+            if self.profile.sync:
+                value = jax.block_until_ready(value)
+            wall = time.perf_counter() - t0
+            self.profile.record_tasks(
+                unit.tasks,
+                kind=unit.kind,
+                location=unit.location,
+                dispatch_s=t1 - t0,
+                wall_s=wall,
+            )
+        except BaseException as e:  # noqa: BLE001 — re-raised by _schedule
+            state.fail(e)
+            return []
+        return state.complete(unit, value)
+
+    def _drain(self, state: _SchedulerState) -> None:
+        """Run ready units to completion (backend hook; default: inline)."""
+        q = collections.deque(state.initial_ready())
+        while q and not state.errors:
+            q.extend(self._run_unit(q.popleft(), state))
 
 
 class LocalExecutor(_PlanExecutor):
     """Sequential dispatch on the calling thread — the seed TaskEngine path."""
-
-    def _schedule(self, graph: TaskGraph) -> list[Any]:
-        return [self._bind(t)() for t in graph.tasks]
 
 
 class _LocationWorker:
@@ -323,9 +654,10 @@ class ThreadedExecutor(_PlanExecutor):
     lifetime instead of once per iteration.  Call :meth:`close` (or rely on
     daemon threads at interpreter exit) to stop them.
 
-    Determinism: partials land in a results list indexed by task position
-    and the merge runs in plan order on the calling thread, so the value is
-    bit-identical to :class:`LocalExecutor` regardless of thread timing.
+    Determinism: the shared scheduler core indexes partials by unit
+    position and the merge unit folds them in plan order (on whichever
+    worker completed the last dependency), so the value is bit-identical
+    to :class:`LocalExecutor` regardless of thread timing.
     """
 
     def __init__(self, engine: TaskEngine | None = None):
@@ -339,44 +671,34 @@ class ThreadedExecutor(_PlanExecutor):
             w = self._workers[location] = _LocationWorker(f"repro-loc-{location}")
         return w
 
-    def _schedule(self, graph: TaskGraph) -> list[Any]:
-        thunks = [self._bind(t) for t in graph.tasks]
-        by_loc: dict[int, list[tuple[int, Callable[[], Any]]]] = {}
-        for i, t in enumerate(graph.tasks):
-            by_loc.setdefault(t.location, []).append((i, thunks[i]))
+    def _drain(self, state: _SchedulerState) -> None:
+        locations = {u.location for u in state.units if u.location >= 0}
         cur = threading.current_thread()
         nested = any(w._thread is cur for w in self._workers.values())
-        if len(by_loc) <= 1 or nested:
+        if len(locations) <= 1 or nested:
             # Single location — or a nested compute() issued from inside one
             # of our own workers (e.g. a map_partitions callback): submitting
             # to the pool from a pool thread would deadlock the single-thread
             # location queue, so run inline on the calling thread instead.
-            return [thunk() for thunk in thunks]
+            return super()._drain(state)
+        for u in state.initial_ready():
+            self._submit_unit(u, state)
+        state.done.wait()
 
-        results: list[Any] = [None] * len(thunks)
-        errors: list[BaseException] = []
-        done = threading.Event()
-        remaining = [len(by_loc)]
-        lock = threading.Lock()
+    def _submit_unit(self, unit: _Unit, state: _SchedulerState) -> None:
+        if unit.location < 0:
+            # Placement-free unit (the merge): run on the thread that
+            # unblocked it — jax dispatch is thread-safe and the fold order
+            # is fixed by unit indices, so the result stays deterministic.
+            self._step(unit, state)
+        else:
+            self._worker(unit.location).submit(
+                lambda: self._step(unit, state)
+            )
 
-        def run(items):
-            try:
-                for i, thunk in items:
-                    results[i] = thunk()
-            except BaseException as e:  # noqa: BLE001 — re-raised on the caller
-                errors.append(e)
-            finally:
-                with lock:
-                    remaining[0] -= 1
-                    if remaining[0] == 0:
-                        done.set()
-
-        for loc, items in by_loc.items():
-            self._worker(loc).submit(lambda items=items: run(items))
-        done.wait()
-        if errors:
-            raise errors[0]
-        return results
+    def _step(self, unit: _Unit, state: _SchedulerState) -> None:
+        for nxt in self._run_unit(unit, state):
+            self._submit_unit(nxt, state)
 
     def close(self) -> None:
         """Stop the worker pool (idempotent; workers respawn on next use)."""

@@ -54,6 +54,7 @@ __all__ = [
     "TaskGraph",
     "lower",
     "stable_task_key",
+    "stacked_fold",
 ]
 
 
@@ -257,7 +258,12 @@ class TaskGraph:
         return out
 
     def describe(self) -> str:
-        """One line per task: index, placement, kind, key summary."""
+        """One line per task: index, placement, kind, key summary.
+
+        Deliberately free of memory addresses and other run-varying detail
+        so the output is golden-testable — a lowering regression shows up
+        as a readable string diff (tests/test_api.py).
+        """
         lines = []
         for t in self.tasks:
             extra = f" kernel={t.kernel_name}" if t.kernel_name else ""
@@ -265,13 +271,36 @@ class TaskGraph:
                 f"[{t.index}] loc={t.location} {t.kind} blocks={t.block_ids}{extra}"
             )
         if self.merge is not None:
-            lines.append(f"[merge] {self.merge.key!r}")
+            c = self.merge.combine
+            name = getattr(c, "__name__", type(c).__name__)
+            lines.append(f"[merge] combine={name}")
         return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------
 # lowering
 # ---------------------------------------------------------------------------
+
+
+def stacked_fold(combine: Callable[[Any, Any], Any]) -> Callable[[Any], Any]:
+    """Fold a stacked pytree of partials (leading axis) in index order.
+
+    ``stacked_fold(c)(stacked)`` = ``c(c(s[0], s[1]), s[2]) ...`` as one
+    ``lax.scan`` — the single source of truth for "reduce N partials with an
+    associative combine": the host-side merge task (``_merge_partials`` in
+    :mod:`repro.api.executors`) folds stacked task partials with it, and
+    :class:`~repro.api.mesh_executor.MeshExecutor` folds the all-gathered
+    per-rank partials with it inside the sharded program (the all-reduce of
+    an arbitrary associative monoid).
+    """
+
+    def fold(stacked):
+        first = jax.tree.map(lambda s: s[0], stacked)
+        rest = jax.tree.map(lambda s: s[1:], stacked)
+        acc, _ = jax.lax.scan(lambda a, p: (combine(a, p), None), first, rest)
+        return acc
+
+    return fold
 
 
 def _partition_body(block_fn: Callable, combine: Callable, n_in: int) -> Callable:

@@ -37,6 +37,7 @@ paper's apps) for this backend.
 
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
@@ -44,8 +45,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.api.executors import _PlanExecutor
-from repro.api.lowering import Capabilities, Task, TaskGraph, _partition_body
+from repro.api.executors import _PlanExecutor, _Unit
+from repro.api.lowering import (
+    Capabilities,
+    Task,
+    TaskGraph,
+    _partition_body,
+    stacked_fold,
+)
 from repro.core.engine import TaskEngine
 from repro.distributed.compat import shard_map
 
@@ -114,31 +121,47 @@ class MeshExecutor(_PlanExecutor):
 
     # -- scheduling ------------------------------------------------------------
 
-    def _schedule(self, graph: TaskGraph) -> list[Any]:
+    def _plan_dispatches(self, graph: TaskGraph) -> list[_Unit]:
+        """Bucketed dispatch units for the shared scheduler core.
+
+        Tasks with the same dispatch signature — same jit key + same
+        per-task data shapes — stack into ONE sharded unit, PRESERVING
+        graph task order, so within a bucket the fold visits partials in
+        plan order (lowering emits partition tasks location-major, which is
+        what maps contiguous location groups onto contiguous mesh ranks).
+        Operands stay lazy here: buckets form from Task.data_shapes
+        metadata and each bucket materializes its stacks only at its own
+        dispatch.  Views, un-reduced maps and singleton buckets fall back
+        to per-task units (the LocalExecutor path).
+        """
         if graph.merge is None or not graph.tasks or any(
             not t.counted for t in graph.tasks
         ):
-            # views / un-reduced maps: per-task dispatch (LocalExecutor path)
-            return [self._bind(t)() for t in graph.tasks]
+            return super()._plan_dispatches(graph)
 
-        # Bucket tasks by dispatch signature — same jit key + same per-task
-        # data shapes stack into one sharded call — PRESERVING graph task
-        # order, so within a bucket the fold visits partials in plan order
-        # (lowering emits partition tasks location-major, which is what maps
-        # contiguous location groups onto contiguous mesh ranks).  Operands
-        # stay lazy here: buckets form from Task.data_shapes metadata and
-        # each bucket materializes its stacks only at its own dispatch.
         buckets: dict[tuple, list[Task]] = {}
         for t in graph.tasks:
             buckets.setdefault((t.key, t.data_shapes), []).append(t)
 
-        partials = []
+        units: list[_Unit] = []
         for tasks in buckets.values():
             if len(tasks) == 1:
-                partials.append(self._bind(tasks[0])())
+                t = tasks[0]
+                units.append(
+                    _Unit(index=len(units), location=t.location, tasks=(t,),
+                          run=self._bind(t), kind=t.kind)
+                )
             else:
-                partials.append(self._sharded_dispatch(graph, tasks))
-        return partials
+                units.append(
+                    _Unit(
+                        index=len(units),
+                        location=-1,
+                        tasks=tuple(tasks),
+                        run=functools.partial(self._sharded_dispatch, graph, tasks),
+                        kind="sharded",
+                    )
+                )
+        return units
 
     def _sharded_dispatch(self, graph: TaskGraph, tasks: list[Task]) -> Any:
         t0 = tasks[0]
@@ -165,14 +188,13 @@ class MeshExecutor(_PlanExecutor):
         def fused(*ops):
             acc = local_fold(*ops)
             # psum-style cross-rank merge: all-gather the rank partials and
-            # fold in rank order (all-reduce for an arbitrary monoid)
+            # fold in rank order (all-reduce for an arbitrary monoid) — the
+            # same stacked_fold the host-side merge task runs, so the two
+            # merge paths cannot drift apart.
             gathered = jax.tree.map(
                 lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=False), acc
             )
-            out = jax.tree.map(lambda s: s[0], gathered)
-            for r in range(1, m):
-                out = combine(out, jax.tree.map(lambda s, r=r: s[r], gathered))
-            return out
+            return stacked_fold(combine)(gathered)
 
         sharded = shard_map(
             fused,

@@ -15,6 +15,11 @@ blocked collection*:
     ``partitions_per_location`` adapts granularity to the computing
     capability; ``materialize=True`` is the paper-§7 variant that locally
     concatenates each partition into one contiguous buffer.
+    ``partitions_per_location="auto"`` hands the choice to the executor's
+    cost-model autotuner (:mod:`repro.api.autotune`): the granularity is
+    measured, modelled and retuned across iterations instead of hand-picked
+    — the knob the paper set out to remove ("finding the optimal block size
+    ... requires inner knowledge of the computing environment").
 :class:`Rechunk`
     The materializing competitor (paper §3.2.1): re-block the dataset —
     by default at one block per location — paying inter-location traffic,
@@ -56,7 +61,10 @@ class SplIter(ExecutionPolicy):
 
     Attributes:
       partitions_per_location: number of partitions each location is split
-        into — the paper's adaptation to computing capability (nodes × cores).
+        into — the paper's adaptation to computing capability (nodes ×
+        cores) — or the string ``"auto"``, which defers the choice to the
+        executor's autotuner (measure → model → retune, with logical
+        regrouping only between retunes: zero data movement).
       materialize: locally concatenate each partition's blocks into one
         contiguous buffer before the task consumes it (paper §7; recovers
         the rechunk advantage for compute-bound apps with zero
@@ -68,19 +76,30 @@ class SplIter(ExecutionPolicy):
         falling back to the scan when no kernel is registered or the
         shapes are rejected; ``"auto"`` lets the backend capabilities
         decide (compiled Pallas on TPU, scan elsewhere).
+      autotune_seed: seed of the autotuner's deterministic probe schedule
+        (only meaningful with ``partitions_per_location="auto"``); two runs
+        with the same seed probe the same granularity ladder in the same
+        order.
     """
 
-    partitions_per_location: int = 1
+    partitions_per_location: int | str = 1
     materialize: bool = False
     fusion: str = "auto"
+    autotune_seed: int = 0
 
     def __post_init__(self):
-        assert self.partitions_per_location >= 1, self.partitions_per_location
+        ppl = self.partitions_per_location
+        assert ppl == "auto" or (isinstance(ppl, int) and ppl >= 1), ppl
         assert self.fusion in ("auto", "scan", "pallas"), self.fusion
 
     @property
+    def autotuned(self) -> bool:
+        return self.partitions_per_location == "auto"
+
+    @property
     def mode_name(self) -> str:
-        return "spliter_mat" if self.materialize else "spliter"
+        name = "spliter_mat" if self.materialize else "spliter"
+        return name + "_auto" if self.autotuned else name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +122,7 @@ _BY_NAME = {
     "baseline": lambda ppl: Baseline(),
     "spliter": lambda ppl: SplIter(partitions_per_location=ppl),
     "spliter_mat": lambda ppl: SplIter(partitions_per_location=ppl, materialize=True),
+    "spliter_auto": lambda ppl: SplIter(partitions_per_location="auto"),
     "rechunk": lambda ppl: Rechunk(),
 }
 

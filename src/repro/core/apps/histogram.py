@@ -10,6 +10,12 @@ A fused Pallas partition kernel
 registered for :func:`histogramdd_block`, so ``SplIter(fusion="pallas")``
 lowers each partition to ONE ``pallas_call`` whose grid iterates the
 partition's blocks with the flat-grid accumulator resident in VMEM.
+
+``policy=SplIter(partitions_per_location="auto")`` works here too, but the
+autotuner lives on the *executor*: pass a persistent executor across
+repeated ``histogram`` calls (e.g. re-binning the same dataset) so the
+probe → model → retune schedule can advance; the returned report's
+``granularity`` / ``retunes`` fields expose what it chose.
 """
 
 from __future__ import annotations

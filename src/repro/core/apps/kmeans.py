@@ -10,6 +10,13 @@ rechunk, with its traffic bill) exactly once — paper §6.3.1 "this cost is
 only payed once, not for every iteration" — with no app-level special
 casing.  Centroids travel as ``extra_args`` so every iteration re-dispatches
 the same compiled task.
+
+``policy=SplIter(partitions_per_location="auto")`` turns the loop into the
+autotuner's natural host: early iterations probe the granularity ladder,
+the cost model picks a granularity, and every retune is a logical regroup
+of the already-split blocks (zero movement, zero re-splits).
+:class:`KMeansResult` surfaces the per-iteration granularity trajectory and
+the total retune count.
 """
 
 from __future__ import annotations
@@ -84,6 +91,15 @@ class KMeansResult:
     @property
     def total_bytes_moved(self) -> int:
         return sum(r.bytes_moved for r in self.reports)
+
+    @property
+    def total_retunes(self) -> int:
+        return sum(r.retunes for r in self.reports)
+
+    @property
+    def granularity_trajectory(self) -> list[int]:
+        """partitions_per_location per iteration (0 for non-SplIter runs)."""
+        return [r.granularity for r in self.reports]
 
 
 def kmeans(

@@ -53,6 +53,8 @@ class EngineReport:
     traces: int = 0              # distinct traced/compiled programs (this report)
     bytes_moved: int = 0         # inter-location traffic (rechunk only; SplIter: 0)
     wall_s: float = 0.0
+    granularity: int = 0         # partitions_per_location in effect (SplIter; 0: n/a)
+    retunes: int = 0             # autotuner granularity changes entering this window
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
@@ -63,6 +65,9 @@ class EngineReport:
         self.traces += other.traces
         self.bytes_moved += other.bytes_moved
         self.wall_s += other.wall_s
+        self.retunes += other.retunes
+        if other.granularity:
+            self.granularity = other.granularity
         return self
 
 

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.blocked import BlockedArray
 
-__all__ = ["Partition", "spliter", "split"]
+__all__ = ["Partition", "spliter", "split", "stripe_local_blocks"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +90,21 @@ class Partition:
         return jnp.stack(self.blocks, axis=0)
 
 
+def stripe_local_blocks(
+    local: Sequence[int], partitions_per_location: int
+) -> list[tuple[int, ...]]:
+    """Balanced striping of one location's block ids into sub-partitions.
+
+    The single source of truth for how ``partitions_per_location`` divides a
+    location's blocks: :func:`spliter` and the executors' regroup-without-
+    resplit path (``repro.api.executors``) must agree block-for-block, so a
+    granularity retune that merely *regroups* an already-split collection
+    yields exactly the partitions a fresh split would have produced.
+    """
+    k = min(partitions_per_location, len(local))
+    return [tuple(local[s::k]) for s in range(k)]
+
+
 def spliter(
     x: BlockedArray,
     *,
@@ -113,10 +128,7 @@ def spliter(
         local = x.blocks_at(loc)
         if not local:
             continue
-        k = min(partitions_per_location, len(local))
-        # Balanced striping of local blocks into k sub-partitions.
-        for s in range(k):
-            ids = tuple(local[s::k])
+        for ids in stripe_local_blocks(local, partitions_per_location):
             parts.append(Partition(source=x, location=loc, block_ids=ids))
     return parts
 

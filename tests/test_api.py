@@ -344,6 +344,54 @@ class TestLoweringFusion:
         r_pal = _hist_plan(ba, SplIter(fusion="pallas")).compute(executor=ex).report
         assert r_pal.dispatches == r_scan.dispatches == ba.num_locations + 1
 
+    def test_describe_golden_per_policy(self):
+        """Golden strings for TaskGraph.describe(): a lowering regression
+        (placement, grouping, fusion kind, merge identity) must show up as
+        a readable string diff, not a silent behaviour change."""
+        _, ba = _blocked(40, 8, 2, round_robin_placement)
+
+        def moments(b):
+            return jnp.sum(b, 0)
+
+        def combine(a, b):
+            return a + b
+
+        def describe(pol):
+            plan = (
+                Collection.from_blocked(ba)
+                .split(pol)
+                .map_blocks(moments)
+                .reduce(combine)
+                .plan()
+            )
+            return LocalExecutor().lower(plan).describe()
+
+        assert describe(Baseline()) == "\n".join([
+            "[0] loc=0 block blocks=(0,)",
+            "[1] loc=1 block blocks=(1,)",
+            "[2] loc=0 block blocks=(2,)",
+            "[3] loc=1 block blocks=(3,)",
+            "[4] loc=0 block blocks=(4,)",
+            "[merge] combine=combine",
+        ])
+        assert describe(SplIter()) == "\n".join([
+            "[0] loc=0 partition_scan blocks=(0, 2, 4)",
+            "[1] loc=1 partition_scan blocks=(1, 3)",
+            "[merge] combine=combine",
+        ])
+        assert describe(SplIter(partitions_per_location=2)) == "\n".join([
+            "[0] loc=0 partition_scan blocks=(0, 4)",
+            "[1] loc=0 partition_scan blocks=(2,)",
+            "[2] loc=1 partition_scan blocks=(1,)",
+            "[3] loc=1 partition_scan blocks=(3,)",
+            "[merge] combine=combine",
+        ])
+        assert describe(Rechunk()) == "\n".join([
+            "[0] loc=0 block blocks=(0,)",
+            "[1] loc=1 block blocks=(1,)",
+            "[merge] combine=combine",
+        ])
+
     def test_taskgraph_is_placed_and_described(self):
         _, ba = _blocked(96, 8, 4, round_robin_placement)
         graph = LocalExecutor().lower(_hist_plan(ba, SplIter(fusion="pallas")).plan())

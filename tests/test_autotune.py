@@ -1,0 +1,441 @@
+"""Adaptive granularity: profile store, cost model, tuner schedule, and the
+regroup-without-resplit prepare-cache contract (DESIGN.md §9).
+
+The fast lane (`pytest -q tests/test_autotune.py` — its own CI job): these
+tests avoid the full policy×dataset grid and assert the *structural*
+guarantees of the subsystem — deterministic probe schedules, ≤3 retunes,
+zero re-splits and zero bytes moved across retunes — plus end-to-end
+`SplIter(partitions_per_location="auto")` runs on all three backends.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    Autotuner,
+    Collection,
+    CostModel,
+    LocalExecutor,
+    MeshExecutor,
+    SplIter,
+    ThreadedExecutor,
+    as_policy,
+    fit_cost_model,
+)
+from repro.api.autotune import granularity_features
+from repro.core.blocked import BlockedArray, round_robin_placement
+from repro.core.spliter import spliter
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _blocked(rows, block_rows, locs, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(rows, d)).astype(np.float32)
+    return pts, BlockedArray.from_array(
+        jnp.asarray(pts), block_rows, num_locations=locs,
+        policy=round_robin_placement,
+    )
+
+
+def _sum_plan(ba, pol):
+    return (
+        Collection.from_blocked(ba)
+        .split(pol)
+        .map_blocks(lambda b: jnp.sum(b, 0))
+        .reduce(lambda a, b: a + b)
+    )
+
+
+AUTO = SplIter(partitions_per_location="auto")
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+class TestCostModel:
+    def test_granularity_features(self):
+        # 3 locations holding 8/8/5 blocks
+        counts = (8, 8, 5)
+        assert granularity_features(counts, 1) == (3, 8)
+        assert granularity_features(counts, 2) == (6, 4)
+        assert granularity_features(counts, 8) == (8 + 8 + 5, 1)
+        # ppl beyond the block count saturates per location
+        assert granularity_features(counts, 100) == (21, 1)
+        # empty locations contribute nothing
+        assert granularity_features((4, 0, 4), 1) == (2, 4)
+
+    def test_fit_recovers_synthetic_model(self):
+        true = CostModel(c0=0.05, c1=0.002, c2=0.010)
+        counts = (16, 16)
+        samples = [
+            (*granularity_features(counts, p), true.predict(*granularity_features(counts, p)))
+            for p in (1, 4, 16)
+        ]
+        fit = fit_cost_model(samples)
+        for p in (1, 2, 8, 16):
+            n, s = granularity_features(counts, p)
+            assert fit.predict(n, s) == pytest.approx(true.predict(n, s), rel=1e-6)
+
+    def test_fit_clamps_negative_coefficients(self):
+        # Walls DECREASING with task count would fit c1 < 0 — clamped so the
+        # model never predicts that infinite tasks are free.
+        samples = [(2, 8, 1.0), (4, 4, 0.6), (16, 1, 0.1)]
+        fit = fit_cost_model(samples)
+        assert fit.c1 >= 0.0 and fit.c2 >= 0.0 and fit.c0 >= 0.0
+
+    def test_underdetermined_fit_uses_overhead_hint(self):
+        assert fit_cost_model([(2, 8, 1.0)]) is None
+        hinted = fit_cost_model([(2, 8, 1.0)], overhead_hint_s=0.01)
+        assert hinted is not None
+        assert hinted.c1 == pytest.approx(0.01)
+        # anchored at the sample: predict(sample) == sample wall
+        assert hinted.predict(2, 8) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# the tuner schedule
+# ---------------------------------------------------------------------------
+
+
+def _drive(tuner, wall_fn, iters):
+    """Run the propose/observe loop against a synthetic wall model."""
+    trajectory = []
+    for _ in range(iters):
+        p = tuner.propose()
+        trajectory.append(p)
+        tuner.observe(p, wall_fn(p))
+    return trajectory
+
+
+class TestAutotunerSchedule:
+    def test_probe_ladder_is_deterministic(self):
+        t1 = Autotuner([8, 8], seed=0)
+        t2 = Autotuner([8, 8], seed=0)
+        assert t1.ladder == t2.ladder == [1, 2, 4, 8]
+        assert t1.probe_plan == t2.probe_plan == [1, 2, 4]
+
+    def test_seed_rotates_probe_order_not_set(self):
+        plans = {tuple(Autotuner([8, 8], seed=s).probe_plan) for s in range(3)}
+        assert len(plans) == 3                      # different orders
+        assert all(sorted(p) == [1, 2, 4] for p in plans)  # same set
+
+    def test_converges_within_three_retunes(self):
+        # Tiny-Tasks-shaped truth: overhead per task + straggler span cost.
+        true = CostModel(c0=0.01, c1=0.004, c2=0.003)
+        counts = (16, 16, 16, 16)
+        wall = lambda p: true.predict(*granularity_features(counts, p))
+        tuner = Autotuner(counts, seed=0)
+        traj = _drive(tuner, wall, iters=10)
+        assert tuner.retunes <= 3
+        # converged: the trajectory is constant once the schedule settles
+        tail = traj[-4:]
+        assert len(set(tail)) == 1
+        # within 10% of the best hand-picked ppl on the synthetic truth
+        best = min(wall(p) for p in tuner.ladder)
+        assert wall(tail[0]) <= 1.10 * best
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 5])
+    def test_convergence_quality_any_seed(self, seed):
+        true = CostModel(c0=0.02, c1=0.0015, c2=0.008)
+        counts = (32, 32)
+        wall = lambda p: true.predict(*granularity_features(counts, p))
+        tuner = Autotuner(counts, seed=seed)
+        traj = _drive(tuner, wall, iters=8)
+        best = min(wall(p) for p in tuner.ladder)
+        assert wall(traj[-1]) <= 1.10 * best
+        assert tuner.retunes <= 3
+
+    def test_budget_exhaustion_freezes(self):
+        # walls rising with ppl: probes 1→2→4 (2 retunes) then back to 1 (3rd)
+        tuner = Autotuner([8, 8], seed=0)
+        _drive(tuner, lambda p: 0.1 + 0.01 * p, iters=6)
+        assert tuner.retunes == 3 and tuner.propose() == 1
+        # evidence for another granularity arriving AFTER the budget is
+        # spent must never move the proposal
+        tuner.observe(8, 1e-6)
+        assert tuner.propose() == 1 and tuner.retunes == 3
+        # the retarget gate itself: a blocked move freezes the schedule
+        tuner._retarget(8)
+        assert tuner.frozen and tuner.propose() == 1
+        tuner.observe(2, 1e-9)                 # frozen: observe is inert
+        assert tuner.propose() == 1
+
+    def test_steady_state_revisit_can_refit_before_budget_runs_out(self):
+        # Probe walls are trace-polluted (first visit recompiles); once the
+        # pollution is corrected by steady-state revisits the model refits
+        # and may still move — the docstring's measure→model→retune loop
+        # stays closed after probing.
+        counts = (8, 8)
+        tuner = Autotuner(counts, seed=0)
+        tuner.observe(1, 0.10, traced=True)
+        tuner.observe(2, 0.12, traced=True)
+        tuner.observe(4, 0.50, traced=True)   # pathological traced outlier
+        p = tuner.propose()
+        assert p == 1 and tuner.retunes == 3
+        # honest steady-state walls: ppl=4 was actually the fast one
+        tuner.observe(1, 0.10)                # incumbent revisit: no change
+        assert tuner.propose() == 1
+        tuner.observe(4, 0.01)                # untraced supersedes the outlier
+        # refit happened; budget is spent so the proposal cannot move, but
+        # the model now reflects the corrected sample
+        assert tuner.samples[4].wall_s == 0.01
+        assert tuner.propose() == 1 and tuner.retunes == 3
+
+    def test_single_candidate_needs_no_retunes(self):
+        tuner = Autotuner([1, 1, 1], seed=0)   # 1 block/location: ladder [1]
+        traj = _drive(tuner, lambda p: 0.1, iters=3)
+        assert traj == [1, 1, 1]
+        assert tuner.retunes == 0 and tuner.propose() == 1
+
+    def test_untraced_sample_supersedes_traced(self):
+        tuner = Autotuner([8, 8], seed=0)
+        tuner.observe(1, 5.0, traced=True)     # first visit pays re-tracing
+        assert tuner.samples[1].wall_s == 5.0
+        tuner.observe(1, 0.5, traced=False)    # steady state replaces it
+        assert tuner.samples[1].wall_s == 0.5
+        tuner.observe(1, 9.0, traced=True)     # later traced never regresses it
+        assert tuner.samples[1].wall_s == 0.5
+
+
+# ---------------------------------------------------------------------------
+# regroup-without-resplit: the prepare-cache contract
+# ---------------------------------------------------------------------------
+
+
+class TestRegroupWithoutResplit:
+    def test_ppl_change_regroups_without_resplit(self):
+        _, ba = _blocked(96, 8, 4)
+        ex = LocalExecutor()
+        for ppl in (1, 2, 4, 2, 1):
+            res = _sum_plan(ba, SplIter(partitions_per_location=ppl)).compute(executor=ex)
+            assert res.report.bytes_moved == 0
+        st = ex.prepare_stats
+        assert st.splits == 1          # ONE placement scan for five granularities
+        assert st.regroups == 2        # ppl 2 and 4 derived logically; revisits cached
+        assert st.hits == 4            # every execute after the first hit the base
+
+    def test_regrouped_groups_equal_fresh_split(self):
+        """The regroup path must yield block-for-block what spliter() yields."""
+        _, ba = _blocked(97, 12, 3)   # ragged tail, rr placement
+        ex = LocalExecutor()
+        for ppl in (1, 2, 3, 4):
+            prepared = ex._prepare((ba,), SplIter(partitions_per_location=ppl),
+                                   ex.engine.report)
+            want = [(p.location, p.block_ids)
+                    for p in spliter(ba, partitions_per_location=ppl)]
+            got = [(g.location, g.block_ids) for g in prepared.groups]
+            assert got == want, f"ppl={ppl}"
+
+    def test_materialize_and_fusion_share_the_split_base(self):
+        _, ba = _blocked(96, 8, 4)
+        ex = LocalExecutor()
+        _sum_plan(ba, SplIter()).compute(executor=ex)
+        _sum_plan(ba, SplIter(materialize=True)).compute(executor=ex)
+        _sum_plan(ba, SplIter(fusion="scan")).compute(executor=ex)
+        assert ex.prepare_stats.splits == 1
+
+    def test_rechunk_and_baseline_paths_unchanged(self):
+        _, ba = _blocked(96, 8, 4)
+        from repro.api import Baseline, Rechunk
+
+        ex = LocalExecutor()
+        r1 = _sum_plan(ba, Rechunk()).compute(executor=ex)
+        r2 = _sum_plan(ba, Rechunk()).compute(executor=ex)
+        assert r1.report.bytes_moved > 0 and r2.report.bytes_moved == 0
+        assert ex.prepare_stats.rechunks == 1
+        _sum_plan(ba, Baseline()).compute(executor=ex)
+        assert ex.prepare_stats.splits == 0  # rechunk/baseline build no split base
+
+
+# ---------------------------------------------------------------------------
+# profiling layer
+# ---------------------------------------------------------------------------
+
+
+class TestProfileStore:
+    def test_scheduler_populates_profiles(self):
+        _, ba = _blocked(96, 8, 4)
+        ex = LocalExecutor()
+        _sum_plan(ba, SplIter()).compute(executor=ex)
+        profs = ex.profile.snapshot()
+        kinds = {p.kind for p in profs}
+        assert "partition_scan" in kinds and "merge" in kinds
+        scan = next(p for p in profs if p.kind == "partition_scan")
+        assert scan.calls == 4 and scan.tasks == 4         # one per location
+        assert scan.blocks == ba.num_blocks
+        assert scan.rows == 96
+        assert scan.nbytes == 96 * 3 * 4                   # float32 (96,3)
+        assert scan.wall_s >= scan.dispatch_s >= 0.0
+        assert ex.profile.mean_task_overhead_s(("partition_scan",)) >= 0.0
+
+    def test_profiles_key_on_signature_not_call(self):
+        _, ba = _blocked(96, 8, 4)
+        ex = LocalExecutor()
+        plan = _sum_plan(ba, SplIter())
+        plan.compute(executor=ex)
+        plan.compute(executor=ex)
+        scan = [p for p in ex.profile.snapshot() if p.kind == "partition_scan"]
+        assert len(scan) == 1            # same signature aggregates
+        assert scan[0].calls == 8        # 4 tasks × 2 iterations
+
+    def test_all_backends_emit_events(self):
+        _, ba = _blocked(96, 8, 4)
+        for mk in (LocalExecutor, ThreadedExecutor, MeshExecutor):
+            ex = mk()
+            _sum_plan(ba, SplIter()).compute(executor=ex)
+            assert ex.profile.events, mk.__name__
+            if hasattr(ex, "close"):
+                ex.close()
+
+    def test_mesh_records_sharded_units(self):
+        _, ba = _blocked(96, 8, 4)
+        ex = MeshExecutor()
+        _sum_plan(ba, SplIter()).compute(executor=ex)
+        sharded = [p for p in ex.profile.snapshot() if p.kind == "sharded"]
+        assert len(sharded) == 1
+        assert sharded[0].tasks == 4     # all four partitions in one dispatch
+
+
+# ---------------------------------------------------------------------------
+# SplIter("auto") end to end
+# ---------------------------------------------------------------------------
+
+
+class TestAutoPolicy:
+    def test_as_policy_spelling(self):
+        pol = as_policy("spliter_auto")
+        assert pol == AUTO and pol.autotuned
+        assert pol.mode_name == "spliter_auto"
+        assert AUTO.mode_name == "spliter_auto"
+        assert SplIter(2).mode_name == "spliter"
+
+    def test_auto_requires_no_knob_and_matches_fixed(self):
+        pts, ba = _blocked(96, 8, 4)
+        ex = LocalExecutor()
+        plan = _sum_plan(ba, AUTO)
+        for _ in range(6):
+            res = plan.compute(executor=ex)
+            np.testing.assert_allclose(
+                np.asarray(res.value), pts.sum(0), rtol=2e-4, atol=2e-4
+            )
+            assert res.report.bytes_moved == 0
+            assert res.report.granularity >= 1
+
+    def test_retunes_move_zero_bytes_and_never_resplit(self):
+        """The acceptance contract: granularity retunes between iterations
+        are logical regroups — prepare-cache hits, zero block re-splits,
+        bytes_moved == 0."""
+        _, ba = _blocked(2 * 8 * 64, 64, 2)   # 8 blocks/location
+        ex = LocalExecutor()
+        plan = _sum_plan(ba, AUTO)
+        reports = [plan.compute(executor=ex).report for _ in range(6)]
+        retunes = sum(r.retunes for r in reports)
+        assert retunes >= 2                    # the ladder was actually walked
+        assert retunes <= 3                    # ...within the retune budget
+        st = ex.prepare_stats
+        assert st.splits == 1                  # ZERO re-splits across retunes
+        assert st.regroups >= 2                # granularities served logically
+        assert st.hits == 5                    # every later iteration hit the cache
+        assert all(r.bytes_moved == 0 for r in reports)
+        assert all(r.granularity >= 1 for r in reports)
+
+    def test_auto_probes_ladder_then_settles(self):
+        _, ba = _blocked(2 * 8 * 64, 64, 2)
+        ex = LocalExecutor()
+        plan = _sum_plan(ba, AUTO)
+        traj = [plan.compute(executor=ex).report.granularity for _ in range(7)]
+        assert traj[:3] == [1, 2, 4]           # deterministic probe prefix (seed 0)
+        assert all(g in (1, 2, 4, 8) for g in traj)  # ladder members only
+        (_, tuner), = ex._tuners.values()
+        assert tuner.retunes <= 3              # bounded: ≤3 changes ever
+        # eventual constancy is structural: executed changes never exceed
+        # the tuner's retune count (a final observe may retarget once more
+        # without another execution showing it), which is capped at 3
+        changes = sum(a != b for a, b in zip(traj, traj[1:]))
+        assert changes <= tuner.retunes
+
+    def test_auto_seed_changes_probe_order(self):
+        _, ba = _blocked(2 * 8 * 64, 64, 2)
+        ex = LocalExecutor()
+        plan = _sum_plan(ba, SplIter(partitions_per_location="auto", autotune_seed=1))
+        traj = [plan.compute(executor=ex).report.granularity for _ in range(3)]
+        assert traj == [2, 4, 1]               # rotated probe prefix
+
+    @pytest.mark.parametrize("mk", [LocalExecutor, ThreadedExecutor, MeshExecutor],
+                             ids=lambda c: c.__name__)
+    def test_auto_matches_fixed_on_every_backend(self, mk):
+        pts, ba = _blocked(97, 12, 3)          # ragged tail
+        ex = mk()
+        plan = _sum_plan(ba, AUTO)
+        for _ in range(4):
+            res = plan.compute(executor=ex)
+            np.testing.assert_allclose(
+                np.asarray(res.value), pts.sum(0), rtol=2e-4, atol=2e-4
+            )
+        assert ex.prepare_stats.splits == 1
+        if hasattr(ex, "close"):
+            ex.close()
+
+    def test_distinct_workloads_get_distinct_tuners(self):
+        _, ba = _blocked(96, 8, 4)
+        ex = LocalExecutor()
+        _sum_plan(ba, AUTO).compute(executor=ex)
+        (
+            Collection.from_blocked(ba)
+            .split(AUTO)
+            .map_blocks(lambda b: jnp.max(b, 0))
+            .reduce(jnp.maximum)
+            .compute(executor=ex)
+        )
+        assert len(ex._tuners) == 2
+
+    def test_lower_resolves_auto_for_inspection(self):
+        _, ba = _blocked(96, 8, 4)
+        ex = LocalExecutor()
+        graph = ex.lower(_sum_plan(ba, AUTO).plan())
+        assert all(t.kind == "partition_scan" for t in graph.tasks)
+
+
+# ---------------------------------------------------------------------------
+# the converging-ppl integration test (k-means, the paper's iterative app)
+# ---------------------------------------------------------------------------
+
+
+class TestKMeansAutoIntegration:
+    def test_kmeans_auto_converges_and_never_resplits(self):
+        from repro.core.apps.kmeans import kmeans
+
+        rng = np.random.default_rng(0)
+        pts = rng.random((2 * 4 * 256, 4)).astype(np.float32)
+        x = BlockedArray.from_array(
+            jnp.asarray(pts), 256, num_locations=2, policy=round_robin_placement
+        )
+        ex = LocalExecutor()
+        res = kmeans(x, k=4, iters=8, policy=AUTO, executor=ex)
+
+        # correctness: identical clustering to a hand-picked granularity
+        ref = kmeans(x, k=4, iters=8, policy=SplIter(), executor=LocalExecutor())
+        np.testing.assert_allclose(
+            np.asarray(res.centers), np.asarray(ref.centers), rtol=2e-3, atol=2e-3
+        )
+
+        # convergence: ≤3 granularity changes ever — eventual constancy is
+        # structural, not statistical
+        assert res.total_retunes <= 3
+        traj = res.granularity_trajectory
+        assert all(g >= 1 for g in traj)
+        assert sum(a != b for a, b in zip(traj, traj[1:])) <= 3
+
+        # regroup-without-resplit: one split, zero bytes, later iters cached
+        st = ex.prepare_stats
+        assert st.splits == 1
+        assert res.total_bytes_moved == 0
+        assert st.hits == len(traj) - 1
