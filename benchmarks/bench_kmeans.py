@@ -14,7 +14,15 @@ from repro.api import Baseline, Rechunk, SplIter
 from repro.core.apps.kmeans import kmeans
 from repro.core.blocked import BlockedArray, round_robin_placement
 
-from benchmarks.harness import Table, policy_label, smoke_executors, timeit, winsorized
+from benchmarks.harness import (
+    Table,
+    check_stream_bounds,
+    policy_label,
+    smoke_executors,
+    stream_disk_setup,
+    timeit,
+    winsorized,
+)
 
 POLICIES = (
     Baseline(),
@@ -49,6 +57,25 @@ def _run(x, policy, *, k, iters, repeats):
     return stats, res
 
 
+def _aggregate_row(pol, executor_name: str, warm, res) -> dict:
+    """One BENCH_kmeans row aggregating a whole multi-iteration run."""
+    return {
+        "policy": policy_label(pol),
+        "executor": executor_name,
+        "wall_s": round(res.total_wall_s, 5),
+        "dispatches": res.total_dispatches,
+        "merges": sum(r.merges for r in res.reports),
+        "traces": sum(r.traces for r in res.reports),
+        "bytes_moved": res.total_bytes_moved,
+        "prep_bytes": warm.total_bytes_moved,
+        "granularity": res.reports[-1].granularity,
+        "retunes": res.total_retunes,
+        "bytes_loaded": sum(r.bytes_loaded for r in res.reports),
+        "bytes_spilled": sum(r.bytes_spilled for r in res.reports),
+        "prefetch_hits": sum(r.prefetch_hits for r in res.reports),
+    }
+
+
 def smoke() -> list[dict]:
     """Toy-size policy×executor grid for the CI smoke job (BENCH_kmeans).
 
@@ -61,21 +88,37 @@ def smoke() -> list[dict]:
         for name, ex in smoke_executors():
             warm = kmeans(x, k=4, iters=3, policy=pol, executor=ex)  # warm+prepare
             res = kmeans(x, k=4, iters=3, policy=pol, executor=ex)   # steady state
-            rows.append({
-                "policy": policy_label(pol),
-                "executor": name,
-                "wall_s": round(res.total_wall_s, 5),
-                "dispatches": res.total_dispatches,
-                "merges": sum(r.merges for r in res.reports),
-                "traces": sum(r.traces for r in res.reports),
-                "bytes_moved": res.total_bytes_moved,
-                "prep_bytes": warm.total_bytes_moved,
-                "granularity": res.reports[-1].granularity,
-                "retunes": res.total_retunes,
-            })
+            rows.append(_aggregate_row(pol, name, warm, res))
             if hasattr(ex, "close"):
                 ex.close()
+    rows.append(_stream_disk_row())
     return rows
+
+
+def _stream_disk_row() -> dict:
+    """The store=disk axis: 3 Lloyd iterations over a 4×-budget dataset.
+
+    The iterative stress case for the chunk tier: every iteration re-streams
+    all spilled blocks (aggregate ``bytes_loaded`` ≈ iters × dataset) while
+    centers stay bit-identical to the in-memory run.
+    """
+    x = _dataset(2, 16, 1024, d=4)
+    pol = SplIter(partitions_per_location=16)
+    ref = kmeans(x, k=4, iters=3, policy=pol)
+    (xd,), store, ex = stream_disk_setup(x)
+    warm = kmeans(xd, k=4, iters=3, policy=pol, executor=ex)
+    res = kmeans(xd, k=4, iters=3, policy=pol, executor=ex)
+    assert bool(jnp.all(res.centers == ref.centers)), "stream-disk kmeans diverged"
+    check_stream_bounds(
+        store,
+        prefetch_hits=sum(r.prefetch_hits for r in res.reports),
+        bytes_loaded=sum(r.bytes_loaded for r in res.reports),
+        context="kmeans stream-disk",
+    )
+    row = _aggregate_row(pol, "stream-disk", warm, res)
+    ex.close()
+    store.close()
+    return row
 
 
 def bench(quick: bool = True) -> list[Table]:

@@ -17,7 +17,15 @@ from repro.api import Baseline, LocalExecutor, Rechunk, SplIter
 from repro.core.apps.knn import _lookup, knn
 from repro.core.blocked import BlockedArray, round_robin_placement
 
-from benchmarks.harness import Table, report_row, smoke_executors, timeit, winsorized
+from benchmarks.harness import (
+    Table,
+    check_stream_bounds,
+    report_row,
+    smoke_executors,
+    stream_disk_setup,
+    timeit,
+    winsorized,
+)
 
 POLICIES = (
     Baseline(),
@@ -51,7 +59,38 @@ def smoke() -> list[dict]:
                                    prep_bytes=cold.bytes_moved))
             if hasattr(ex, "close"):
                 ex.close()
+    rows.append(_stream_disk_row())
     return rows
+
+
+def _stream_disk_row() -> dict:
+    """The store=disk axis: 4×-budget fit dataset, consolidated structures.
+
+    The map_partitions path: structures build from streamed chunk views
+    (one block per partition), then the query loop runs against the
+    (resident) structures; neighbor ids must match the in-memory run
+    exactly — global row ordering survives the chunk tier.
+    """
+    rng = np.random.default_rng(0)
+    d = 3
+    fit_mem = _blocked(rng.random((2 * 16 * 128, d)).astype(np.float32), 128, 2)
+    qry = _blocked(rng.random((512, d)).astype(np.float32), 256, 2)
+    pol = SplIter(partitions_per_location=16)
+    ref = knn(fit_mem, qry, k=4, policy=pol)
+    (fit_disk,), store, ex = stream_disk_setup(fit_mem)
+    cold = knn(fit_disk, qry, k=4, policy=pol, executor=ex)
+    res = knn(fit_disk, qry, k=4, policy=pol, executor=ex)
+    assert bool(jnp.all(res.indices == ref.indices)), "stream-disk knn ids diverged"
+    assert bool(jnp.all(res.distances == ref.distances))
+    check_stream_bounds(
+        store, prefetch_hits=res.report.prefetch_hits,
+        bytes_loaded=res.report.bytes_loaded, context="knn stream-disk",
+    )
+    row = report_row(pol, "stream-disk", res.report,
+                     prep_bytes=cold.report.bytes_moved)
+    ex.close()
+    store.close()
+    return row
 
 
 def bench(quick: bool = True) -> list[Table]:

@@ -15,7 +15,15 @@ from repro.api import Baseline, LocalExecutor, Rechunk, SplIter
 from repro.core.apps.cascade_svm import cascade_svm
 from repro.core.blocked import BlockedArray, round_robin_placement
 
-from benchmarks.harness import Table, report_row, smoke_executors, timeit, winsorized
+from benchmarks.harness import (
+    Table,
+    check_stream_bounds,
+    report_row,
+    smoke_executors,
+    stream_disk_setup,
+    timeit,
+    winsorized,
+)
 
 POLICIES = (
     Baseline(),
@@ -76,7 +84,35 @@ def smoke() -> list[dict]:
                                    prep_bytes=cold.bytes_moved))
             if hasattr(ex, "close"):
                 ex.close()
+    rows.append(_stream_disk_row())
     return rows
+
+
+def _stream_disk_row() -> dict:
+    """The store=disk axis: aligned points+labels chunked into ONE store.
+
+    The multi-input case: x and y blocks share the chunk tier and stream
+    together through each zipped partition view; support vectors must be
+    bit-identical to the in-memory cascade.
+    """
+    x, y = _dataset(2, 16, 512, d=4)
+    pol = SplIter(partitions_per_location=16)
+    ref = cascade_svm(x, y, num_sv=16, steps=30, iterations=1, policy=pol)
+    (xd, yd), store, ex = stream_disk_setup(x, y)
+    cold = cascade_svm(xd, yd, num_sv=16, steps=30, iterations=1,
+                       policy=pol, executor=ex)
+    res = cascade_svm(xd, yd, num_sv=16, steps=30, iterations=1,
+                      policy=pol, executor=ex)
+    assert bool(jnp.all(res.sv_x == ref.sv_x)), "stream-disk svm SVs diverged"
+    check_stream_bounds(
+        store, prefetch_hits=res.report.prefetch_hits,
+        bytes_loaded=res.report.bytes_loaded, context="svm stream-disk",
+    )
+    row = report_row(pol, "stream-disk", res.report,
+                     prep_bytes=cold.report.bytes_moved)
+    ex.close()
+    store.close()
+    return row
 
 
 def bench(quick: bool = True) -> list[Table]:

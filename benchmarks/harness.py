@@ -137,15 +137,66 @@ def report_row(
         "prep_bytes": report.bytes_moved if prep_bytes is None else prep_bytes,
         "granularity": report.granularity,
         "retunes": report.retunes,
+        "bytes_loaded": report.bytes_loaded,
+        "bytes_spilled": report.bytes_spilled,
+        "prefetch_hits": report.prefetch_hits,
     }
 
 
 def smoke_executors():
-    """Fresh (name, executor) pairs for the policy×executor smoke grid."""
-    from repro.api import LocalExecutor, MeshExecutor, ThreadedExecutor
+    """Fresh (name, executor) pairs for the policy×executor smoke grid.
+
+    ``stream`` runs on in-memory inputs here (no chunk store): it must
+    degrade to plain sequential execution with LocalExecutor's structural
+    numbers.  The out-of-core axis is separate — see :func:`stream_disk_row`.
+    """
+    from repro.api import LocalExecutor, MeshExecutor, StreamExecutor, ThreadedExecutor
 
     return [
         ("local", LocalExecutor()),
         ("threaded", ThreadedExecutor()),
         ("mesh", MeshExecutor()),
+        ("stream", StreamExecutor()),
     ]
+
+
+#: residency budget = dataset bytes / this factor on the store=disk axis —
+#: the acceptance configuration: the dataset cannot fit, so it must stream.
+DISK_BUDGET_FRACTION = 4
+
+#: peak resident chunk bytes must stay under budget × this bound while the
+#: 4×-budget dataset streams (current partition + prefetched partition +
+#: one in-flight insert).
+RESIDENCY_BOUND = 1.25
+
+
+def stream_disk_setup(*arrays, budget_fraction: int = DISK_BUDGET_FRACTION):
+    """Chunk ``arrays`` into one DiskStore sized 1/``budget_fraction`` of them.
+
+    Returns ``(chunked_arrays, store, StreamExecutor)`` — the ``store=disk``
+    bench axis: the dataset is ``budget_fraction``× the residency budget,
+    so completing at all proves out-of-core streaming works.
+    """
+    from repro.api import DiskStore, StreamExecutor
+
+    total = sum(a.nbytes for a in arrays)
+    store = DiskStore(residency_bytes=max(1, total // budget_fraction))
+    chunked = tuple(a.to_store(store) for a in arrays)
+    return chunked, store, StreamExecutor(close_stores=False)
+
+
+def check_stream_bounds(store, *, prefetch_hits: int, bytes_loaded: int, context: str) -> None:
+    """Assert the out-of-core row's acceptance bounds (fail the smoke job).
+
+    Bounded RSS — peak resident chunk bytes within ``RESIDENCY_BOUND`` of
+    the budget — and a warm streaming pipeline.  Result equality vs the
+    in-memory run is asserted by the caller, which has both values.
+    """
+    budget = store.residency_bytes
+    peak = store.stats.peak_resident_bytes
+    assert peak <= RESIDENCY_BOUND * budget, (
+        f"{context}: peak resident {peak}B exceeds {RESIDENCY_BOUND}x "
+        f"budget ({budget}B)"
+    )
+    assert prefetch_hits > 0, f"{context}: prefetch pipeline never hit"
+    assert bytes_loaded > 0, f"{context}: nothing streamed from spill"

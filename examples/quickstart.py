@@ -15,10 +15,12 @@ import numpy as np
 from repro.api import (
     Baseline,
     Collection,
+    DiskStore,
     LocalExecutor,
     MeshExecutor,
     Rechunk,
     SplIter,
+    StreamExecutor,
     ThreadedExecutor,
 )
 from repro.core.blocked import BlockedArray, round_robin_placement
@@ -108,3 +110,31 @@ for i in range(5):
 print(f"prepare stats: {ex.prepare_stats}  (splits stays 1: regroup-without-resplit)")
 print("profile:", [(p.kind, p.calls, round(p.mean_dispatch_s * 1e3, 3))
                    for p in ex.profile.snapshot()[:3]], "(kind, calls, mean dispatch ms)")
+
+# -- 10. out of core: blocks behind a chunk store ------------------------------
+# The same dataset, but the blocks live in a DiskStore whose residency
+# budget is a QUARTER of the dataset: only ~budget bytes are ever resident;
+# evicted blocks spill to .npy files and the StreamExecutor prefetches
+# partition k+1 while partition k computes.  Same policy, same TaskGraph,
+# same merge order — the streamed result is bit-identical to the in-memory
+# one (bit-identity holds per policy; different granularities reassociate).
+fine = SplIter(partitions_per_location=8)        # fine partitions: bounded RSS
+ref = col.split(fine).map_blocks(block_sum).reduce(combine).compute(
+    executor=LocalExecutor())
+store = DiskStore(residency_bytes=x.nbytes // 4)
+sx = x.to_store(store)                           # same blocking, chunk refs now
+sex = StreamExecutor()
+stream = (
+    Collection.from_blocked(sx)
+    .split(fine)
+    .map_blocks(block_sum)
+    .reduce(combine)
+    .compute(executor=sex)
+)
+print(f"stream: dispatches={stream.report.dispatches} "
+      f"loaded={stream.report.bytes_loaded}B spilled={stream.report.bytes_spilled}B "
+      f"prefetch_hits={stream.report.prefetch_hits} "
+      f"peak_resident={store.stats.peak_resident_bytes}B "
+      f"(budget {store.residency_bytes}B) "
+      f"bit_identical={bool(jnp.all(stream.value == ref.value))}")
+sex.close()                                      # spill files removed here

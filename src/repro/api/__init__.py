@@ -13,9 +13,17 @@ Public surface:
   Capabilities)`` into a frozen :class:`TaskGraph` of placed, keyed
   :class:`~repro.api.lowering.Task` descriptors; **scheduling** backends
   consume it — :class:`LocalExecutor` (sequential, seed-equivalent),
-  :class:`ThreadedExecutor` (persistent worker thread per location) and
-  :class:`MeshExecutor` (sharded dispatch over a JAX device mesh).  All
-  report costs via :class:`~repro.core.engine.EngineReport`.
+  :class:`ThreadedExecutor` (persistent worker thread per location),
+  :class:`MeshExecutor` (sharded dispatch over a JAX device mesh) and
+  :class:`StreamExecutor` (out-of-core streaming with double-buffered
+  prefetch).  All report costs via
+  :class:`~repro.core.engine.EngineReport`.
+* The chunk tier (:mod:`repro.api.chunkstore`, DESIGN.md §10): blocks as
+  :class:`ChunkRef` handles resolved at dispatch time, behind a
+  :class:`ChunkStore` — :class:`InMemoryStore` (today's semantics) or
+  :class:`DiskStore` (LRU residency budget, spill-on-eviction,
+  pin/unpin) — so datasets larger than memory stream with bounded
+  residency and bit-identical results.
 * :class:`~repro.api.kernels.PartitionKernel` /
   :func:`~repro.api.kernels.register_partition_kernel` — the registry
   through which a ``map_blocks`` fn declares a fused Pallas partition
@@ -33,6 +41,16 @@ Public surface:
 """
 
 from repro.api.autotune import Autotuner, CostModel, fit_cost_model
+from repro.api.chunkstore import (
+    ChunkPinnedError,
+    ChunkRef,
+    ChunkStore,
+    ChunkStoreError,
+    DiskStore,
+    InMemoryStore,
+    StoreStats,
+    resolve_chunk,
+)
 from repro.api.collection import Collection
 from repro.api.executors import (
     ComputeResult,
@@ -60,6 +78,7 @@ from repro.api.mesh_executor import MeshExecutor
 from repro.api.plan import ExecutionPlan, PlanError
 from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter, as_policy
 from repro.api.profile import ProfileEvent, ProfileStore, TaskProfile
+from repro.api.stream_executor import StreamExecutor
 
 __all__ = [
     "Collection",
@@ -68,6 +87,15 @@ __all__ = [
     "LocalExecutor",
     "ThreadedExecutor",
     "MeshExecutor",
+    "StreamExecutor",
+    "ChunkRef",
+    "ChunkStore",
+    "ChunkStoreError",
+    "ChunkPinnedError",
+    "InMemoryStore",
+    "DiskStore",
+    "StoreStats",
+    "resolve_chunk",
     "PartitionView",
     "PrepareStats",
     "Autotuner",

@@ -141,6 +141,20 @@ class Autotuner:
     executor calls :meth:`propose` before each execution and
     :meth:`observe` after it with the measured wall time; the tuner never
     changes its proposal more than ``max_retunes`` times.
+
+    The schedule is deterministic — same block counts + seed, same probes:
+
+    >>> from repro.api import Autotuner
+    >>> tuner = Autotuner([8, 8], seed=0)   # two locations, 8 blocks each
+    >>> tuner.ladder                         # candidate ppls
+    [1, 2, 4, 8]
+    >>> tuner.propose()                      # first probe
+    1
+    >>> tuner.observe(1, wall_s=0.5)
+    >>> tuner.propose()                      # schedule advances to probe 2
+    2
+    >>> tuner.probing
+    True
     """
 
     def __init__(

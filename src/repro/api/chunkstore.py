@@ -1,0 +1,583 @@
+"""Chunk storage — block buffers behind references, resolved at dispatch time.
+
+Every layer built before this module assumed all blocks of a
+:class:`~repro.core.blocked.BlockedArray` are resident jax arrays, which
+caps dataset size at host memory.  Following the chunks-and-tasks model
+(Rubensson & Rudberg, 2012 — tasks name *chunk identifiers*, the runtime
+manages where chunk data lives), a block may instead be a :class:`ChunkRef`:
+a tiny metadata handle (shape/dtype + a store id) whose buffer a
+:class:`ChunkStore` materializes only when a task's operands are built.
+Everything metadata-only — placement scans, splits, regroups, lowering —
+keeps working on refs without touching bytes (asserted via ``StoreStats``).
+
+Two stores:
+
+:class:`InMemoryStore`
+    Chunks are plain resident arrays; semantics identical to pre-chunk
+    behaviour (no budget, no spill, zero accounting).  The degenerate store
+    that keeps the abstraction free for in-memory workloads.
+:class:`DiskStore`
+    Out-of-core store with an LRU *residency budget*: resident chunks live
+    in host memory up to ``residency_bytes``; eviction spills a
+    never-written chunk to a ``.npy`` file (spill-on-eviction — a chunk
+    that is never evicted never touches disk) and later accesses reload it
+    via a memory-mapped read.  ``pin``/``unpin`` (refcounted) protect the
+    chunks a running task resolves from eviction; evicting a pinned chunk
+    is refused with :class:`ChunkPinnedError`.
+
+Example — a 64 KiB dataset streamed through a 16 KiB budget::
+
+    >>> import numpy as np
+    >>> from repro.api.chunkstore import DiskStore
+    >>> store = DiskStore(residency_bytes=16 * 1024)
+    >>> blocks = [np.full((1024,), i, np.float32) for i in range(16)]  # 4 KiB each
+    >>> refs = [store.put(b) for b in blocks]
+    >>> store.stats.resident_bytes <= 16 * 1024
+    True
+    >>> float(refs[0].resolve()[0])        # reloads the spilled chunk
+    0.0
+    >>> store.stats.bytes_spilled > 0 and store.stats.bytes_loaded > 0
+    True
+    >>> store.close()                      # removes every spill file
+
+Accounting flows upward: executors snapshot each store's
+:class:`StoreStats` around an execution and report the deltas as
+``EngineReport.bytes_loaded`` / ``bytes_spilled`` / ``prefetch_hits``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import collections
+import os
+import shutil
+import tempfile
+import threading
+import weakref
+from typing import Iterable, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+__all__ = [
+    "ChunkRef",
+    "ChunkStore",
+    "ChunkStoreError",
+    "ChunkPinnedError",
+    "InMemoryStore",
+    "DiskStore",
+    "StoreStats",
+    "resolve_chunk",
+    "chunk_stores",
+]
+
+
+class ChunkStoreError(RuntimeError):
+    """A chunk operation failed (unknown ref, closed store, ...)."""
+
+
+class ChunkPinnedError(ChunkStoreError):
+    """Refused to evict a chunk that is pinned by a running task."""
+
+
+class ChunkRef:
+    """A reference to one block held by a :class:`ChunkStore`.
+
+    Mirrors the metadata surface of a jax array (``shape``, ``dtype``,
+    ``nbytes``) so geometry code — block_rows, row shapes, lowering's
+    ``data_shapes`` — works on refs without resolving them.  The buffer
+    itself materializes only through :meth:`resolve` (equivalently
+    ``store.get(ref)``), which is what "resolved at dispatch time" means:
+    task ``operands()`` closures call it when the task actually runs.
+    """
+
+    __slots__ = ("store", "chunk_id", "shape", "dtype", "__weakref__")
+
+    def __init__(self, store: "ChunkStore", chunk_id: int, shape: tuple, dtype):
+        self.store = store
+        self.chunk_id = chunk_id
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * self.dtype.itemsize if self.shape else self.dtype.itemsize
+
+    def resolve(self) -> jax.Array:
+        """Materialize the chunk's buffer (loading from spill if needed)."""
+        return self.store.get(self)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"ChunkRef(id={self.chunk_id}, shape={self.shape}, "
+            f"dtype={self.dtype.name}, store={type(self.store).__name__})"
+        )
+
+
+def resolve_chunk(block):
+    """``block`` if it is already an array, else the resolved chunk buffer.
+
+    The single dispatch-time hook: every place that turns block metadata
+    into operand bytes (lowering's ``operands()`` closures, partition
+    views, ``collect()``/``materialize()``) goes through it, so a
+    :class:`BlockedArray` of refs and one of arrays are interchangeable.
+    """
+    if isinstance(block, ChunkRef):
+        return block.resolve()
+    return block
+
+
+def chunk_stores(arrays: Iterable) -> list["ChunkStore"]:
+    """Distinct stores backing any chunk-ref blocks of ``arrays``."""
+    out: list[ChunkStore] = []
+    for a in arrays:
+        for b in getattr(a, "blocks", ()):
+            if isinstance(b, ChunkRef) and b.store not in out:
+                out.append(b.store)
+    return out
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Counters over one store's lifetime (executors report window deltas)."""
+
+    loads: int = 0               # spill-file reads (disk -> resident)
+    bytes_loaded: int = 0
+    spills: int = 0              # spill-file writes (first eviction only)
+    bytes_spilled: int = 0
+    evictions: int = 0           # residency-cache drops (incl. free re-drops)
+    prefetch_hits: int = 0       # get() served by an earlier prefetch()
+    resident_bytes: int = 0
+    peak_resident_bytes: int = 0
+
+    def snapshot(self) -> "StoreStats":
+        return dataclasses.replace(self)
+
+
+@runtime_checkable
+class ChunkStore(Protocol):
+    """The storage contract blocks-as-references rely on.
+
+    ``put`` registers a buffer and returns its :class:`ChunkRef`; ``get``
+    materializes a ref (the dispatch-time resolve); ``pin``/``unpin`` are
+    refcounted eviction guards around a task's lifetime; ``prefetch``
+    loads ahead of use (a later ``get`` of a still-resident prefetched
+    chunk counts as a ``prefetch_hit``); ``trim`` sheds all unpinned
+    residency (executors call it when a prepared dataset falls out of the
+    cache); ``close`` releases every resource, including spill files.
+
+    >>> from repro.api.chunkstore import ChunkStore, InMemoryStore, DiskStore
+    >>> isinstance(InMemoryStore(), ChunkStore)
+    True
+    >>> isinstance(DiskStore(residency_bytes=1 << 20), ChunkStore)
+    True
+    """
+
+    stats: StoreStats
+
+    def put(self, array) -> ChunkRef: ...
+
+    def get(self, ref: ChunkRef) -> jax.Array: ...
+
+    def pin(self, ref: ChunkRef) -> None: ...
+
+    def unpin(self, ref: ChunkRef) -> None: ...
+
+    def prefetch(self, refs: Iterable[ChunkRef]) -> None: ...
+
+    def trim(self) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class InMemoryStore:
+    """Chunks as permanently-resident arrays — today's semantics, kept.
+
+    No budget, no spill, no accounting beyond ``resident_bytes``: a
+    plan over an ``InMemoryStore``-backed collection behaves (and reports)
+    exactly like one over raw block arrays, which is what keeps the chunk
+    abstraction semantics-free until a budgeted store opts in.
+    """
+
+    def __init__(self):
+        self.stats = StoreStats()
+        self._chunks: dict[int, jax.Array] = {}
+        self._next_id = 0
+        self._lock = threading.Lock()
+
+    def put(self, array) -> ChunkRef:
+        import jax.numpy as jnp
+
+        arr = jnp.asarray(array)
+        with self._lock:
+            cid = self._next_id
+            self._next_id += 1
+            self._chunks[cid] = arr
+            self.stats.resident_bytes += arr.nbytes
+            self.stats.peak_resident_bytes = max(
+                self.stats.peak_resident_bytes, self.stats.resident_bytes
+            )
+        return ChunkRef(self, cid, arr.shape, arr.dtype)
+
+    def get(self, ref: ChunkRef) -> jax.Array:
+        try:
+            return self._chunks[ref.chunk_id]
+        except KeyError:
+            raise ChunkStoreError(f"unknown or released chunk {ref.chunk_id}") from None
+
+    def pin(self, ref: ChunkRef) -> None:  # resident forever: nothing to guard
+        pass
+
+    def unpin(self, ref: ChunkRef) -> None:
+        pass
+
+    def prefetch(self, refs: Iterable[ChunkRef]) -> None:  # already resident
+        pass
+
+    def trim(self) -> None:  # in-memory chunks cannot be dropped
+        pass
+
+    def close(self) -> None:
+        with self._lock:
+            self._chunks.clear()
+            self.stats.resident_bytes = 0
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class DiskStore:
+    """LRU-budgeted residency over memory-mapped ``.npy`` spill blocks.
+
+    Args:
+      residency_bytes: target bound on resident chunk bytes.  Eviction
+        keeps unpinned residency under the budget; pinned chunks are never
+        evicted, so the *peak* can transiently exceed the budget by the
+        pinned working set (a streaming executor pins at most the current
+        and the prefetched partition — the double buffer).
+      spill_dir: directory for spill files.  Default: a fresh temp dir,
+        removed on :meth:`close` (and by a GC/atexit finalizer if the
+        store is never closed — no temp-file leaks).
+
+    Lifecycle of a chunk: ``put`` → resident (dirty, no file) → eviction
+    spills it to ``chunk<id>.npy`` once (two-phase: the buffer moves to a
+    pending queue under the lock, the ``np.save`` runs outside it, so
+    spill I/O never blocks concurrent gets or prefetch inserts) → later
+    ``get``/``prefetch`` reload it (memory-mapped read, copied out so the
+    file handle is not held) → further evictions are free drops.  Reloads
+    are bit-identical: ``.npy`` round-trips preserve every bit of the
+    block, which is what makes re-iteration after spill produce
+    bit-identical results.
+    """
+
+    def __init__(self, residency_bytes: int, *, spill_dir: str | None = None):
+        assert residency_bytes >= 1, residency_bytes
+        self.residency_bytes = int(residency_bytes)
+        self._own_dir = spill_dir is None
+        self._dir = (
+            tempfile.mkdtemp(prefix="repro-chunks-") if spill_dir is None else spill_dir
+        )
+        os.makedirs(self._dir, exist_ok=True)
+        self.stats = StoreStats()
+        # resident: chunk_id -> array, LRU order (oldest first)
+        self._resident: collections.OrderedDict[int, object] = collections.OrderedDict()
+        self._meta: dict[int, tuple[tuple, np.dtype, str | None]] = {}  # shape, dtype, spill path
+        self._pins: collections.Counter = collections.Counter()
+        self._prefetched: set[int] = set()
+        # Two-phase eviction: _shrink only MOVES a dirty victim here (under
+        # the lock); the np.save happens in _flush_spills OUTSIDE the lock,
+        # so spill I/O never blocks concurrent gets/prefetch inserts.
+        self._pending_spills: dict[int, object] = {}
+        self._pending_bytes = 0
+        self._spilling: set[int] = set()  # cids with a write in flight
+        self._next_id = 0
+        self._lock = threading.RLock()
+        self._closed = False
+        # GC/interpreter-exit safety net: a store that is never close()d
+        # must still not leak its spill directory.
+        self._finalizer = (
+            weakref.finalize(self, shutil.rmtree, self._dir, True)
+            if self._own_dir
+            else None
+        )
+
+    # -- introspection (tests / diagnostics) --------------------------------
+
+    @property
+    def spill_dir(self) -> str:
+        return self._dir
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def resident_ids(self) -> list[int]:
+        with self._lock:
+            return list(self._resident)
+
+    def spill_files(self) -> list[str]:
+        if not os.path.isdir(self._dir):
+            return []
+        return sorted(f for f in os.listdir(self._dir) if f.endswith(".npy"))
+
+    def is_pinned(self, ref: ChunkRef) -> bool:
+        with self._lock:
+            return self._pins[ref.chunk_id] > 0
+
+    # -- the store contract --------------------------------------------------
+
+    def put(self, array) -> ChunkRef:
+        import jax.numpy as jnp
+
+        if self._closed:
+            raise ChunkStoreError("put() on a closed DiskStore")
+        arr = jnp.asarray(array)
+        with self._lock:
+            cid = self._next_id
+            self._next_id += 1
+            self._meta[cid] = (tuple(arr.shape), np.dtype(arr.dtype), None)
+            self._insert_resident(cid, arr)
+        self._flush_spills()
+        return ChunkRef(self, cid, arr.shape, arr.dtype)
+
+    def get(self, ref: ChunkRef) -> jax.Array:
+        cid = ref.chunk_id
+        with self._lock:
+            if self._closed:
+                raise ChunkStoreError("get() on a closed DiskStore")
+            if cid not in self._meta:
+                raise ChunkStoreError(f"unknown chunk {cid}")
+            arr = self._resident.get(cid)
+            if arr is not None:
+                self._resident.move_to_end(cid)
+                if cid in self._prefetched:
+                    self._prefetched.discard(cid)
+                    self.stats.prefetch_hits += 1
+                return arr
+            pending = self._pending_spills.get(cid)
+            if pending is not None:
+                # Evicted but its spill write hasn't landed yet: the buffer
+                # is still in memory — serve it (no disk read, no reinsert).
+                return pending
+        # Not resident: load outside the lock so a concurrent prefetch
+        # thread never serializes behind this read (and vice versa).
+        arr = self._load(cid)
+        with self._lock:
+            raced = self._resident.get(cid)
+            if raced is not None:  # a concurrent load won; keep one copy
+                self._resident.move_to_end(cid)
+                return raced
+            self._insert_resident(cid, arr)
+        # Only the miss path flushes: a cold load's insert may have
+        # deferred a dirty victim, and without a flush here a gets-only
+        # workload would grow the pending queue without bound.  The hit
+        # path (prefetched chunks) returns above and never pays a write.
+        self._flush_spills()
+        return arr
+
+    def pin(self, ref: ChunkRef) -> None:
+        with self._lock:
+            self._pins[ref.chunk_id] += 1
+
+    def unpin(self, ref: ChunkRef) -> None:
+        with self._lock:
+            cid = ref.chunk_id
+            if self._pins[cid] > 0:
+                self._pins[cid] -= 1
+            # Spill-on-release: dropping the last pin is the moment a
+            # streamed partition stops being needed — shed any overshoot.
+            if self._pins[cid] == 0:
+                self._shrink()
+        self._flush_spills()
+
+    def prefetch(self, refs: Iterable[ChunkRef]) -> None:
+        """Load ``refs`` ahead of use; their next ``get`` is a prefetch hit."""
+        for ref in refs:
+            cid = ref.chunk_id
+            with self._lock:
+                if self._closed or cid not in self._meta:
+                    continue
+                if cid in self._resident:
+                    self._resident.move_to_end(cid)
+                    self._prefetched.add(cid)
+                    continue
+                if cid in self._pending_spills:
+                    # Evicted with its spill write still in flight: the
+                    # buffer is in memory and gets are served from pending —
+                    # loading now would race the writer (_load would see
+                    # path=None).  Honor the flusher's invariant like get().
+                    continue
+            arr = self._load(cid)
+            with self._lock:
+                if cid not in self._resident:
+                    self._insert_resident(cid, arr)
+                # The insert's own _shrink may have evicted the chunk again
+                # (budget saturated by pins): only a chunk that is STILL
+                # resident may carry the marker, or a later unrelated get
+                # would count a phantom prefetch hit.
+                if cid in self._resident:
+                    self._prefetched.add(cid)
+        self._flush_spills()
+
+    def evict(self, ref: ChunkRef) -> None:
+        """Explicitly evict one chunk; refused while it is pinned."""
+        with self._lock:
+            cid = ref.chunk_id
+            if self._pins[cid] > 0:
+                raise ChunkPinnedError(
+                    f"chunk {cid} is pinned ({self._pins[cid]} pins); "
+                    "eviction refused"
+                )
+            if cid in self._resident:
+                self._evict_one(cid)
+        self._flush_spills()
+
+    def trim(self) -> None:
+        """Drop every unpinned resident chunk (spilling unwritten ones).
+
+        The release hook the prepare cache and executor ``close()`` use:
+        chunk data becomes reloadable-from-disk instead of resident.
+        """
+        with self._lock:
+            for cid in [c for c in self._resident if self._pins[c] == 0]:
+                self._evict_one(cid)
+        self._flush_spills()
+
+    def close(self) -> None:
+        """Release resident chunks and delete the spill directory."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._resident.clear()
+            self._meta.clear()
+            self._prefetched.clear()
+            self._pins.clear()
+            self._pending_spills.clear()
+            self._pending_bytes = 0
+            self.stats.resident_bytes = 0
+        if self._finalizer is not None:
+            self._finalizer()  # rmtree now, exactly once
+        elif self._own_dir:  # pragma: no cover — finalizer covers own dirs
+            shutil.rmtree(self._dir, ignore_errors=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- internals (call with lock held unless noted) ------------------------
+
+    def _path(self, cid: int) -> str:
+        return os.path.join(self._dir, f"chunk{cid}.npy")
+
+    def _nbytes(self, cid: int) -> int:
+        shape, dtype, _ = self._meta[cid]
+        return int(np.prod(shape)) * dtype.itemsize if shape else dtype.itemsize
+
+    def _insert_resident(self, cid: int, arr) -> None:
+        self._resident[cid] = arr
+        self.stats.resident_bytes += self._nbytes(cid)
+        # Peak tracks the resident CACHE; a deferred spill buffer is a
+        # transient I/O buffer (bounded: every mutating store call flushes
+        # before returning), not cached residency — including it would make
+        # the peak depend on flush-thread timing.
+        self.stats.peak_resident_bytes = max(
+            self.stats.peak_resident_bytes, self.stats.resident_bytes
+        )
+        self._shrink()
+
+    def _shrink(self) -> None:
+        """Evict LRU unpinned chunks until residency fits the budget."""
+        while self.stats.resident_bytes > self.residency_bytes:
+            victim = next(
+                (c for c in self._resident if self._pins[c] == 0), None
+            )
+            if victim is None:
+                return  # everything resident is pinned: overshoot, recorded in peak
+            self._evict_one(victim)
+
+    def _evict_one(self, cid: int) -> None:
+        """Drop ``cid`` from residency; a dirty chunk's write is DEFERRED.
+
+        Phase one of two-phase eviction (lock held): the buffer moves to
+        ``_pending_spills`` and stays servable from memory; phase two
+        (:meth:`_flush_spills`, lock released) performs the ``np.save``.
+        """
+        arr = self._resident.pop(cid)
+        _shape, _dtype, path = self._meta[cid]
+        if path is None:  # spill-on-eviction: first eviction writes the file
+            self._pending_spills[cid] = arr
+            self._pending_bytes += self._nbytes(cid)
+        self.stats.evictions += 1
+        self.stats.resident_bytes -= self._nbytes(cid)
+        self._prefetched.discard(cid)
+
+    def _flush_spills(self) -> None:
+        """Write deferred spills to disk.  Call with the lock RELEASED.
+
+        The whole point of the two-phase split: the (slow) ``np.save`` runs
+        here, outside the lock, so concurrent gets and prefetch inserts
+        never serialize behind spill I/O.  Entries stay servable from
+        ``_pending_spills`` until their file path is recorded, so a reader
+        can never observe "not resident, not pending, no file".  Multiple
+        threads may flush concurrently; ``_spilling`` claims a chunk per
+        writer.
+        """
+        while True:
+            with self._lock:
+                cid = next(
+                    (c for c in self._pending_spills if c not in self._spilling),
+                    None,
+                )
+                if cid is None or self._closed:
+                    return
+                arr = self._pending_spills[cid]
+                self._spilling.add(cid)
+                shape, dtype, _ = self._meta[cid]
+            path = self._path(cid)
+            try:
+                np.save(path, np.asarray(arr))
+            except OSError:
+                # close() raced us and removed the spill dir; the store is
+                # (or is about to be) closed — nothing left to persist.
+                with self._lock:
+                    self._spilling.discard(cid)
+                return
+            with self._lock:
+                self._spilling.discard(cid)
+                if self._closed or cid not in self._meta:
+                    return
+                self._meta[cid] = (shape, dtype, path)
+                self.stats.spills += 1
+                self.stats.bytes_spilled += self._nbytes(cid)
+                if cid in self._pending_spills:
+                    del self._pending_spills[cid]
+                    self._pending_bytes -= self._nbytes(cid)
+
+    def _load(self, cid: int):
+        """Read one spilled chunk back (no lock: pure file I/O)."""
+        import jax.numpy as jnp
+
+        with self._lock:
+            meta = self._meta.get(cid)
+        if meta is None:
+            raise ChunkStoreError(f"unknown chunk {cid}")
+        shape, dtype, path = meta
+        if path is None:
+            # Unreachable in practice: a dirty chunk is resident or pending
+            # (both checked by get() before calling _load), and the flusher
+            # records the file path BEFORE removing the pending entry.
+            raise ChunkStoreError(f"chunk {cid} has no resident copy and no spill file")
+        mm = np.load(path, mmap_mode="r")
+        arr = jnp.asarray(np.asarray(mm))  # copy out of the mmap, then free it
+        with self._lock:
+            self.stats.loads += 1
+            self.stats.bytes_loaded += self._nbytes(cid)
+        return arr

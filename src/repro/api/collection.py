@@ -42,7 +42,25 @@ __all__ = ["Collection"]
 
 
 class Collection:
-    """A lazy, executor-backed view over one or more blocked arrays."""
+    """A lazy, executor-backed view over one or more blocked arrays.
+
+    Nothing executes until :meth:`compute`; every fluent method returns a
+    new Collection wrapping a plan node:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.api import Collection, SplIter, LocalExecutor
+    >>> res = (
+    ...     Collection.from_array(jnp.arange(8.0), block_rows=2, num_locations=2)
+    ...     .split(SplIter())
+    ...     .map_blocks(jnp.sum)
+    ...     .reduce(lambda a, b: a + b)
+    ...     .compute(executor=LocalExecutor())
+    ... )
+    >>> float(res.value)
+    28.0
+    >>> res.report.dispatches  # one fused task per location + the merge
+    3
+    """
 
     def __init__(self, node: PlanNode):
         self._node = node
@@ -57,10 +75,18 @@ class Collection:
         *,
         num_locations: int = 1,
         placement: PlacementPolicy = contiguous_placement,
+        store=None,
     ) -> "Collection":
-        """Block ``x`` along axis 0 (ragged tail allowed) and wrap it."""
+        """Block ``x`` along axis 0 (ragged tail allowed) and wrap it.
+
+        With ``store`` (a :class:`~repro.api.chunkstore.ChunkStore`) the
+        blocks become chunk references resolved at dispatch time — pair a
+        :class:`~repro.api.chunkstore.DiskStore` with
+        :class:`~repro.api.StreamExecutor` for out-of-core execution.
+        """
         ba = BlockedArray.from_array(
-            x, block_rows, num_locations=num_locations, policy=placement
+            x, block_rows, num_locations=num_locations, policy=placement,
+            store=store,
         )
         return cls(Source((ba,)))
 

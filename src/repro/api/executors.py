@@ -35,6 +35,15 @@ Backends:
     results are bit-identical to :class:`LocalExecutor`.
 :class:`~repro.api.mesh_executor.MeshExecutor`
     Sharded dispatch over a JAX device mesh (own module).
+:class:`~repro.api.stream_executor.StreamExecutor`
+    Out-of-core streaming over chunk-backed collections with
+    double-buffered prefetch (own module, DESIGN.md §10).  The shared
+    core brackets every unit with resolve/release hooks
+    (:meth:`_PlanExecutor._acquire_unit` / ``_release_unit``) that pin the
+    unit's :class:`~repro.api.chunkstore.ChunkRef` operands around
+    dispatch, so chunk-backed plans run correctly on EVERY backend —
+    streaming ones add lookahead, budget-bounded residency and the
+    ``bytes_loaded`` / ``bytes_spilled`` / ``prefetch_hits`` report bill.
 
 ``SplIter(partitions_per_location="auto")`` closes the loop: the executor
 owns an :class:`~repro.api.autotune.Autotuner` per workload that proposes
@@ -69,6 +78,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.autotune import Autotuner
+from repro.api.chunkstore import chunk_stores
 from repro.api.lowering import (
     Capabilities,
     MergeSpec,
@@ -113,7 +123,19 @@ class ComputeResult:
 
 @runtime_checkable
 class Executor(Protocol):
-    """The contract every execution backend satisfies (DESIGN.md §5)."""
+    """The contract every execution backend satisfies (DESIGN.md §5).
+
+    ``execute`` runs a validated plan; ``task`` registers out-of-plan app
+    stages against the same jit cache and accounting; ``report`` exposes
+    the current :class:`~repro.core.engine.EngineReport`.  All four
+    backends are structural instances:
+
+    >>> from repro.api import (Executor, LocalExecutor, ThreadedExecutor,
+    ...                        MeshExecutor, StreamExecutor)
+    >>> [isinstance(ex(), Executor)
+    ...  for ex in (LocalExecutor, ThreadedExecutor, MeshExecutor, StreamExecutor)]
+    [True, True, True, True]
+    """
 
     def execute(self, plan: ExecutionPlan) -> ComputeResult: ...
 
@@ -346,6 +368,10 @@ class _PlanExecutor:
             and policy.partitions_per_location != tuner.last_ppl
         ):
             report.retunes += 1
+        # Chunk-store accounting: report the I/O this execution caused as
+        # window deltas of the input stores' lifetime counters.
+        stores = chunk_stores(spec.inputs)
+        store_marks = [(s, s.stats.snapshot()) for s in stores]
         prepared = self._prepare(spec.inputs, policy, report)
         graph = lower(spec, prepared.arrays, prepared.groups, self.capabilities)
         # Per-unit wall profiling (block_until_ready between units) would
@@ -362,6 +388,10 @@ class _PlanExecutor:
         value = jax.block_until_ready(value)
         dt = time.perf_counter() - t0
 
+        for store, mark in store_marks:
+            report.bytes_loaded += store.stats.bytes_loaded - mark.bytes_loaded
+            report.bytes_spilled += store.stats.bytes_spilled - mark.bytes_spilled
+            report.prefetch_hits += store.stats.prefetch_hits - mark.prefetch_hits
         if isinstance(policy, SplIter):
             report.granularity = policy.partitions_per_location
         if tuner is not None:
@@ -522,7 +552,31 @@ class _PlanExecutor:
     def _cache_put(self, key: tuple, entry: Any) -> None:
         self._prepare_cache[key] = entry
         while len(self._prepare_cache) > self.prepare_cache_size:
-            self._prepare_cache.popitem(last=False)
+            _, evicted = self._prepare_cache.popitem(last=False)
+            self._release_prepared(evicted)
+
+    def _release_prepared(self, entry: Any) -> None:
+        """Un-cache hook: trim the chunk stores an evicted entry pinned.
+
+        The prepare cache is what keeps a dataset *warm* across iterations;
+        once its entry falls out of the LRU the dataset's resident chunks
+        have no scheduled consumer, so unpinned residency is shed back to
+        the spill tier (in-memory stores: no-op).
+        """
+        for store in chunk_stores(getattr(entry, "inputs", ())):
+            store.trim()
+
+    def close(self) -> None:
+        """Release cached preparations and trim their chunk stores.
+
+        Idempotent; backends with extra resources (worker pools, prefetch
+        threads, owned stores) extend it.
+        """
+        entries = list(self._prepare_cache.values())
+        self._prepare_cache.clear()
+        self._tuners.clear()
+        for entry in entries:
+            self._release_prepared(entry)
 
     # -- the shared scheduler core ---------------------------------------------
 
@@ -579,15 +633,42 @@ class _PlanExecutor:
             return state.results[merge_unit.index]
         return list(state.results)
 
+    def _acquire_unit(self, unit: _Unit) -> None:
+        """Resolve hook before dispatch: pin the unit's chunk operands.
+
+        Pins are refcounted eviction guards — while the unit runs, the
+        residency-budget eviction of its store(s) must not drop buffers the
+        ``operands()`` closure is about to (or did just) resolve.  Units of
+        non-chunked inputs carry no refs and the hook is free.
+        """
+        for task in unit.tasks:
+            for ref in task.chunk_refs:
+                ref.store.pin(ref)
+
+    def _release_unit(self, unit: _Unit) -> None:
+        """Release hook after dispatch: unpin, making the chunks evictable.
+
+        Once ``run()`` returned, the dispatched program holds its own
+        (device) buffers, so the store copies may be spilled — this unpin
+        is what lets a streaming pass shed partition *k* while *k+1* loads.
+        """
+        for task in unit.tasks:
+            for ref in task.chunk_refs:
+                ref.store.unpin(ref)
+
     def _run_unit(self, unit: _Unit, state: _SchedulerState) -> list[_Unit]:
         """Profiled execution of one ready unit; returns newly-ready units."""
         try:
-            t0 = time.perf_counter()
-            value = unit.run()
-            t1 = time.perf_counter()
-            if self.profile.sync:
-                value = jax.block_until_ready(value)
-            wall = time.perf_counter() - t0
+            self._acquire_unit(unit)
+            try:
+                t0 = time.perf_counter()
+                value = unit.run()
+                t1 = time.perf_counter()
+                if self.profile.sync:
+                    value = jax.block_until_ready(value)
+                wall = time.perf_counter() - t0
+            finally:
+                self._release_unit(unit)
             self.profile.record_tasks(
                 unit.tasks,
                 kind=unit.kind,
@@ -636,9 +717,11 @@ class _LocationWorker:
         self._thread.join(timeout=5.0)
 
 
-# Live pools, closed at interpreter exit so executors that were never
-# explicitly close()d don't leave worker threads running into teardown.
-_LIVE_POOLS: "weakref.WeakSet[ThreadedExecutor]" = None  # set below
+# Live worker-owning executors (ThreadedExecutor pools, StreamExecutor
+# prefetchers), closed at interpreter exit so instances that were never
+# explicitly close()d don't leave threads that ran jax work alive into
+# XLA runtime teardown.
+_LIVE_POOLS: "weakref.WeakSet" = None  # set below
 
 
 def _close_live_pools() -> None:
@@ -705,6 +788,7 @@ class ThreadedExecutor(_PlanExecutor):
         for w in self._workers.values():
             w.stop()
         self._workers.clear()
+        super().close()
 
 
 _LIVE_POOLS = weakref.WeakSet()

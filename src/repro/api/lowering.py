@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.chunkstore import ChunkRef
 from repro.api.kernels import PartitionKernel, partition_kernel_for
 from repro.api.plan import MapReduceSpec
 from repro.api.policy import SplIter
@@ -125,12 +126,20 @@ class Capabilities:
         per-backend granularity trade-off of Bora et al. (arXiv:2202.11464).
       grouped_dispatch: backend consumes location groups as single sharded
         dispatches (MeshExecutor) rather than per-task calls.
+      out_of_core: backend streams chunk-backed blocks under a residency
+        budget (StreamExecutor).  Lowering then attaches each task's
+        :class:`~repro.api.chunkstore.ChunkRef` operands to the descriptor
+        (``Task.chunk_refs``) so the scheduler can pin/prefetch/release
+        them around dispatch without materializing operands; non-streaming
+        backends skip the bookkeeping (refs still resolve lazily inside
+        ``operands()``).
     """
 
     name: str = "local"
     pallas_fusion: bool = True
     prefer_pallas: bool = False
     grouped_dispatch: bool = False
+    out_of_core: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +174,7 @@ class PartitionView:
         return self.blocks_of(0)
 
     def blocks_of(self, i: int) -> list[jax.Array]:
-        return [self.arrays[i].blocks[b] for b in self.block_ids]
+        return [self.arrays[i].block(b) for b in self.block_ids]
 
     @property
     def num_rows(self) -> int:
@@ -223,6 +232,10 @@ class Task:
     #: ((shape, dtype_str), ...) of the per-task data operands — lets grouped
     #: backends bucket same-signature tasks WITHOUT materializing operands.
     data_shapes: tuple = ()
+    #: store-held chunk refs this task's operands resolve — populated only
+    #: for out-of-core backends (``Capabilities.out_of_core``), which
+    #: pin/prefetch/release them around dispatch.
+    chunk_refs: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -357,13 +370,22 @@ def lower(
     )
 
     if spec.kind == "map_partitions":
-        tasks = _lower_partition_views(spec, arrays, groups)
+        tasks = _lower_partition_views(spec, arrays, groups, caps)
     else:
         tasks = _lower_map_blocks(spec, arrays, groups, caps)
     return TaskGraph(tasks=tuple(tasks), merge=merge, spec=spec)
 
 
-def _lower_partition_views(spec, arrays, groups) -> list[Task]:
+def _refs_of(arrays, ids, caps: Capabilities) -> tuple:
+    """The chunk refs a task over ``ids`` resolves — out-of-core backends only."""
+    if not caps.out_of_core:
+        return ()
+    return tuple(
+        a.blocks[i] for a in arrays for i in ids if isinstance(a.blocks[i], ChunkRef)
+    )
+
+
+def _lower_partition_views(spec, arrays, groups, caps: Capabilities) -> list[Task]:
     tasks = []
     for g in groups:
         view = PartitionView(arrays=arrays, location=g.location, block_ids=g.block_ids)
@@ -378,6 +400,7 @@ def _lower_partition_views(spec, arrays, groups) -> list[Task]:
                 block_ids=g.block_ids,
                 n_data=1,
                 counted=False,
+                chunk_refs=_refs_of(arrays, g.block_ids, caps),
             )
         )
     return tasks
@@ -410,7 +433,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
 
                 def operands(ids=ids):
                     return tuple(
-                        jnp.stack([a.blocks[b] for b in ids], axis=0) for a in arrays
+                        jnp.stack([a.block(b) for b in ids], axis=0) for a in arrays
                     ) + tuple(extra)
 
                 if choice == "pallas":
@@ -428,6 +451,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                         block_ids=ids,
                         n_data=n_in,
                         kernel_name=kname,
+                        chunk_refs=_refs_of(arrays, ids, caps),
                         data_shapes=tuple(
                             (
                                 (len(ids), *a.blocks[ids[0]].shape),
@@ -442,7 +466,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
         for g in groups:
             def operands(g=g):
                 return tuple(
-                    jnp.concatenate([a.blocks[b] for b in g.block_ids], axis=0)
+                    jnp.concatenate([a.block(b) for b in g.block_ids], axis=0)
                     for a in arrays
                 ) + tuple(extra)
 
@@ -456,6 +480,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                     operands=operands,
                     block_ids=g.block_ids,
                     n_data=n_in,
+                    chunk_refs=_refs_of(arrays, g.block_ids, caps),
                     data_shapes=tuple(
                         (
                             (
@@ -476,7 +501,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
         placed = sorted((b, g.location) for g in groups for b in g.block_ids)
         for b, loc in placed:
             def operands(b=b):
-                return tuple(a.blocks[b] for a in arrays) + tuple(extra)
+                return tuple(a.block(b) for a in arrays) + tuple(extra)
 
             tasks.append(
                 Task(
@@ -488,6 +513,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                     operands=operands,
                     block_ids=(b,),
                     n_data=n_in,
+                    chunk_refs=_refs_of(arrays, (b,), caps),
                     data_shapes=tuple(
                         (a.blocks[b].shape, str(a.blocks[b].dtype)) for a in arrays
                     ),

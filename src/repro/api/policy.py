@@ -80,6 +80,17 @@ class SplIter(ExecutionPolicy):
         (only meaningful with ``partitions_per_location="auto"``); two runs
         with the same seed probe the same granularity ladder in the same
         order.
+
+    Policies are frozen values — construct, compare, hash, done:
+
+    >>> SplIter(partitions_per_location=2).mode_name
+    'spliter'
+    >>> SplIter(materialize=True).mode_name
+    'spliter_mat'
+    >>> SplIter(partitions_per_location="auto").autotuned
+    True
+    >>> SplIter() == SplIter(partitions_per_location=1)
+    True
     """
 
     partitions_per_location: int | str = 1
@@ -136,6 +147,11 @@ def as_policy(
 
     The string form exists for the deprecated ``run_map_reduce`` shim and
     for transitional callers; new code should construct policy objects.
+
+    >>> as_policy("spliter", partitions_per_location=4)
+    SplIter(partitions_per_location=4, materialize=False, fusion='auto', autotune_seed=0)
+    >>> as_policy(Baseline()) == Baseline()
+    True
     """
     if isinstance(policy, ExecutionPolicy):
         return policy

@@ -1,0 +1,241 @@
+"""StreamExecutor — out-of-core scheduling with double-buffered prefetch.
+
+The fourth backend of the execution layer (DESIGN.md §10): it drives the
+same dependency-driven scheduler core as every other executor, but assumes
+the inputs' blocks are :class:`~repro.api.chunkstore.ChunkRef` handles into
+a budgeted :class:`~repro.api.chunkstore.DiskStore`, so a dataset larger
+than the residency budget streams through memory one partition at a time.
+
+The streaming discipline (hybrid task/dataflow iteration — Ramon-Cortes et
+al., FGCS 2020: task-based iteration composed with streaming stages):
+
+* units run **in plan order on the calling thread** (bit-identical results
+  to :class:`~repro.api.executors.LocalExecutor` — same TaskGraph, same
+  merge fold order, and ``.npy`` spill round-trips preserve every bit);
+* while unit *k* computes, a background **prefetch thread** pins and loads
+  unit *k+1*'s chunks (``prefetch_depth`` units ahead, default 1 — the
+  double buffer), so the disk read of the next partition overlaps the
+  compute of the current one and its ``get()``s are *prefetch hits*;
+* when unit *k* completes, its pins drop and the store's LRU eviction
+  spills it (first pass) or simply releases it (later passes) — peak
+  residency is bounded by roughly the current + prefetched working set,
+  never the dataset.
+
+``EngineReport`` rows gain the streaming bill: ``bytes_loaded`` /
+``bytes_spilled`` / ``prefetch_hits`` (window deltas of the input stores'
+counters).
+
+Ownership: the streaming executor treats the chunk stores of datasets it
+executed as its scratch tier — :meth:`close` closes them (deleting
+``DiskStore`` spill files) unless constructed with ``close_stores=False``.
+In-memory inputs (plain arrays or :class:`InMemoryStore` refs) degrade
+gracefully: no refs → nothing to prefetch → plain sequential execution.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any
+
+from repro.api.chunkstore import chunk_stores
+from repro.api.executors import (
+    _LIVE_POOLS,
+    _LocationWorker,
+    _PlanExecutor,
+    _SchedulerState,
+    _Unit,
+)
+from repro.api.lowering import Capabilities
+from repro.api.plan import ExecutionPlan
+from repro.core.engine import TaskEngine
+
+__all__ = ["StreamExecutor"]
+
+
+class _PrefetchJob:
+    """One lookahead request: pin + load a unit's chunk refs.
+
+    ``run``/``release`` execute on the prefetch worker thread (the shared
+    :class:`~repro.api.executors._LocationWorker` machinery — one queue,
+    poison-pill stop, joined before XLA teardown); ``wait`` re-raises any
+    load failure on the scheduling thread.
+    """
+
+    __slots__ = ("refs", "done", "error")
+
+    def __init__(self, refs: tuple):
+        self.refs = refs
+        self.done = threading.Event()
+        self.error: BaseException | None = None
+
+    def run(self) -> None:
+        try:
+            # Group per store so one prefetch() call can batch I/O.
+            by_store: dict[int, list] = {}
+            for ref in self.refs:
+                by_store.setdefault(id(ref.store), []).append(ref)
+            for refs in by_store.values():
+                refs[0].store.prefetch(refs)
+        except BaseException as e:  # noqa: BLE001 — re-raised at wait()
+            self.error = e
+        finally:
+            self.done.set()
+
+    def wait(self) -> None:
+        self.done.wait()
+        if self.error is not None:
+            raise self.error
+
+    def release(self) -> None:
+        for ref in self.refs:
+            ref.store.unpin(ref)
+
+
+class StreamExecutor(_PlanExecutor):
+    """Sequential plan-order execution with background chunk prefetch.
+
+    Args:
+      engine: shared :class:`TaskEngine` (accounting + jit cache).
+      prefetch_depth: how many units ahead the background thread loads
+        (default 1 = double buffering: partition *k+1* loads while *k*
+        computes).  ``0`` disables lookahead (loads happen inline at
+        operand resolution — still correct, no overlap).
+      close_stores: when True (default), :meth:`close` also closes every
+        chunk store backing datasets this executor ran — the streaming
+        scratch tier (spill files) lives and dies with the executor.
+    """
+
+    def __init__(
+        self,
+        engine: TaskEngine | None = None,
+        *,
+        prefetch_depth: int = 1,
+        close_stores: bool = True,
+    ):
+        super().__init__(engine)
+        assert prefetch_depth >= 0, prefetch_depth
+        self.prefetch_depth = prefetch_depth
+        self._close_stores = close_stores
+        self._seen_stores: dict[int, Any] = {}
+        self._prefetcher: _LocationWorker | None = None
+        # The shared atexit sweep (executors._close_live_pools) close()s us
+        # if the user never does: the prefetch thread ran jax work, so it
+        # must be joined before XLA runtime teardown.
+        _LIVE_POOLS.add(self)
+
+    @property
+    def capabilities(self) -> Capabilities:
+        return dataclasses.replace(
+            super().capabilities, name=type(self).__name__, out_of_core=True
+        )
+
+    # -- the Executor entry point (records stores for close()) ---------------
+
+    def execute(self, plan: ExecutionPlan):
+        for store in chunk_stores(plan.spec.inputs):
+            self._seen_stores.setdefault(id(store), store)
+        return super().execute(plan)
+
+    # -- streaming drain -------------------------------------------------------
+
+    def _drain(self, state: _SchedulerState) -> None:
+        """Plan-order consumption with a bounded prefetch pipeline."""
+        pending: collections.deque[_Unit] = collections.deque(state.initial_ready())
+        inflight: dict[int, _PrefetchJob] = {}
+        try:
+            while pending and not state.errors:
+                self._top_up(pending, inflight)  # current unit's load starts
+                unit = pending.popleft()
+                job = inflight.pop(unit.index, None)
+                # Lookahead NOW, before this unit computes: unit k+1's disk
+                # read overlaps unit k's dispatch+compute (the double buffer).
+                self._top_up(pending, inflight)
+                if job is not None:
+                    try:
+                        job.wait()  # chunks resident + pinned (the hit path)
+                    except BaseException as e:  # noqa: BLE001
+                        job.release()
+                        state.fail(e)
+                        return
+                try:
+                    # _run_unit pins again around dispatch (the shared
+                    # resolve/release hooks), so dropping the prefetch pin
+                    # after it returns is what ends this unit's residency.
+                    # The release goes to the background thread: the last
+                    # unpin triggers the finished partition's spill write,
+                    # which must not serialize into the compute path.
+                    newly = self._run_unit(unit, state)
+                except BaseException:
+                    if job is not None:
+                        job.release()
+                    raise
+                else:
+                    if job is not None:
+                        # Release on the worker thread: the last unpin
+                        # evicts the finished partition, and a first-pass
+                        # eviction performs the spill write — I/O serializes
+                        # with I/O while compute keeps running.
+                        self._prefetch_worker().submit(job.release)
+                pending.extend(sorted(newly, key=lambda u: u.index))
+        finally:
+            for job in inflight.values():  # error path: drop leftover pins
+                job.done.wait()
+                job.release()
+            if self._prefetcher is not None:
+                # Drain queued releases (and their spill writes) before the
+                # run reports: pin counts and store stats are settled when
+                # execute() reads the window deltas.
+                done = threading.Event()
+                self._prefetcher.submit(done.set)
+                done.wait()
+
+    def _top_up(
+        self, pending: "collections.deque[_Unit]", inflight: dict[int, _PrefetchJob]
+    ) -> None:
+        """Keep the next ``prefetch_depth`` pending units' chunks loading."""
+        if self.prefetch_depth <= 0:
+            return
+        for unit in list(pending)[: self.prefetch_depth]:
+            if unit.index in inflight:
+                continue
+            refs = tuple(r for t in unit.tasks for r in t.chunk_refs)
+            if not refs:
+                continue
+            job = _PrefetchJob(refs)
+            # Pin on THIS thread, before the load is queued: the chunks
+            # must already be eviction-proof while earlier units' releases
+            # shrink the store.
+            for ref in refs:
+                ref.store.pin(ref)
+            self._prefetch_worker().submit(job.run)
+            inflight[unit.index] = job
+
+    def _prefetch_worker(self) -> _LocationWorker:
+        if self._prefetcher is None:
+            self._prefetcher = _LocationWorker("repro-prefetch")
+        return self._prefetcher
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop the prefetch thread; close (or trim) the streamed stores.
+
+        With ``close_stores=True`` every :class:`DiskStore` this executor
+        streamed is closed — its spill directory is deleted, so a
+        StreamExecutor leaves no temp files behind.  With
+        ``close_stores=False`` stores are only trimmed (resident chunks
+        shed, spill files kept) and remain usable by other executors.
+        """
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
+            self._prefetcher = None
+        stores = list(self._seen_stores.values())
+        self._seen_stores.clear()
+        super().close()
+        for store in stores:
+            if self._close_stores:
+                store.close()
+            else:
+                store.trim()

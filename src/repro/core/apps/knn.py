@@ -99,7 +99,7 @@ def knn(
         merge_task = ex.task(lambda a, b, c, d: _merge(a, b, c, d, k), key=("mg", k))
 
         out_d, out_i = [], []
-        for qb in queries.blocks:
+        for qb in queries.iter_blocks():
             cand = None
             for pts, ids in structures:
                 r = lookup_task(pts, ids, qb)

@@ -17,6 +17,15 @@ Two execution substrates consume this metadata:
 Blocks are dense ``(block_rows, *row_shape)`` arrays.  The *global order* of
 rows (paper §4.1) is ``block_id``-major: row ``r`` of block ``b`` has global
 index ``offset[b] + r``.
+
+**Out-of-core blocks.**  A block may also be a
+:class:`~repro.api.chunkstore.ChunkRef` — a metadata handle (same
+``shape``/``dtype``/``nbytes`` surface as an array) whose buffer lives in a
+:class:`~repro.api.chunkstore.ChunkStore` and materializes only at dispatch
+time.  All geometry here (placements, row offsets, ``blocks_at``) is
+metadata-only and works on refs without loading a byte; anything that needs
+buffer contents goes through :meth:`BlockedArray.block` /
+:meth:`BlockedArray.iter_blocks`, which resolve refs transparently.
 """
 
 from __future__ import annotations
@@ -56,12 +65,14 @@ class BlockedArray:
     """A row-blocked dataset with explicit block placement.
 
     Attributes:
-      blocks: tuple of ``(rows_b, *row_shape)`` jax arrays, global order.
+      blocks: tuple of ``(rows_b, *row_shape)`` jax arrays — or
+        :class:`~repro.api.chunkstore.ChunkRef` handles to store-held
+        buffers — in global order.
       placements: int32 array ``(num_blocks,)`` — logical location per block.
       num_locations: number of logical locations (nodes/backends/devices).
     """
 
-    blocks: tuple[jax.Array, ...]
+    blocks: tuple
     placements: np.ndarray
     num_locations: int
 
@@ -85,16 +96,24 @@ class BlockedArray:
         *,
         num_locations: int = 1,
         policy: PlacementPolicy = contiguous_placement,
+        store=None,
     ) -> "BlockedArray":
         """Split ``x`` along axis 0 into blocks of ``block_rows`` rows.
 
         The final block may be short (ragged tail), exactly like a Dask
-        array whose shape is not a multiple of the chunk size.
+        array whose shape is not a multiple of the chunk size.  With
+        ``store`` (a :class:`~repro.api.chunkstore.ChunkStore`) each block
+        is ``put`` into the store and the collection holds
+        :class:`~repro.api.chunkstore.ChunkRef` handles instead of
+        resident buffers — a ``DiskStore`` then bounds how much of the
+        dataset is in memory at once.
         """
         n = x.shape[0]
         assert block_rows >= 1
         nb = math.ceil(n / block_rows)
         blocks = tuple(x[i * block_rows : (i + 1) * block_rows] for i in range(nb))
+        if store is not None:
+            blocks = tuple(store.put(b) for b in blocks)
         return cls(blocks, policy(nb, num_locations), num_locations)
 
     @classmethod
@@ -146,16 +165,47 @@ class BlockedArray:
         """The block ids resident at ``location`` — the `who_has` query."""
         return [int(i) for i in np.nonzero(self.placements == location)[0]]
 
+    # -- buffer access (resolves chunk refs) --------------------------------
+
+    def block(self, i: int) -> jax.Array:
+        """Block ``i``'s buffer, resolving a chunk ref if necessary."""
+        from repro.api.chunkstore import resolve_chunk
+
+        return resolve_chunk(self.blocks[i])
+
+    def iter_blocks(self):
+        """Yield resolved block buffers in global order, one at a time.
+
+        The streaming-friendly accessor: out-of-core consumers touch one
+        block's bytes at a time instead of holding ``self.blocks``.
+        """
+        for i in range(len(self.blocks)):
+            yield self.block(i)
+
+    @property
+    def is_chunked(self) -> bool:
+        """True when any block is a store-held chunk reference."""
+        from repro.api.chunkstore import ChunkRef
+
+        return any(isinstance(b, ChunkRef) for b in self.blocks)
+
+    def to_store(self, store) -> "BlockedArray":
+        """Move every block into ``store``; same blocking, ref-backed."""
+        from repro.api.chunkstore import resolve_chunk
+
+        refs = tuple(store.put(resolve_chunk(b)) for b in self.blocks)
+        return BlockedArray(refs, self.placements, self.num_locations)
+
     # -- conversions -------------------------------------------------------
 
     def collect(self) -> jax.Array:
         """Concatenate all blocks in global order (a full gather)."""
-        return jnp.concatenate(self.blocks, axis=0)
+        return jnp.concatenate(list(self.iter_blocks()), axis=0)
 
     def stacked(self) -> jax.Array:
         """Stack uniform blocks into ``(num_blocks, block_rows, *row_shape)``."""
         assert self.uniform, "stacked() requires uniform block sizes"
-        return jnp.stack(self.blocks, axis=0)
+        return jnp.stack(list(self.iter_blocks()), axis=0)
 
     def with_placements(self, placements: np.ndarray, num_locations: int) -> "BlockedArray":
         return BlockedArray(self.blocks, np.asarray(placements, np.int32), num_locations)

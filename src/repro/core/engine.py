@@ -55,6 +55,9 @@ class EngineReport:
     wall_s: float = 0.0
     granularity: int = 0         # partitions_per_location in effect (SplIter; 0: n/a)
     retunes: int = 0             # autotuner granularity changes entering this window
+    bytes_loaded: int = 0        # chunk-store spill reads during this window
+    bytes_spilled: int = 0       # chunk-store spill writes (evictions of dirty chunks)
+    prefetch_hits: int = 0       # chunk gets served by an earlier prefetch
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
@@ -66,6 +69,9 @@ class EngineReport:
         self.bytes_moved += other.bytes_moved
         self.wall_s += other.wall_s
         self.retunes += other.retunes
+        self.bytes_loaded += other.bytes_loaded
+        self.bytes_spilled += other.bytes_spilled
+        self.prefetch_hits += other.prefetch_hits
         if other.granularity:
             self.granularity = other.granularity
         return self

@@ -76,7 +76,11 @@ def rechunk(
         # Same chunking: Dask's rechunk is a no-op; keep the original buffers.
         return x.with_placements(new_placements, x.num_locations), stats
 
-    full = jnp.concatenate(x.blocks, axis=0)
+    # collect() resolves chunk-backed blocks — rechunk IS the materializing
+    # competitor, so an out-of-core source pays a full gather here (and the
+    # result is a plain resident array; the contrast with SplIter's
+    # metadata-only split is the point).
+    full = x.collect()
     blocks = tuple(
         full[i * new_block_rows : min((i + 1) * new_block_rows, n)] for i in range(nb_new)
     )

@@ -51,14 +51,16 @@ class Partition:
 
     def __iter__(self) -> Iterator[jax.Array]:
         for b in self.block_ids:
-            yield self.source.blocks[b]
+            yield self.source.block(b)
 
     def __len__(self) -> int:
         return len(self.block_ids)
 
     @property
     def blocks(self) -> list[jax.Array]:
-        return [self.source.blocks[b] for b in self.block_ids]
+        # Resolves chunk refs (out-of-core sources) one block at a time;
+        # partition *construction* stays metadata-only — see spliter().
+        return [self.source.block(b) for b in self.block_ids]
 
     @property
     def num_rows(self) -> int:

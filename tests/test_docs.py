@@ -1,0 +1,102 @@
+"""Documentation-site integrity, enforceable without mkdocs installed.
+
+CI's ``docs`` job runs ``mkdocs build --strict``; this tier-1 module
+checks the same failure classes locally — nav entries that point at
+missing pages, and relative markdown links whose targets do not exist —
+so a broken docs tree fails fast even on hosts without mkdocs.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(REPO, "docs")
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+
+
+def _md_files():
+    out = []
+    for root, _dirs, files in os.walk(DOCS):
+        out.extend(os.path.join(root, f) for f in files if f.endswith(".md"))
+    return sorted(out)
+
+
+def test_mkdocs_yml_nav_targets_exist():
+    """Every page referenced from mkdocs.yml nav exists under docs/."""
+    with open(os.path.join(REPO, "mkdocs.yml")) as f:
+        text = f.read()
+    # nav entries are "Title: path.md" lines; grab the .md paths
+    targets = re.findall(r":\s*([\w\-/]+\.md)\s*$", text, re.MULTILINE)
+    assert targets, "mkdocs.yml declares no nav pages"
+    missing = [t for t in targets if not os.path.isfile(os.path.join(DOCS, t))]
+    assert not missing, f"mkdocs.yml nav points at missing pages: {missing}"
+
+
+def test_mkdocs_yml_parses():
+    yaml = pytest.importorskip("yaml")
+    with open(os.path.join(REPO, "mkdocs.yml")) as f:
+        cfg = yaml.safe_load(f)
+    assert cfg["site_name"]
+    assert cfg["nav"], "mkdocs.yml has no nav"
+
+
+def test_every_docs_page_is_reachable_from_nav():
+    with open(os.path.join(REPO, "mkdocs.yml")) as f:
+        nav = set(re.findall(r":\s*([\w\-/]+\.md)\s*$", f.read(), re.MULTILINE))
+    pages = {os.path.relpath(p, DOCS).replace(os.sep, "/") for p in _md_files()}
+    orphans = pages - nav
+    assert not orphans, f"docs pages missing from mkdocs.yml nav: {sorted(orphans)}"
+
+
+@pytest.mark.parametrize(
+    "page", [os.path.relpath(p, REPO) for p in _md_files()], ids=lambda p: p
+)
+def test_docs_internal_links_resolve(page):
+    """Relative links inside docs/ pages point at existing files."""
+    path = os.path.join(REPO, page)
+    with open(path) as f:
+        text = f.read()
+    base = os.path.dirname(path)
+    broken = []
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            broken.append(target)
+    assert not broken, f"{page}: broken relative links {broken}"
+
+
+def test_readme_links_resolve():
+    """The root README's repo-relative links (docs/, DESIGN.md, ...) exist."""
+    with open(os.path.join(REPO, "README.md")) as f:
+        text = f.read()
+    broken = []
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(REPO, target))):
+            broken.append(target)
+    assert not broken, f"README.md: broken relative links {broken}"
+
+
+def test_readme_has_required_sections():
+    """The satellite contract: pitch, install, quickstart, architecture,
+    and links into docs/ + DESIGN.md."""
+    with open(os.path.join(REPO, "README.md")) as f:
+        text = f.read()
+    for needle in (
+        "## Install",
+        "## Quickstart",
+        "## Architecture",
+        "docs/index.md",
+        "DESIGN.md",
+        "benchmarks/README.md",
+    ):
+        assert needle in text, f"README.md missing {needle!r}"
