@@ -73,6 +73,9 @@ def _aggregate_row(pol, executor_name: str, warm, res) -> dict:
         "bytes_loaded": sum(r.bytes_loaded for r in res.reports),
         "bytes_spilled": sum(r.bytes_spilled for r in res.reports),
         "prefetch_hits": sum(r.prefetch_hits for r in res.reports),
+        "remote_dispatches": sum(r.remote_dispatches for r in res.reports),
+        "ipc_bytes": sum(r.ipc_bytes for r in res.reports),
+        "retries": sum(r.retries for r in res.reports),
     }
 
 

@@ -14,8 +14,6 @@ invocation overhead increases").
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -96,6 +94,8 @@ def smoke() -> list[dict]:
             "traces": 0,
             "bytes_moved": 0,
             "prep_bytes": 0,
+            "remote_dispatches": 0,
+            "retries": 0,
         })
     return rows
 

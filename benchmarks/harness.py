@@ -140,6 +140,9 @@ def report_row(
         "bytes_loaded": report.bytes_loaded,
         "bytes_spilled": report.bytes_spilled,
         "prefetch_hits": report.prefetch_hits,
+        "remote_dispatches": report.remote_dispatches,
+        "ipc_bytes": report.ipc_bytes,
+        "retries": report.retries,
     }
 
 
@@ -149,14 +152,25 @@ def smoke_executors():
     ``stream`` runs on in-memory inputs here (no chunk store): it must
     degrade to plain sequential execution with LocalExecutor's structural
     numbers.  The out-of-core axis is separate — see :func:`stream_disk_row`.
+    ``cluster`` runs the same plans over real worker processes: results
+    must stay bit-identical and dispatch counts match Local, while
+    ``remote_dispatches`` bills how much of the work crossed the IPC
+    boundary (``retries`` must be 0 — no faults are injected here).
     """
-    from repro.api import LocalExecutor, MeshExecutor, StreamExecutor, ThreadedExecutor
+    from repro.api import (
+        ClusterExecutor,
+        LocalExecutor,
+        MeshExecutor,
+        StreamExecutor,
+        ThreadedExecutor,
+    )
 
     return [
         ("local", LocalExecutor()),
         ("threaded", ThreadedExecutor()),
         ("mesh", MeshExecutor()),
         ("stream", StreamExecutor()),
+        ("cluster", ClusterExecutor()),
     ]
 
 

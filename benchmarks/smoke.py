@@ -40,7 +40,19 @@ import time
 #: ``bytes_moved`` is the steady-state (cache-warm) traffic, ``prep_bytes``
 #: the first call's one-time prepare traffic — both diffed, so regressions
 #: in either the per-iteration or the preparation path are caught.
-STRUCTURAL = ("dispatches", "merges", "traces", "bytes_moved", "prep_bytes")
+#: ``remote_dispatches`` and ``retries`` pin the cluster rows: how much of
+#: each plan crosses the IPC boundary is structural, and a non-zero retry
+#: count in a no-fault smoke run is a bug.  ``ipc_bytes`` is excluded —
+#: serialized sizes may drift across pickle/numpy versions.
+STRUCTURAL = (
+    "dispatches",
+    "merges",
+    "traces",
+    "bytes_moved",
+    "prep_bytes",
+    "remote_dispatches",
+    "retries",
+)
 
 
 def _row_key(row: dict) -> tuple:

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.api import (
     Baseline,
+    ClusterExecutor,
     Collection,
     DiskStore,
     LocalExecutor,
@@ -26,115 +27,148 @@ from repro.api import (
 from repro.core.blocked import BlockedArray, round_robin_placement
 from repro.core.spliter import spliter
 
-# -- 1. a blocked, distributed dataset --------------------------------------
-# 64 blocks of 128 five-dimensional points, scattered round-robin over
-# 8 logical locations (nodes/workers/devices).
-rng = np.random.default_rng(0)
-data = rng.random((64 * 128, 5)).astype(np.float32)
-x = BlockedArray.from_array(
-    jnp.asarray(data), block_rows=128, num_locations=8,
-    policy=round_robin_placement,
-)
-print(f"dataset: {x.num_rows} rows, {x.num_blocks} blocks, "
-      f"{x.num_locations} locations")
 
-# -- 2. split(): locality partitions, zero movement --------------------------
-parts = spliter(x)
-for p in parts[:3]:
-    print(f"partition@loc{p.location}: blocks {p.get_indexes()[:4]}..., "
-          f"{p.num_rows} rows")
-print(f"... {len(parts)} partitions total (1 per location)")
+# NOTE: the script body lives under a __main__ guard because §11 spawns
+# worker PROCESSES — like any multiprocessing program, the entry point
+# must be import-safe or spawned children would re-execute the script.
+def main():
+    # -- 1. a blocked, distributed dataset --------------------------------------
+    # 64 blocks of 128 five-dimensional points, scattered round-robin over
+    # 8 logical locations (nodes/workers/devices).
+    rng = np.random.default_rng(0)
+    data = rng.random((64 * 128, 5)).astype(np.float32)
+    x = BlockedArray.from_array(
+        jnp.asarray(data), block_rows=128, num_locations=8,
+        policy=round_robin_placement,
+    )
+    print(f"dataset: {x.num_rows} rows, {x.num_blocks} blocks, "
+          f"{x.num_locations} locations")
 
-# -- 3. one lazy plan, three execution policies ------------------------------
-def block_sum(block):               # per-block work
-    return block.sum(axis=0)
+    # -- 2. split(): locality partitions, zero movement --------------------------
+    parts = spliter(x)
+    for p in parts[:3]:
+        print(f"partition@loc{p.location}: blocks {p.get_indexes()[:4]}..., "
+              f"{p.num_rows} rows")
+    print(f"... {len(parts)} partitions total (1 per location)")
 
-combine = lambda a, b: a + b        # associative merge
+    # -- 3. one lazy plan, three execution policies ------------------------------
+    def block_sum(block):               # per-block work
+        return block.sum(axis=0)
 
-col = Collection.from_blocked(x)
-for policy in (Baseline(), SplIter(), Rechunk()):
-    plan = col.split(policy).map_blocks(block_sum).reduce(combine)
-    result, report = plan.compute(executor=LocalExecutor())
-    mean = result / x.num_rows
-    print(f"{policy.mode_name:10s} dispatches={report.dispatches:3d} "
-          f"bytes_moved={report.bytes_moved:10d}  mean[0]={float(mean[0]):.6f}")
+    combine = lambda a, b: a + b        # associative merge
 
-# baseline: 64 block tasks + merge;  spliter: 8 partition tasks + merge,
-# 0 bytes moved;  rechunk: 8 tasks but Θ(dataset) bytes shuffled first.
+    col = Collection.from_blocked(x)
+    for policy in (Baseline(), SplIter(), Rechunk()):
+        plan = col.split(policy).map_blocks(block_sum).reduce(combine)
+        result, report = plan.compute(executor=LocalExecutor())
+        mean = result / x.num_rows
+        print(f"{policy.mode_name:10s} dispatches={report.dispatches:3d} "
+              f"bytes_moved={report.bytes_moved:10d}  mean[0]={float(mean[0]):.6f}")
 
-# -- 4. the plan is inspectable before it runs --------------------------------
-print(col.split(SplIter()).map_blocks(block_sum).reduce(combine).plan().describe())
+    # baseline: 64 block tasks + merge;  spliter: 8 partition tasks + merge,
+    # 0 bytes moved;  rechunk: 8 tasks but Θ(dataset) bytes shuffled first.
 
-# -- 5. ThreadedExecutor: one worker thread per location, identical result ----
-seq = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
-    executor=LocalExecutor())
-thr = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
-    executor=ThreadedExecutor())
-print("threaded identical:", bool(jnp.array_equal(seq.value, thr.value)))
+    # -- 4. the plan is inspectable before it runs --------------------------------
+    print(col.split(SplIter()).map_blocks(block_sum).reduce(combine).plan().describe())
 
-# -- 6. lowering is inspectable too: the placed, keyed TaskGraph --------------
-ex = LocalExecutor()
-graph = ex.lower(col.split(SplIter()).map_blocks(block_sum).reduce(combine).plan())
-print(graph.describe().splitlines()[0], f"... ({len(graph.tasks)} tasks)")
+    # -- 5. ThreadedExecutor: one worker thread per location, identical result ----
+    seq = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
+        executor=LocalExecutor())
+    thr = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
+        executor=ThreadedExecutor())
+    print("threaded identical:", bool(jnp.array_equal(seq.value, thr.value)))
 
-# -- 7. MeshExecutor: location groups as ONE sharded dispatch -----------------
-# The 8 uniform partitions stack into a single shard_map call over the
-# device mesh; partials merge with a psum-style collective.  On a 1-device
-# host this still runs (mesh of 1); under
-# XLA_FLAGS=--xla_force_host_platform_device_count=8 each location gets a
-# device and bytes_moved bills the collective traffic.
-mesh = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
-    executor=MeshExecutor())
-print(f"mesh: dispatches={mesh.report.dispatches} "
-      f"bytes_moved={mesh.report.bytes_moved} "
-      f"matches={bool(jnp.allclose(mesh.value, seq.value, rtol=2e-4))}")
+    # -- 6. lowering is inspectable too: the placed, keyed TaskGraph --------------
+    ex = LocalExecutor()
+    graph = ex.lower(col.split(SplIter()).map_blocks(block_sum).reduce(combine).plan())
+    print(graph.describe().splitlines()[0], f"... ({len(graph.tasks)} tasks)")
 
-# -- 8. order restoration (paper §4.1) ---------------------------------------
-p0 = parts[0]
-print("get_indexes()      ->", p0.get_indexes()[:8])
-print("get_item_indexes() ->", p0.get_item_indexes()[:8], "...")
+    # -- 7. MeshExecutor: location groups as ONE sharded dispatch -----------------
+    # The 8 uniform partitions stack into a single shard_map call over the
+    # device mesh; partials merge with a psum-style collective.  On a 1-device
+    # host this still runs (mesh of 1); under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 each location gets a
+    # device and bytes_moved bills the collective traffic.
+    mesh = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
+        executor=MeshExecutor())
+    print(f"mesh: dispatches={mesh.report.dispatches} "
+          f"bytes_moved={mesh.report.bytes_moved} "
+          f"matches={bool(jnp.allclose(mesh.value, seq.value, rtol=2e-4))}")
 
-# -- 9. adaptive granularity: no knob at all ----------------------------------
-# SplIter(partitions_per_location="auto") hands the last tuning knob to the
-# executor's cost-model autotuner: early iterations probe a deterministic
-# granularity ladder, a Tiny-Tasks cost model picks the winner (≤3 retunes),
-# and every retune is a LOGICAL regroup of the already-split blocks — the
-# prepare cache never re-splits and never moves a byte.
-ex = LocalExecutor()
-auto_plan = col.split(SplIter(partitions_per_location="auto")) \
-               .map_blocks(block_sum).reduce(combine)
-for i in range(5):
-    r = auto_plan.compute(executor=ex)
-    print(f"iter {i}: ppl={r.report.granularity} retunes={r.report.retunes} "
-          f"bytes_moved={r.report.bytes_moved}")
-print(f"prepare stats: {ex.prepare_stats}  (splits stays 1: regroup-without-resplit)")
-print("profile:", [(p.kind, p.calls, round(p.mean_dispatch_s * 1e3, 3))
-                   for p in ex.profile.snapshot()[:3]], "(kind, calls, mean dispatch ms)")
+    # -- 8. order restoration (paper §4.1) ---------------------------------------
+    p0 = parts[0]
+    print("get_indexes()      ->", p0.get_indexes()[:8])
+    print("get_item_indexes() ->", p0.get_item_indexes()[:8], "...")
 
-# -- 10. out of core: blocks behind a chunk store ------------------------------
-# The same dataset, but the blocks live in a DiskStore whose residency
-# budget is a QUARTER of the dataset: only ~budget bytes are ever resident;
-# evicted blocks spill to .npy files and the StreamExecutor prefetches
-# partition k+1 while partition k computes.  Same policy, same TaskGraph,
-# same merge order — the streamed result is bit-identical to the in-memory
-# one (bit-identity holds per policy; different granularities reassociate).
-fine = SplIter(partitions_per_location=8)        # fine partitions: bounded RSS
-ref = col.split(fine).map_blocks(block_sum).reduce(combine).compute(
-    executor=LocalExecutor())
-store = DiskStore(residency_bytes=x.nbytes // 4)
-sx = x.to_store(store)                           # same blocking, chunk refs now
-sex = StreamExecutor()
-stream = (
-    Collection.from_blocked(sx)
-    .split(fine)
-    .map_blocks(block_sum)
-    .reduce(combine)
-    .compute(executor=sex)
-)
-print(f"stream: dispatches={stream.report.dispatches} "
-      f"loaded={stream.report.bytes_loaded}B spilled={stream.report.bytes_spilled}B "
-      f"prefetch_hits={stream.report.prefetch_hits} "
-      f"peak_resident={store.stats.peak_resident_bytes}B "
-      f"(budget {store.residency_bytes}B) "
-      f"bit_identical={bool(jnp.all(stream.value == ref.value))}")
-sex.close()                                      # spill files removed here
+    # -- 9. adaptive granularity: no knob at all ----------------------------------
+    # SplIter(partitions_per_location="auto") hands the last tuning knob to the
+    # executor's cost-model autotuner: early iterations probe a deterministic
+    # granularity ladder, a Tiny-Tasks cost model picks the winner (≤3 retunes),
+    # and every retune is a LOGICAL regroup of the already-split blocks — the
+    # prepare cache never re-splits and never moves a byte.
+    ex = LocalExecutor()
+    auto_plan = col.split(SplIter(partitions_per_location="auto")) \
+                   .map_blocks(block_sum).reduce(combine)
+    for i in range(5):
+        r = auto_plan.compute(executor=ex)
+        print(f"iter {i}: ppl={r.report.granularity} retunes={r.report.retunes} "
+              f"bytes_moved={r.report.bytes_moved}")
+    print(f"prepare stats: {ex.prepare_stats}  (splits stays 1: regroup-without-resplit)")
+    print("profile:", [(p.kind, p.calls, round(p.mean_dispatch_s * 1e3, 3))
+                       for p in ex.profile.snapshot()[:3]], "(kind, calls, mean dispatch ms)")
+
+    # -- 10. out of core: blocks behind a chunk store ------------------------------
+    # The same dataset, but the blocks live in a DiskStore whose residency
+    # budget is a QUARTER of the dataset: only ~budget bytes are ever resident;
+    # evicted blocks spill to .npy files and the StreamExecutor prefetches
+    # partition k+1 while partition k computes.  Same policy, same TaskGraph,
+    # same merge order — the streamed result is bit-identical to the in-memory
+    # one (bit-identity holds per policy; different granularities reassociate).
+    fine = SplIter(partitions_per_location=8)        # fine partitions: bounded RSS
+    ref = col.split(fine).map_blocks(block_sum).reduce(combine).compute(
+        executor=LocalExecutor())
+    store = DiskStore(residency_bytes=x.nbytes // 4)
+    sx = x.to_store(store)                           # same blocking, chunk refs now
+    sex = StreamExecutor()
+    stream = (
+        Collection.from_blocked(sx)
+        .split(fine)
+        .map_blocks(block_sum)
+        .reduce(combine)
+        .compute(executor=sex)
+    )
+    print(f"stream: dispatches={stream.report.dispatches} "
+          f"loaded={stream.report.bytes_loaded}B spilled={stream.report.bytes_spilled}B "
+          f"prefetch_hits={stream.report.prefetch_hits} "
+          f"peak_resident={store.stats.peak_resident_bytes}B "
+          f"(budget {store.residency_bytes}B) "
+          f"bit_identical={bool(jnp.all(stream.value == ref.value))}")
+    sex.close()                                      # spill files removed here
+
+    # -- 11. a real cluster: worker processes, locality, fault tolerance ----------
+    # The same plan again, but each location is owned by a spawn-based WORKER
+    # PROCESS: task descriptors (code reference + operand payloads) cross a
+    # real pickle/IPC boundary, partials come back over a reply queue, and the
+    # report bills the transport (ipc_bytes, remote_dispatches).  Kill a
+    # worker mid-run and its in-flight tasks replay on a survivor — task
+    # descriptors are pure, so the result stays bit-identical (retries > 0
+    # would say a replay happened; here, none is injected).
+    cex = ClusterExecutor()
+    clus = (
+        Collection.from_blocked(x)
+        .split(SplIter(partitions_per_location=2))
+        .map_blocks(block_sum)
+        .reduce(combine)
+        .compute(executor=cex)
+    )
+    ref2 = col.split(SplIter(partitions_per_location=2)).map_blocks(
+        block_sum).reduce(combine).compute(executor=LocalExecutor())
+    print(f"cluster: dispatches={clus.report.dispatches} "
+          f"remote={clus.report.remote_dispatches} "
+          f"ipc={clus.report.ipc_bytes}B retries={clus.report.retries} "
+          f"bit_identical={bool(jnp.all(clus.value == ref2.value))}")
+    cex.close()                                      # worker pool joins here
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,15 @@ Public surface:
   :class:`~repro.api.lowering.Task` descriptors; **scheduling** backends
   consume it — :class:`LocalExecutor` (sequential, seed-equivalent),
   :class:`ThreadedExecutor` (persistent worker thread per location),
-  :class:`MeshExecutor` (sharded dispatch over a JAX device mesh) and
+  :class:`MeshExecutor` (sharded dispatch over a JAX device mesh),
   :class:`StreamExecutor` (out-of-core streaming with double-buffered
-  prefetch).  All report costs via
-  :class:`~repro.core.engine.EngineReport`.
+  prefetch) and :class:`ClusterExecutor` (multi-process, fault-tolerant
+  scheduling over spawn-based workers — picklable
+  :class:`~repro.api.lowering.TaskSpec` descriptors over IPC,
+  locality-aware routing, deterministic replay of a dead worker's units,
+  :class:`FaultPlan` injection for tests).  All report costs via
+  :class:`~repro.core.engine.EngineReport` (the cluster adds
+  ``ipc_bytes`` / ``remote_dispatches`` / ``retries``).
 * The chunk tier (:mod:`repro.api.chunkstore`, DESIGN.md §10): blocks as
   :class:`ChunkRef` handles resolved at dispatch time, behind a
   :class:`ChunkStore` — :class:`InMemoryStore` (today's semantics) or
@@ -42,15 +47,19 @@ Public surface:
 
 from repro.api.autotune import Autotuner, CostModel, fit_cost_model
 from repro.api.chunkstore import (
+    AttachedStore,
+    ChunkHandle,
     ChunkPinnedError,
     ChunkRef,
     ChunkStore,
     ChunkStoreError,
     DiskStore,
     InMemoryStore,
+    StoreManifest,
     StoreStats,
     resolve_chunk,
 )
+from repro.api.cluster_executor import ClusterExecutor, ClusterFailedError, FaultPlan
 from repro.api.collection import Collection
 from repro.api.executors import (
     ComputeResult,
@@ -66,10 +75,12 @@ from repro.api.kernels import (
     partition_kernel_for,
     register_partition_kernel,
 )
+from repro.api.fnref import decode_fn, encode_fn
 from repro.api.lowering import (
     Capabilities,
     Task,
     TaskGraph,
+    TaskSpec,
     lower,
     stable_task_key,
     stacked_fold,
@@ -88,7 +99,13 @@ __all__ = [
     "ThreadedExecutor",
     "MeshExecutor",
     "StreamExecutor",
+    "ClusterExecutor",
+    "ClusterFailedError",
+    "FaultPlan",
     "ChunkRef",
+    "ChunkHandle",
+    "StoreManifest",
+    "AttachedStore",
     "ChunkStore",
     "ChunkStoreError",
     "ChunkPinnedError",
@@ -108,8 +125,11 @@ __all__ = [
     "Capabilities",
     "Task",
     "TaskGraph",
+    "TaskSpec",
     "lower",
     "stable_task_key",
+    "encode_fn",
+    "decode_fn",
     "PartitionKernel",
     "register_partition_kernel",
     "partition_kernel_for",

@@ -61,15 +61,31 @@ import numpy as np
 
 __all__ = [
     "ChunkRef",
+    "ChunkHandle",
     "ChunkStore",
     "ChunkStoreError",
     "ChunkPinnedError",
     "InMemoryStore",
     "DiskStore",
+    "AttachedStore",
+    "StoreManifest",
     "StoreStats",
     "resolve_chunk",
     "chunk_stores",
 ]
+
+# Store uids are process-scoped: a manifest shipped to a worker names its
+# origin store, and the worker maps uid -> AttachedStore.  The pid prefix
+# keeps uids unambiguous across a parent and its spawned workers.
+_store_uid_lock = threading.Lock()
+_store_uid_seq = 0
+
+
+def _new_store_uid() -> str:
+    global _store_uid_seq
+    with _store_uid_lock:
+        _store_uid_seq += 1
+        return f"store-{os.getpid()}-{_store_uid_seq}"
 
 
 class ChunkStoreError(RuntimeError):
@@ -125,6 +141,85 @@ def resolve_chunk(block):
     if isinstance(block, ChunkRef):
         return block.resolve()
     return block
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkHandle:
+    """A picklable, store-independent pointer to one chunk.
+
+    What crosses a process boundary instead of a :class:`ChunkRef` (whose
+    ``store`` attribute holds locks and finalizers): the origin store's
+    uid plus the chunk id and geometry.  A worker resolves a handle
+    against the :class:`AttachedStore` it built from that store's
+    :class:`StoreManifest` — bytes never transit the control channel.
+    """
+
+    store_uid: str
+    chunk_id: int
+    shape: tuple
+    dtype_str: str
+
+    @property
+    def nbytes(self) -> int:
+        dt = np.dtype(self.dtype_str)
+        return int(np.prod(self.shape)) * dt.itemsize if self.shape else dt.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreManifest:
+    """The handoff half of store attach: every chunk's spill location.
+
+    Produced by :meth:`DiskStore.manifest` (which force-spills chunks that
+    have never been evicted, so every entry has a readable file) and
+    consumed worker-side by :class:`AttachedStore`.  Picklable by
+    construction: uid, directory and per-chunk ``(path, shape, dtype)``.
+    """
+
+    uid: str
+    spill_dir: str
+    chunks: dict  # chunk_id -> (path, shape, dtype_str)
+
+
+class AttachedStore:
+    """A worker-side, read-only view of another process's DiskStore.
+
+    Resolves :class:`ChunkHandle`\\ s by memory-mapped reads of the origin
+    store's spill files — the per-worker store of the cluster backend.
+    There is no residency budget: a worker holds at most its in-flight
+    task's operands, and the buffers are released when the task replies.
+    ``stats.bytes_loaded`` bills the reads so the parent can account
+    worker I/O in its :class:`~repro.core.engine.EngineReport`.
+    """
+
+    def __init__(self, manifest: StoreManifest):
+        self.manifest = manifest
+        self.stats = StoreStats()
+
+    @property
+    def uid(self) -> str:
+        return self.manifest.uid
+
+    def get(self, chunk_id: int):
+        import jax.numpy as jnp
+
+        entry = self.manifest.chunks.get(chunk_id)
+        if entry is None:
+            raise ChunkStoreError(
+                f"chunk {chunk_id} not in manifest of store {self.uid}"
+            )
+        path, _shape, _dtype = entry
+        mm = np.load(path, mmap_mode="r")
+        arr = jnp.asarray(np.asarray(mm))  # copy out of the mmap, then free it
+        self.stats.loads += 1
+        self.stats.bytes_loaded += arr.nbytes
+        return arr
+
+    def resolve(self, handle: ChunkHandle):
+        if handle.store_uid != self.uid:
+            raise ChunkStoreError(
+                f"handle for store {handle.store_uid} resolved against {self.uid}"
+            )
+        return self.get(handle.chunk_id)
 
 
 def chunk_stores(arrays: Iterable) -> list["ChunkStore"]:
@@ -200,6 +295,7 @@ class InMemoryStore:
     """
 
     def __init__(self):
+        self.uid = _new_store_uid()
         self.stats = StoreStats()
         self._chunks: dict[int, jax.Array] = {}
         self._next_id = 0
@@ -276,6 +372,7 @@ class DiskStore:
 
     def __init__(self, residency_bytes: int, *, spill_dir: str | None = None):
         assert residency_bytes >= 1, residency_bytes
+        self.uid = _new_store_uid()
         self.residency_bytes = int(residency_bytes)
         self._own_dir = spill_dir is None
         self._dir = (
@@ -446,6 +543,72 @@ class DiskStore:
             for cid in [c for c in self._resident if self._pins[c] == 0]:
                 self._evict_one(cid)
         self._flush_spills()
+
+    def handle(self, ref: ChunkRef) -> ChunkHandle | None:
+        """Picklable :class:`ChunkHandle` for ``ref``, if it has a spill file.
+
+        Returns None for a chunk that was never spilled — callers (the
+        cluster payload builder) then ship the bytes inline instead.  Run
+        :meth:`manifest` first to guarantee every chunk is handle-able.
+        """
+        with self._lock:
+            meta = self._meta.get(ref.chunk_id)
+            if meta is None or meta[2] is None:
+                return None
+        return ChunkHandle(
+            store_uid=self.uid,
+            chunk_id=ref.chunk_id,
+            shape=ref.shape,
+            dtype_str=ref.dtype.str,
+        )
+
+    def manifest(self) -> StoreManifest:
+        """Handoff projection for worker attach: spill-complete the store.
+
+        Chunks that were never evicted have no spill file; the manifest
+        pass writes them (``np.save``, outside the lock) WITHOUT dropping
+        their residency, so the parent keeps its warm cache while workers
+        gain a readable copy of every chunk.  The writes are billed as
+        spills — they are real spill I/O, paid once (a chunk with a
+        recorded path is never re-written).
+        """
+        self._flush_spills()  # settle any deferred eviction writes first
+        while True:
+            with self._lock:
+                if self._closed:
+                    raise ChunkStoreError("manifest() on a closed DiskStore")
+                cid = next(
+                    (
+                        c
+                        for c, (_s, _d, p) in self._meta.items()
+                        if p is None and c not in self._spilling
+                    ),
+                    None,
+                )
+                if cid is None:
+                    chunks = {
+                        c: (p, s, np.dtype(d).str)
+                        for c, (s, d, p) in self._meta.items()
+                        if p is not None
+                    }
+                    return StoreManifest(uid=self.uid, spill_dir=self._dir, chunks=chunks)
+                arr = self._resident.get(cid)
+                if arr is None:
+                    arr = self._pending_spills.get(cid)
+                self._spilling.add(cid)
+                shape, dtype, _ = self._meta[cid]
+            path = self._path(cid)
+            np.save(path, np.asarray(arr))
+            with self._lock:
+                self._spilling.discard(cid)
+                if self._closed or cid not in self._meta:
+                    raise ChunkStoreError("DiskStore closed during manifest()")
+                self._meta[cid] = (shape, dtype, path)
+                self.stats.spills += 1
+                self.stats.bytes_spilled += self._nbytes(cid)
+                if cid in self._pending_spills:
+                    del self._pending_spills[cid]
+                    self._pending_bytes -= self._nbytes(cid)
 
     def close(self) -> None:
         """Release resident chunks and delete the spill directory."""

@@ -1,0 +1,678 @@
+"""ClusterExecutor — multi-process, fault-tolerant scheduling of a TaskGraph.
+
+The fifth backend of the execution layer (DESIGN.md §11) and the first
+where dispatch crosses a real serialization/IPC boundary: the shared
+scheduler core (:meth:`~repro.api.executors._PlanExecutor._schedule`) runs
+in the parent, but task units execute in **spawn-based worker processes**,
+one per logical location by default.  What crosses the control channel is
+a DuctTeip-style *cheap task descriptor* — the picklable
+:class:`~repro.api.lowering.TaskSpec` projection (code reference via
+:mod:`repro.api.fnref` / the named kernel registry, geometry, operand
+payloads) — never a closure.
+
+Locality (the paper's placement story, now with real transport costs):
+
+* units route to the worker that owns their partition's location, reusing
+  the ``PlacedGroup`` placement metadata the SplIter prepare derived;
+* chunk-backed plans hand off their :class:`~repro.api.chunkstore.DiskStore`
+  via :meth:`~repro.api.chunkstore.DiskStore.manifest` and workers resolve
+  :class:`~repro.api.chunkstore.ChunkHandle`\\ s against an attached
+  per-worker store — block bytes are read from the spill files
+  worker-side and never transit the control channel;
+* ``EngineReport`` bills the boundary: ``ipc_bytes`` (exact serialized
+  bytes both directions), ``remote_dispatches`` and ``retries``.
+
+Fault tolerance (the Chunks-and-Tasks deterministic-replay model):
+
+* workers heartbeat on the shared reply queue; the drain loop doubles as
+  supervisor, detecting death by process liveness or heartbeat staleness
+  (an injected :class:`FaultPlan` drives both paths in tests);
+* a dead worker's in-flight units are disowned through the scheduler
+  state's :meth:`~repro.api.executors._SchedulerState.requeue` hook, their
+  chunk pins released, and the units replayed on a surviving worker —
+  task descriptors are pure, so the replay is bit-identical;
+* a unit that out-lives ``max_retries`` replays poisons the run with a
+  typed :class:`ClusterFailedError` naming the task key.
+
+Driver-level stages (``executor.task`` — k-NN's lookup/merge loops,
+Cascade SVM's cascade) ship over the same channel as synchronous RPCs
+when their function is referencable, so even ``map_partitions``-shaped
+apps pay (and report) real IPC dispatch costs; unreferencable callables
+fall back to in-process dispatch transparently.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import multiprocessing
+import os
+import pickle
+import time
+from multiprocessing import connection
+from typing import Any, Callable, Hashable
+
+import jax
+import numpy as np
+
+from repro.api.chunkstore import ChunkHandle, chunk_stores
+from repro.api.executors import (
+    _LIVE_POOLS,
+    _PlanExecutor,
+    _SchedulerState,
+    _Unit,
+)
+from repro.api.fnref import encode_fn
+from repro.api.lowering import Capabilities, key_summary, stable_task_key
+from repro.core.engine import TaskEngine
+
+__all__ = ["ClusterExecutor", "ClusterFailedError", "FaultPlan"]
+
+#: task kinds that may execute in a worker process; everything else
+#: (merge folds, driver-view callbacks) stays in the parent.
+_REMOTE_KINDS = frozenset(
+    {"block", "partition_scan", "partition_pallas", "partition_materialized"}
+)
+
+
+class ClusterFailedError(RuntimeError):
+    """A task exhausted its replays (or the pool died under it).
+
+    ``task_key`` names the poisoned task so operators can tell *which*
+    work item keeps killing workers, not just that something did.
+    """
+
+    def __init__(self, message: str, *, task_key: str | None = None):
+        super().__init__(message)
+        self.task_key = task_key
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault injection for tests and the CI fault lane.
+
+    Worker ids of the initial pool equal their location id, so
+    ``FaultPlan(kill_after=((0, 2),))`` means "location 0's worker exits
+    upon receiving its 2nd dispatch".  Respawned workers get fresh ids
+    and never inherit a fault.
+
+    Attributes:
+      kill_after: ``((worker_id, nth_dispatch), ...)`` — ``os._exit``
+        on *receiving* the nth dispatch, losing it in flight.
+      kill_on_retry: worker ids that exit when handed an already-replayed
+        unit (drives retry exhaustion → :class:`ClusterFailedError`).
+      mute_after: ``((worker_id, nth_dispatch), ...)`` — stop heartbeats
+        and hang, exercising the heartbeat-staleness detector.
+
+    >>> FaultPlan(kill_after=((0, 1),)).kill_after_for(0)
+    1
+    >>> FaultPlan().kill_after_for(0) is None
+    True
+    """
+
+    kill_after: tuple = ()
+    kill_on_retry: tuple = ()
+    mute_after: tuple = ()
+
+    def kill_after_for(self, worker_id: int) -> int | None:
+        return dict(self.kill_after).get(worker_id)
+
+    def mute_after_for(self, worker_id: int) -> int | None:
+        return dict(self.mute_after).get(worker_id)
+
+
+class _WorkerHandle:
+    """Parent-side handle: process + command/reply connections + fault config.
+
+    Each worker gets its OWN reply pipe (no shared queue): a worker killed
+    mid-write can only tear its own channel, which the parent reads as
+    EOF and folds into the death path — the other workers' replies keep
+    flowing.
+    """
+
+    def __init__(
+        self,
+        wid: int,
+        location: int,
+        ctx,
+        *,
+        heartbeat_s: float,
+        fault: FaultPlan | None,
+        log_dir: str | None,
+    ):
+        self.id = wid
+        self.location = location
+        self.log_path = (
+            os.path.join(log_dir, f"worker-{wid}.log") if log_dir else None
+        )
+        cmd_recv, cmd_send = ctx.Pipe(duplex=False)
+        rep_recv, rep_send = ctx.Pipe(duplex=False)
+        self._conn = cmd_send
+        self.reply = rep_recv
+        from repro.api import cluster_worker
+
+        self.process = ctx.Process(
+            target=cluster_worker.worker_main,
+            args=(wid, location, cmd_recv, rep_send),
+            kwargs=dict(
+                heartbeat_s=heartbeat_s,
+                kill_after=fault.kill_after_for(wid) if fault else None,
+                kill_on_retry=bool(fault and wid in fault.kill_on_retry),
+                mute_after=fault.mute_after_for(wid) if fault else None,
+                log_path=self.log_path,
+            ),
+            name=f"repro-cluster-w{wid}",
+            daemon=True,
+        )
+        self.process.start()
+        cmd_recv.close()  # child owns these ends now
+        rep_send.close()
+
+    def alive(self) -> bool:
+        return self.process.is_alive()
+
+    def send(self, msg) -> int:
+        """Pickle + send one command; returns the exact serialized size."""
+        payload = pickle.dumps(msg)
+        self._conn.send_bytes(payload)
+        return len(payload)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        try:
+            self.send(("stop",))
+        except (OSError, ValueError):
+            pass  # already dead / connection torn down
+        self.process.join(timeout)
+        if self.process.is_alive():
+            self.process.terminate()
+            self.process.join(timeout)
+        for conn in (self._conn, self.reply):
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover
+                pass
+
+
+class _DrainContext:
+    """Per-_drain bookkeeping shared with the (reentrant) reply pump."""
+
+    def __init__(self, state: _SchedulerState, epoch: int):
+        self.state = state
+        self.epoch = epoch
+        self.ready: collections.deque[_Unit] = collections.deque()
+        self.inflight: dict[int, _Unit] = {}
+        self.meta: dict[int, tuple] = {}  # unit index -> (t_send, sent_bytes)
+
+
+class ClusterExecutor(_PlanExecutor):
+    """Schedule TaskGraphs over a pool of spawn-based worker processes.
+
+    Args:
+      engine: shared :class:`TaskEngine` (parent-side accounting + the jit
+        cache used by in-process units such as the merge).
+      max_retries: replays a unit may consume across worker deaths before
+        the run fails with :class:`ClusterFailedError`.
+      heartbeat_s: worker heartbeat period.
+      heartbeat_timeout_s: silence span after which a live-looking process
+        is declared dead (hung worker); generous by default so loaded CI
+        hosts don't false-positive.
+      fault_plan: injected :class:`FaultPlan` (tests / the CI fault lane).
+      log_dir: directory for per-worker log files (created if needed);
+        None disables worker logging.  The CI fault lane sets this and
+        uploads the logs as artifacts on failure.
+      poll_s: supervisor tick — reply-queue wait quantum between liveness
+        checks.
+
+    Workers spawn lazily (first dispatch needing their location) and are
+    reused across ``execute`` calls; :meth:`close` is idempotent and also
+    runs from the shared atexit sweep.
+    """
+
+    def __init__(
+        self,
+        engine: TaskEngine | None = None,
+        *,
+        max_retries: int = 2,
+        heartbeat_s: float = 0.2,
+        heartbeat_timeout_s: float = 30.0,
+        fault_plan: FaultPlan | None = None,
+        log_dir: str | None = None,
+        poll_s: float = 0.02,
+    ):
+        super().__init__(engine)
+        self.max_retries = max_retries
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.fault_plan = fault_plan
+        self.log_dir = log_dir
+        self.poll_s = poll_s
+        self._ctx = multiprocessing.get_context("spawn")
+        self._workers: dict[int, _WorkerHandle] = {}
+        self._by_location: dict[int, int] = {}
+        self._used_wids: set[int] = set()
+        self._next_wid = itertools.count(1000)  # respawns: fresh, fault-free ids
+        self._epoch = 0
+        self._last_hb: dict[int, float] = {}
+        self._manifests: dict[str, Any] = {}
+        self._attached: set[tuple[int, str]] = set()
+        self._call_seq = itertools.count()
+        self._call_results: dict[int, tuple] = {}
+        self._active: _DrainContext | None = None
+        if log_dir:
+            os.makedirs(log_dir, exist_ok=True)
+        _LIVE_POOLS.add(self)
+
+    # -- capabilities ---------------------------------------------------------
+
+    @property
+    def capabilities(self) -> Capabilities:
+        # remote: lowering attaches fn_refs + raw-operand builders.
+        # out_of_core: lowering attaches chunk_refs, so the parent pins a
+        # unit's chunks for the whole remote round-trip (and releases them
+        # on completion OR requeue — the fault-path contract tests assert).
+        return dataclasses.replace(
+            super().capabilities,
+            name=type(self).__name__,
+            remote=True,
+            out_of_core=True,
+        )
+
+    # -- pool management ------------------------------------------------------
+
+    def workers_alive(self) -> list[int]:
+        """Ids of currently-live workers (diagnostics / tests)."""
+        return sorted(w.id for w in self._workers.values() if w.alive())
+
+    def _spawn(self, wid: int, location: int) -> _WorkerHandle:
+        handle = _WorkerHandle(
+            wid,
+            location,
+            self._ctx,
+            heartbeat_s=self.heartbeat_s,
+            fault=self.fault_plan,
+            log_dir=self.log_dir,
+        )
+        self._workers[wid] = handle
+        self._by_location[location] = wid
+        self._last_hb[wid] = time.monotonic()
+        _LIVE_POOLS.add(self)  # re-register after a close()
+        return handle
+
+    def _worker_for(self, location: int) -> _WorkerHandle:
+        """The live worker owning ``location`` (lazily spawned).
+
+        The initial worker for a location takes the location id as its
+        worker id — the addressing contract :class:`FaultPlan` relies on.
+        Respawns after a death draw fresh ids, so an injected fault fires
+        at most once.
+        """
+        wid = self._by_location.get(location)
+        if wid is not None:
+            handle = self._workers.get(wid)
+            if handle is not None and handle.alive():
+                return handle
+            self._on_worker_death(wid)
+        if location >= 0 and location not in self._used_wids:
+            wid = location
+        else:
+            wid = next(self._next_wid)
+        self._used_wids.add(wid)
+        return self._spawn(wid, location)
+
+    def _survivor(self, *, not_worker: int | None = None) -> _WorkerHandle | None:
+        for wid in sorted(self._workers):
+            if wid == not_worker:
+                continue
+            handle = self._workers[wid]
+            if handle.alive():
+                return handle
+        return None
+
+    # -- the Executor entry points --------------------------------------------
+
+    def execute(self, plan):
+        # Hand off chunk stores before scheduling: manifest() force-spills
+        # so every chunk is worker-readable, and a grown manifest
+        # invalidates earlier attaches.
+        for store in chunk_stores(plan.spec.inputs):
+            manifest = getattr(store, "manifest", None)
+            if manifest is None:
+                continue  # in-memory store: payloads ship inline
+            m = manifest()
+            old = self._manifests.get(m.uid)
+            if old is None or len(old.chunks) != len(m.chunks):
+                self._attached -= {p for p in self._attached if p[1] == m.uid}
+            self._manifests[m.uid] = m
+        return super().execute(plan)
+
+    def task(self, fn: Callable, *, key: Hashable = None) -> Callable:
+        """Register a driver-level task; referencable fns dispatch remotely.
+
+        The remote path is a synchronous RPC with the same replay contract
+        as plan units: a worker death mid-call re-issues the call on a
+        survivor (counted in ``EngineReport.retries``).  Functions the
+        reference encoder rejects run in-process via the engine, exactly
+        as on every other backend.
+        """
+        efn = encode_fn(fn)
+        if efn is None:
+            return self.engine.task(fn, key=key)
+        fn_ref = ("fn", efn)
+        key_repr = key_summary(key if key is not None else stable_task_key(fn))
+
+        def dispatch(*args):
+            return self._remote_call(fn_ref, args, key_repr)
+
+        return dispatch
+
+    # -- remote dispatch ------------------------------------------------------
+
+    def _remotable(self, unit: _Unit) -> bool:
+        return (
+            len(unit.tasks) == 1
+            and unit.kind in _REMOTE_KINDS
+            and unit.tasks[0].fn_ref is not None
+            and unit.tasks[0].remote_operands is not None
+        )
+
+    def _ensure_attached(self, worker: _WorkerHandle, spec) -> None:
+        uids = {
+            b.store_uid
+            for blocks in spec.data
+            for b in blocks
+            if isinstance(b, ChunkHandle)
+        }
+        for uid in sorted(uids):
+            if (worker.id, uid) in self._attached:
+                continue
+            manifest = self._manifests.get(uid)
+            if manifest is None:
+                raise ClusterFailedError(
+                    f"no manifest for chunk store {uid}; inputs changed mid-run?"
+                )
+            self.engine.report.ipc_bytes += worker.send(("attach", manifest))
+            self._attached.add((worker.id, uid))
+
+    def _dispatch_remote(
+        self, unit: _Unit, ctx: _DrainContext, *, prefer_survivor: bool = False
+    ) -> None:
+        """Ship one unit to its location's worker (or any survivor).
+
+        ``prefer_survivor`` is the requeue path: a replayed unit goes to a
+        worker that is already alive (locality traded for liveness — the
+        dead worker's location has no owner anyway); only when the whole
+        pool is gone does a fresh worker spawn.
+        """
+        task = unit.tasks[0]
+        worker = (self._survivor() if prefer_survivor else None) or self._worker_for(
+            unit.location
+        )
+        self._acquire_unit(unit)  # pin chunks for the whole round-trip
+        t0 = time.perf_counter()
+        release_pin = True  # dropped only if neither success nor requeue settles it
+        try:
+            spec = task.spec()
+            self._ensure_attached(worker, spec)
+            ctx.state.assign(unit, worker.id)
+            sent = worker.send(
+                ("unit", ctx.epoch, spec, ctx.state.attempts[unit.index] - 1)
+            )
+            release_pin = False  # success: the pin rides until reply/requeue
+        except (OSError, ValueError):
+            # Worker died between liveness check and send.  The unit is
+            # already assigned, so the death sweep's requeue covers it —
+            # including the poison check — and that path releases THIS
+            # dispatch's pin before the replay takes its own, so the
+            # ledger is settled there, not in the finally below.
+            release_pin = False
+            self._on_worker_death(worker.id)
+            return
+        finally:
+            if release_pin:  # unexpected error (bad spec, missing manifest)
+                self._release_unit(unit)
+        self.engine.report.ipc_bytes += sent
+        ctx.meta[unit.index] = (t0, time.perf_counter() - t0)
+        ctx.inflight[unit.index] = unit
+
+    def _drain(self, state: _SchedulerState) -> None:
+        self._epoch += 1
+        ctx = _DrainContext(state, self._epoch)
+        ctx.ready.extend(state.initial_ready())
+        prev = self._active
+        self._active = ctx
+        try:
+            while not state.errors:
+                while ctx.ready and not state.errors:
+                    unit = ctx.ready.popleft()
+                    if self._remotable(unit):
+                        self._dispatch_remote(unit, ctx)
+                    else:
+                        # In-process unit (merge fold, driver view).  Runs
+                        # on the calling thread; its task() dispatches may
+                        # themselves be remote RPCs, which pump this same
+                        # context reentrantly.
+                        ctx.ready.extend(self._run_unit(unit, state))
+                if state.done.is_set() or state.errors:
+                    break
+                if not ctx.inflight and not ctx.ready:
+                    break  # nothing left to wait for (defensive)
+                self._pump(ctx)
+        finally:
+            for unit in ctx.inflight.values():  # error path: drop pins
+                self._release_unit(unit)
+            ctx.inflight.clear()
+            self._active = prev
+
+    # -- the reply pump / supervisor ------------------------------------------
+
+    def _pump(self, ctx: _DrainContext | None) -> None:
+        """Process one reply quantum, then sweep worker liveness.
+
+        Waits on every live worker's reply connection at once; a readable
+        connection yields either a message or EOF (the worker died with
+        the pipe torn) — EOF folds straight into the death path.
+        """
+        by_conn = {w.reply: w for w in self._workers.values()}
+        try:
+            ready = connection.wait(list(by_conn), timeout=self.poll_s)
+        except OSError:  # a conn closed under us (stop() raced): resweep
+            ready = []
+        for r in ready:
+            worker = by_conn.get(r)
+            if worker is None or worker.id not in self._workers:
+                continue  # buried while we iterated
+            try:
+                payload = r.recv_bytes()
+            except (EOFError, OSError):
+                self._on_worker_death(worker.id)
+                continue
+            self._on_reply(payload, ctx)
+        self._check_workers()
+
+    def _drain_replies(self) -> None:
+        """Non-blocking sweep of every reply already in flight."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for worker in list(self._workers.values()):
+                try:
+                    while worker.reply.poll(0):
+                        self._on_reply(worker.reply.recv_bytes(), self._active)
+                        progressed = True
+                except (EOFError, OSError):
+                    self._on_worker_death(worker.id)
+
+    def _on_reply(self, payload: bytes, ctx: _DrainContext | None) -> None:
+        msg = pickle.loads(payload)
+        kind, wid = msg[0], msg[1]
+        self._last_hb[wid] = time.monotonic()
+        if kind in ("hb", "ready"):
+            return
+        if kind in ("call_done", "call_error"):
+            self.engine.report.ipc_bytes += len(payload)
+            self._call_results[msg[3]] = msg
+            return
+        # unit replies need an active drain of the same epoch
+        epoch, index = msg[2], msg[3]
+        if ctx is None or epoch != ctx.epoch or ctx.state.is_done(index):
+            return  # stale: an earlier run, or a duplicate after replay
+        unit = ctx.inflight.pop(index, None)
+        if unit is None:
+            return
+        self.engine.report.ipc_bytes += len(payload)
+        self._release_unit(unit)
+        if kind == "unit_error":
+            task = unit.tasks[0]
+            ctx.state.fail(
+                ClusterFailedError(
+                    f"task {key_summary(task.key)} (blocks={task.block_ids}) "
+                    f"failed on worker {wid}:\n{msg[4]}",
+                    task_key=key_summary(task.key),
+                )
+            )
+            return
+        _, _, _, _, result, loaded = msg
+        value = jax.tree.map(np.asarray, result)
+        report = self.engine.report
+        report.dispatches += 1
+        report.remote_dispatches += 1
+        report.bytes_loaded += loaded
+        t0, send_s = ctx.meta.get(index, (None, 0.0))
+        wall = (time.perf_counter() - t0) if t0 is not None else 0.0
+        self.profile.record_tasks(
+            unit.tasks,
+            kind=unit.kind,
+            location=unit.location,
+            dispatch_s=send_s,
+            wall_s=wall,
+        )
+        ctx.ready.extend(sorted(ctx.state.complete(unit, value), key=lambda u: u.index))
+
+    def _check_workers(self) -> None:
+        now = time.monotonic()
+        for wid, handle in list(self._workers.items()):
+            stale = now - self._last_hb.get(wid, now) > self.heartbeat_timeout_s
+            if handle.alive() and not stale:
+                continue
+            self._on_worker_death(wid)
+
+    def _on_worker_death(self, wid: int) -> None:
+        """Supervisor: bury a dead/hung worker and replay its units."""
+        handle = self._workers.pop(wid, None)
+        if handle is None:
+            return
+        if self._by_location.get(handle.location) == wid:
+            del self._by_location[handle.location]
+        self._attached -= {p for p in self._attached if p[0] == wid}
+        self._last_hb.pop(wid, None)
+        if handle.alive():  # hung (heartbeat-stale), not dead: put it down
+            handle.process.terminate()
+        handle.process.join(1.0)
+        # Salvage completed work: replies that landed before the death are
+        # still intact on the worker's own pipe — consuming them here
+        # keeps "died after finishing" from being replayed needlessly.
+        try:
+            while handle.reply.poll(0):
+                self._on_reply(handle.reply.recv_bytes(), self._active)
+        except (EOFError, OSError):
+            pass  # torn end of the pipe: nothing more to salvage
+        finally:
+            for conn in (handle._conn, handle.reply):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        ctx = self._active
+        if ctx is None:
+            return
+        lost = ctx.state.requeue(wid)
+        for unit in lost:
+            ctx.inflight.pop(unit.index, None)
+            # Release-on-requeue: the dead dispatch's pins must not outlive
+            # it, or the store could never evict the chunks it holds.
+            self._release_unit(unit)
+            task = unit.tasks[0]
+            if ctx.state.attempts[unit.index] > self.max_retries:
+                ctx.state.fail(
+                    ClusterFailedError(
+                        f"task {key_summary(task.key)} (blocks={task.block_ids}) "
+                        f"poisoned: {ctx.state.attempts[unit.index]} attempts "
+                        f"died with their workers (max_retries="
+                        f"{self.max_retries})",
+                        task_key=key_summary(task.key),
+                    )
+                )
+                return
+            self.engine.report.retries += 1
+            self._dispatch_remote(unit, ctx, prefer_survivor=True)
+
+    # -- driver-level remote calls --------------------------------------------
+
+    def _remote_call(self, fn_ref: tuple, args: tuple, key_repr: str):
+        payload_args = tuple(np.asarray(a) for a in args)
+        report = self.engine.report
+        failures = 0
+        while True:
+            worker = self._survivor() or self._worker_for(0)
+            call_id = next(self._call_seq)
+            try:
+                report.ipc_bytes += worker.send(
+                    ("call", self._epoch, call_id, fn_ref, payload_args, key_repr)
+                )
+            except (OSError, ValueError):
+                self._on_worker_death(worker.id)
+                failures += 1
+                if failures > self.max_retries:
+                    raise ClusterFailedError(
+                        f"call {key_repr} poisoned: {failures} workers died "
+                        f"under it (max_retries={self.max_retries})",
+                        task_key=key_repr,
+                    ) from None
+                report.retries += 1
+                continue
+            while call_id not in self._call_results:
+                if worker.id not in self._workers or not worker.alive():
+                    # The pump's sweep may already have buried it; make
+                    # sure, then collect any reply that landed before the
+                    # death so a completed call is not replayed needlessly.
+                    self._on_worker_death(worker.id)
+                    self._drain_replies()
+                    break
+                self._pump(self._active)
+            msg = self._call_results.pop(call_id, None)
+            if msg is None:  # worker died mid-call: replay on a survivor
+                failures += 1
+                if failures > self.max_retries:
+                    raise ClusterFailedError(
+                        f"call {key_repr} poisoned: {failures} workers died "
+                        f"under it (max_retries={self.max_retries})",
+                        task_key=key_repr,
+                    )
+                report.retries += 1
+                continue
+            if msg[0] == "call_error":
+                raise ClusterFailedError(
+                    f"call {key_repr} failed on worker {msg[1]}:\n{msg[4]}",
+                    task_key=key_repr,
+                )
+            report.dispatches += 1
+            report.remote_dispatches += 1
+            import jax.numpy as jnp
+
+            return jax.tree.map(jnp.asarray, msg[4])
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop the worker pool (idempotent; workers respawn on next use)."""
+        workers = list(self._workers.values())
+        self._workers.clear()
+        self._by_location.clear()
+        self._attached.clear()
+        self._last_hb.clear()
+        self._manifests.clear()
+        self._call_results.clear()
+        for w in workers:
+            w.stop()
+        super().close()

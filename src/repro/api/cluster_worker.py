@@ -1,0 +1,250 @@
+"""Worker-process main loop for :class:`~repro.api.cluster_executor.ClusterExecutor`.
+
+Each worker is a **spawn**-started process (fork is unsafe under JAX/XLA)
+that owns one logical *location* of the cluster.  It drains a byte-framed
+pickle protocol from its command connection and writes replies to its own
+reply connection — per-worker pipes, NOT a shared queue, because a worker
+that dies mid-write (exactly what fault injection does) must only be able
+to corrupt *its own* channel: the parent reads the torn end as EOF and
+buries that worker, while every other worker's replies keep flowing.  (A
+shared ``multiprocessing.Queue`` fails this: a killed producer can leave
+the common pipe locked/torn for everyone.)
+
+parent → worker
+    ``("attach", StoreManifest)`` — build an
+    :class:`~repro.api.chunkstore.AttachedStore` so later units can
+    resolve :class:`~repro.api.chunkstore.ChunkHandle` payloads from the
+    parent's spill files (bytes never transit the control channel);
+    ``("unit", epoch, TaskSpec, attempt)`` — execute one task descriptor;
+    ``("call", epoch, call_id, fn_ref, args, key)`` — execute one
+    driver-level task RPC (the ``executor.task()`` path);
+    ``("stop",)`` — exit cleanly.
+
+worker → parent, over the worker's own reply connection (each message
+pre-pickled so the parent can bill exact ``ipc_bytes``)
+    ``("ready", wid, pid)``, ``("hb", wid, t)`` — liveness;
+    ``("unit_done", wid, epoch, index, result, loaded)`` /
+    ``("unit_error", wid, epoch, index, err)`` — unit outcomes;
+    ``("call_done", wid, epoch, call_id, result, loaded)`` /
+    ``("call_error", wid, epoch, call_id, err)`` — RPC outcomes.
+
+Determinism: the worker rebuilds exactly the stack/concat + function the
+in-process lowering would have dispatched (same jnp ops, same fold order,
+same host), so a replayed unit — or the same unit on a different worker —
+produces bit-identical partials.  That is the Chunks-and-Tasks replay
+story: fault tolerance is "run the pure task descriptor again".
+
+Fault injection (tests / the CI fault lane): ``kill_after`` makes the
+worker ``os._exit`` on *receiving* its nth dispatch (the unit is lost
+in-flight, exercising requeue); ``kill_on_retry`` does the same when it
+receives an already-replayed unit (exercising retry exhaustion);
+``mute_after`` silences heartbeats and hangs (exercising the
+heartbeat-timeout detector while the process stays alive).
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+import traceback
+
+__all__ = ["worker_main"]
+
+#: exit codes used by injected faults (visible in worker logs / waitpid)
+KILLED_EXIT = 23
+RETRY_KILLED_EXIT = 24
+
+
+def _log_line(log, wid: int, msg: str) -> None:
+    if log is not None:
+        log.write(f"[w{wid} +{time.monotonic():.3f}] {msg}\n")
+        log.flush()
+
+
+def _resolve_fn(fn_ref: tuple, cache: dict):
+    """Rehydrate + jit a task function from its picklable reference."""
+    fn = cache.get(fn_ref)
+    if fn is not None:
+        return fn
+    import jax
+
+    from repro.api.fnref import decode_fn
+
+    kind = fn_ref[0]
+    if kind == "scan":
+        from repro.api.lowering import _partition_body
+
+        _, efn, ecomb, n_in = fn_ref
+        body = _partition_body(decode_fn(efn), decode_fn(ecomb), n_in)
+    elif kind == "kernel":
+        from repro.api.kernels import kernel_from_ref
+
+        kernel = kernel_from_ref(fn_ref[1])
+        if kernel is None:
+            raise RuntimeError(f"no registered kernel for {fn_ref[1]!r}")
+        body = kernel.fn
+    elif kind == "fn":
+        body = decode_fn(fn_ref[1])
+    else:
+        raise RuntimeError(f"unknown fn_ref kind {kind!r}")
+    fn = cache[fn_ref] = jax.jit(body)
+    return fn
+
+
+def _build_operands(kind: str, data: tuple, extras: tuple, stores: dict):
+    """Payloads → operand tuple, mirroring the in-process lowering exactly.
+
+    Stacked kinds (``partition_scan``/``partition_pallas``) stack the
+    blocks on a new leading axis, ``partition_materialized`` concatenates,
+    ``block`` passes the single block through.  Returns the operands plus
+    the chunk bytes read from attached stores (billed upstream as
+    ``bytes_loaded``).
+    """
+    import jax.numpy as jnp
+
+    from repro.api.chunkstore import ChunkHandle, ChunkStoreError
+
+    loaded = 0
+    ops = []
+    for blocks in data:
+        arrs = []
+        for b in blocks:
+            if isinstance(b, ChunkHandle):
+                store = stores.get(b.store_uid)
+                if store is None:
+                    raise ChunkStoreError(f"store {b.store_uid} not attached")
+                arrs.append(store.resolve(b))
+                loaded += b.nbytes
+            else:
+                arrs.append(jnp.asarray(b))
+        if kind in ("partition_scan", "partition_pallas"):
+            ops.append(jnp.stack(arrs, axis=0))
+        elif kind == "partition_materialized":
+            ops.append(jnp.concatenate(arrs, axis=0))
+        else:
+            ops.append(arrs[0])
+    ops.extend(jnp.asarray(e) for e in extras)
+    return tuple(ops), loaded
+
+
+def worker_main(
+    worker_id: int,
+    location: int,
+    conn,
+    reply_conn,
+    *,
+    heartbeat_s: float = 0.2,
+    kill_after: int | None = None,
+    kill_on_retry: bool = False,
+    mute_after: int | None = None,
+    log_path: str | None = None,
+) -> None:
+    """Entry point of one cluster worker process."""
+    log = open(log_path, "a") if log_path else None
+    _log_line(log, worker_id, f"start pid={os.getpid()} location={location}")
+
+    reply_lock = threading.Lock()  # main thread + heartbeat thread share the pipe
+
+    def reply(msg) -> None:
+        payload = pickle.dumps(msg)
+        with reply_lock:
+            reply_conn.send_bytes(payload)
+
+    stop_beat = threading.Event()
+
+    def beat() -> None:
+        while not stop_beat.is_set():
+            try:
+                reply(("hb", worker_id, time.time()))
+            except (OSError, ValueError):  # parent gone / pipe torn down
+                return
+            stop_beat.wait(heartbeat_s)
+
+    threading.Thread(target=beat, name="hb", daemon=True).start()
+    reply(("ready", worker_id, os.getpid()))
+
+    import numpy as np  # deferred: keep the pre-ready window minimal
+
+    fns: dict = {}
+    stores: dict = {}
+    dispatches = 0
+
+    def to_host(tree):
+        import jax
+
+        return jax.tree.map(np.asarray, tree)
+
+    while True:
+        try:
+            payload = conn.recv_bytes()
+        except EOFError:
+            _log_line(log, worker_id, "command channel closed; exiting")
+            break
+        msg = pickle.loads(payload)
+        kind = msg[0]
+        if kind == "stop":
+            _log_line(log, worker_id, "stop")
+            break
+        if kind == "attach":
+            manifest = msg[1]
+            from repro.api.chunkstore import AttachedStore
+
+            stores[manifest.uid] = AttachedStore(manifest)
+            _log_line(
+                log,
+                worker_id,
+                f"attach store={manifest.uid} chunks={len(manifest.chunks)}",
+            )
+            continue
+
+        dispatches += 1
+        if mute_after is not None and dispatches >= mute_after:
+            _log_line(log, worker_id, "FAULT: muting heartbeats and hanging")
+            stop_beat.set()
+            while True:  # injected hang: only the parent's timeout saves us
+                time.sleep(3600)
+        if kill_after is not None and dispatches >= kill_after:
+            _log_line(log, worker_id, f"FAULT: killing on dispatch #{dispatches}")
+            os._exit(KILLED_EXIT)
+
+        if kind == "unit":
+            _, epoch, spec, attempt = msg
+            if kill_on_retry and attempt > 0:
+                _log_line(log, worker_id, f"FAULT: killing on retried unit {spec.index}")
+                os._exit(RETRY_KILLED_EXIT)
+            try:
+                fn = _resolve_fn(spec.fn_ref, fns)
+                ops, loaded = _build_operands(spec.kind, spec.data, spec.extras, stores)
+                out = to_host(fn(*ops))
+                reply(("unit_done", worker_id, epoch, spec.index, out, loaded))
+                _log_line(
+                    log,
+                    worker_id,
+                    f"unit {spec.index} kind={spec.kind} blocks={spec.block_ids} "
+                    f"attempt={attempt} ok",
+                )
+            except BaseException:
+                err = traceback.format_exc()
+                _log_line(log, worker_id, f"unit {spec.index} FAILED\n{err}")
+                reply(("unit_error", worker_id, epoch, spec.index, err))
+        elif kind == "call":
+            _, epoch, call_id, fn_ref, args, key = msg
+            try:
+                fn = _resolve_fn(fn_ref, fns)
+                import jax.numpy as jnp
+
+                out = to_host(fn(*(jnp.asarray(a) for a in args)))
+                reply(("call_done", worker_id, epoch, call_id, out, 0))
+                _log_line(log, worker_id, f"call {call_id} key={key} ok")
+            except BaseException:
+                err = traceback.format_exc()
+                _log_line(log, worker_id, f"call {call_id} key={key} FAILED\n{err}")
+                reply(("call_error", worker_id, epoch, call_id, err))
+        else:
+            _log_line(log, worker_id, f"unknown message {kind!r}; ignoring")
+
+    stop_beat.set()
+    if log is not None:
+        log.close()

@@ -144,7 +144,19 @@ class Collection:
         return ExecutionPlan(self._node)
 
     def compute(self, executor: Executor | None = None) -> ComputeResult:
-        """Execute the plan; a fresh :class:`LocalExecutor` when none given."""
+        """Execute the plan; a fresh :class:`LocalExecutor` when none given.
+
+        Any backend accepts any plan — the policy/plan pair is
+        backend-independent, so the same chain runs sequentially
+        (:class:`LocalExecutor`), thread-overlapped
+        (:class:`~repro.api.executors.ThreadedExecutor`), sharded over a
+        device mesh (:class:`~repro.api.mesh_executor.MeshExecutor`),
+        streamed out of core
+        (:class:`~repro.api.stream_executor.StreamExecutor`), or over a
+        fault-tolerant pool of worker processes
+        (:class:`~repro.api.cluster_executor.ClusterExecutor`) by swapping
+        this one argument.
+        """
         ex = executor if executor is not None else LocalExecutor()
         return ex.execute(self.plan())
 

@@ -35,6 +35,15 @@ Backends:
     results are bit-identical to :class:`LocalExecutor`.
 :class:`~repro.api.mesh_executor.MeshExecutor`
     Sharded dispatch over a JAX device mesh (own module).
+:class:`~repro.api.cluster_executor.ClusterExecutor`
+    Multi-process, fault-tolerant scheduling over spawn-based worker
+    processes (own module, DESIGN.md §11): picklable
+    :class:`~repro.api.lowering.TaskSpec` descriptors cross a real
+    serialization/IPC boundary, units route to the worker owning their
+    partition's location, and a supervisor replays the in-flight units of
+    a dead worker on a survivor (``EngineReport.retries``).  The
+    :class:`_SchedulerState` ownership hooks (``assign`` / ``requeue`` /
+    ``is_done``) are what it shares with this module.
 :class:`~repro.api.stream_executor.StreamExecutor`
     Out-of-core streaming over chunk-backed collections with
     double-buffered prefetch (own module, DESIGN.md §10).  The shared
@@ -127,14 +136,15 @@ class Executor(Protocol):
 
     ``execute`` runs a validated plan; ``task`` registers out-of-plan app
     stages against the same jit cache and accounting; ``report`` exposes
-    the current :class:`~repro.core.engine.EngineReport`.  All four
+    the current :class:`~repro.core.engine.EngineReport`.  All five
     backends are structural instances:
 
     >>> from repro.api import (Executor, LocalExecutor, ThreadedExecutor,
-    ...                        MeshExecutor, StreamExecutor)
-    >>> [isinstance(ex(), Executor)
-    ...  for ex in (LocalExecutor, ThreadedExecutor, MeshExecutor, StreamExecutor)]
-    [True, True, True, True]
+    ...                        MeshExecutor, StreamExecutor, ClusterExecutor)
+    >>> [isinstance(ex(), Executor) for ex in (LocalExecutor, ThreadedExecutor,
+    ...                                        MeshExecutor, StreamExecutor,
+    ...                                        ClusterExecutor)]
+    [True, True, True, True, True]
     """
 
     def execute(self, plan: ExecutionPlan) -> ComputeResult: ...
@@ -258,7 +268,16 @@ class _Unit:
 
 
 class _SchedulerState:
-    """Thread-safe dependency/result bookkeeping for one TaskGraph run."""
+    """Thread-safe dependency/result bookkeeping for one TaskGraph run.
+
+    Beyond the dependency core, the state tracks *ownership*: which
+    executor-defined owner (a worker thread, a cluster worker process) a
+    unit was assigned to, how many times it has been attempted, and —
+    via :meth:`requeue` — which in-flight units an owner took down with it.
+    Owners are opaque hashables; the hooks are what make fault-tolerant
+    backends (ClusterExecutor) a scheduling concern instead of a fork of
+    the core.
+    """
 
     def __init__(self, units: list[_Unit]):
         self.units = units
@@ -271,6 +290,9 @@ class _SchedulerState:
             for d in u.deps:
                 self._dependents[d].append(u.index)
         self._remaining = len(units)
+        self._done_units: set[int] = set()
+        self.owner: dict[int, Hashable] = {}        # unit index -> owner
+        self.attempts: collections.Counter = collections.Counter()
         self.done = threading.Event()
         if not units:
             self.done.set()
@@ -278,10 +300,41 @@ class _SchedulerState:
     def initial_ready(self) -> list[_Unit]:
         return [u for u in self.units if not u.deps]
 
+    def assign(self, unit: _Unit, owner: Hashable) -> None:
+        """Record who is executing ``unit`` (attempt counted on assign)."""
+        with self._lock:
+            self.owner[unit.index] = owner
+            self.attempts[unit.index] += 1
+
+    def is_done(self, index: int) -> bool:
+        with self._lock:
+            return index in self._done_units
+
+    def requeue(self, owner: Hashable) -> list[_Unit]:
+        """Disown ``owner``'s incomplete units (worker death) for replay.
+
+        Returns the lost units; their ownership entries are cleared so a
+        late/duplicate completion from the dead owner is ignorable via
+        :meth:`is_done`, and re-assignment restarts the attempt count
+        bookkeeping for the surviving owner.
+        """
+        with self._lock:
+            lost = [
+                self.units[i]
+                for i, o in list(self.owner.items())
+                if o == owner and i not in self._done_units
+            ]
+            for u in lost:
+                del self.owner[u.index]
+        return lost
+
     def complete(self, unit: _Unit, value: Any) -> list[_Unit]:
         """Record a result; return units that just became ready."""
         newly: list[_Unit] = []
         with self._lock:
+            if unit.index in self._done_units:  # duplicate (replayed) result
+                return []
+            self._done_units.add(unit.index)
             self.results[unit.index] = value
             for di in self._dependents[unit.index]:
                 self._indegree[di] -= 1
@@ -752,6 +805,10 @@ class ThreadedExecutor(_PlanExecutor):
         w = self._workers.get(location)
         if w is None:
             w = self._workers[location] = _LocationWorker(f"repro-loc-{location}")
+            # Workers respawn after close(): re-register for the atexit
+            # sweep so a reused-then-abandoned executor is still joined
+            # before XLA teardown.
+            _LIVE_POOLS.add(self)
         return w
 
     def _drain(self, state: _SchedulerState) -> None:

@@ -32,6 +32,8 @@ __all__ = [
     "PartitionKernel",
     "register_partition_kernel",
     "partition_kernel_for",
+    "kernel_ref",
+    "kernel_from_ref",
     "pallas_interpret",
 ]
 
@@ -75,11 +77,20 @@ class PartitionKernel:
 
 # base block fn -> factory(partial_args, partial_kwargs) -> PartitionKernel | None
 _REGISTRY: dict[Callable, Callable[[tuple, dict], PartitionKernel | None]] = {}
+# registry NAME -> factory, and base fn -> registry name.  The name is the
+# by-name lookup surface remote workers rehydrate kernels through: a
+# ClusterExecutor ships ``("kernel", name, statics)`` instead of the
+# (unpicklable) factory-built closure, and the worker — having imported the
+# registering module — resolves the same factory by name.
+_BY_NAME: dict[str, Callable[[tuple, dict], PartitionKernel | None]] = {}
+_NAMES: dict[Callable, str] = {}
 
 
 def register_partition_kernel(
     block_fn: Callable,
     factory: Callable[[tuple, dict], PartitionKernel | None],
+    *,
+    name: str | None = None,
 ) -> None:
     """Register a fused-kernel factory for ``block_fn``.
 
@@ -88,8 +99,17 @@ def register_partition_kernel(
     (empty tuples when the fn is used bare) and returns a
     :class:`PartitionKernel`, or None when those statics have no fused
     implementation.
+
+    ``name`` is the registry name used for by-name lookup from worker
+    processes (:func:`kernel_from_ref`); it defaults to
+    ``"module:qualname"`` of ``block_fn``, which doubles as the import
+    spec that triggers the registration on the worker side.
     """
+    if name is None:
+        name = f"{block_fn.__module__}:{block_fn.__qualname__}"
     _REGISTRY[block_fn] = factory
+    _BY_NAME[name] = factory
+    _NAMES[block_fn] = name
 
 
 def _unwrap(fn: Callable) -> tuple[Callable, tuple, dict]:
@@ -110,3 +130,40 @@ def partition_kernel_for(fn: Callable) -> PartitionKernel | None:
     if factory is None:
         return None
     return factory(args, kwargs)
+
+
+def kernel_ref(fn: Callable) -> tuple | None:
+    """Picklable by-name reference for the kernel a block fn resolves to.
+
+    ``(name, args, sorted_kwargs)`` — everything a worker needs to rebuild
+    the same :class:`PartitionKernel` through the named registry, or None
+    when ``fn`` has no registered kernel or carries unhashable statics.
+    """
+    base, args, kwargs = _unwrap(fn)
+    name = _NAMES.get(base)
+    if name is None:
+        return None
+    statics = (tuple(args), tuple(sorted(kwargs.items())))
+    try:
+        hash(statics)
+    except TypeError:
+        return None
+    return (name, *statics)
+
+
+def kernel_from_ref(ref: tuple) -> PartitionKernel | None:
+    """Rebuild a kernel from :func:`kernel_ref` output (worker side).
+
+    Importing the module half of the registry name runs its
+    ``register_partition_kernel`` calls, so a fresh worker process finds
+    the factory without any extra bootstrapping.
+    """
+    import importlib
+
+    name, args, kw = ref
+    if name not in _BY_NAME:
+        importlib.import_module(name.split(":", 1)[0])
+    factory = _BY_NAME.get(name)
+    if factory is None:
+        return None
+    return factory(tuple(args), dict(kw))

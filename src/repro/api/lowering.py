@@ -40,8 +40,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.chunkstore import ChunkRef
-from repro.api.kernels import PartitionKernel, partition_kernel_for
+from repro.api.chunkstore import ChunkRef, resolve_chunk
+from repro.api.fnref import encode_fn
+from repro.api.kernels import PartitionKernel, kernel_ref, partition_kernel_for
 from repro.api.plan import MapReduceSpec
 from repro.api.policy import SplIter
 from repro.core.blocked import BlockedArray
@@ -51,6 +52,8 @@ __all__ = [
     "PartitionView",
     "PlacedGroup",
     "Task",
+    "TaskSpec",
+    "key_summary",
     "MergeSpec",
     "TaskGraph",
     "lower",
@@ -133,6 +136,14 @@ class Capabilities:
         them around dispatch without materializing operands; non-streaming
         backends skip the bookkeeping (refs still resolve lazily inside
         ``operands()``).
+      remote: backend dispatches tasks to other processes (ClusterExecutor).
+        Lowering then attaches a picklable function reference
+        (``Task.fn_ref``, built via :mod:`repro.api.fnref` and the named
+        kernel registry) plus a raw-operand builder, so :meth:`Task.spec`
+        can project the descriptor into a :class:`TaskSpec` that crosses a
+        process boundary.  Tasks whose code cannot be referenced (driver
+        views, unpicklable closures) keep ``fn_ref=None`` and the backend
+        runs them in-process.
     """
 
     name: str = "local"
@@ -140,6 +151,7 @@ class Capabilities:
     prefer_pallas: bool = False
     grouped_dispatch: bool = False
     out_of_core: bool = False
+    remote: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +248,75 @@ class Task:
     #: for out-of-core backends (``Capabilities.out_of_core``), which
     #: pin/prefetch/release them around dispatch.
     chunk_refs: tuple = ()
+    #: picklable reference to this task's code (``Capabilities.remote``
+    #: lowerings only): ``("fn", ref)``, ``("scan", fn_ref, combine_ref,
+    #: n_in)`` or ``("kernel", kernel_ref)``.  None ⇒ not remotable.
+    fn_ref: tuple | None = None
+    #: nullary builder of the raw remote payload ``(data, extras)`` —
+    #: per-input block payloads (ndarray or ChunkHandle) still UNstacked,
+    #: so the worker performs the stack/concat and the float story matches
+    #: the in-process lowering bit for bit.
+    remote_operands: Callable[[], tuple] | None = None
+
+    def spec(self) -> "TaskSpec":
+        """Project this descriptor into its picklable :class:`TaskSpec`.
+
+        Only valid on tasks lowered under ``Capabilities.remote`` with a
+        resolvable ``fn_ref`` — the cluster backend checks ``fn_ref`` and
+        schedules every other task in-process.
+        """
+        if self.fn_ref is None or self.remote_operands is None:
+            raise ValueError(
+                f"task {self.index} ({self.kind}) has no remote projection"
+            )
+        data, extras = self.remote_operands()
+        return TaskSpec(
+            index=self.index,
+            location=self.location,
+            kind=self.kind,
+            key_repr=key_summary(self.key),
+            fn_ref=self.fn_ref,
+            block_ids=self.block_ids,
+            n_data=self.n_data,
+            data=data,
+            extras=extras,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """The picklable projection of one :class:`Task` (DuctTeip-style cheap
+    task descriptor): everything a worker process needs to replay the task
+    — code reference, geometry, and per-block operand payloads that are
+    either raw ``ndarray`` bytes or store-attached
+    :class:`~repro.api.chunkstore.ChunkHandle`\\ s.
+
+    Deterministic replay contract: running the same TaskSpec twice (on any
+    worker) produces bit-identical partials, because the payloads are
+    immutable snapshots and the worker rebuilds the exact stack/concat +
+    fn the in-process lowering would have dispatched.
+    """
+
+    index: int
+    location: int
+    kind: str
+    key_repr: str          # human-readable key digest (errors, worker logs)
+    fn_ref: tuple
+    block_ids: tuple
+    n_data: int
+    data: tuple            # per input: tuple of block payloads
+    extras: tuple          # plan-wide traced extras, np-converted
+
+
+def key_summary(key: Hashable) -> str:
+    """Short, address-free rendering of a task key (errors / worker logs)."""
+    if isinstance(key, tuple):
+        return "(" + ", ".join(key_summary(k) for k in key) + ")"
+    name = getattr(key, "co_name", None)
+    if name is not None:
+        return f"<code {name}>"
+    r = repr(key)
+    return r if len(r) <= 48 else r[:45] + "..."
 
 
 @dataclasses.dataclass(frozen=True)
@@ -385,6 +466,36 @@ def _refs_of(arrays, ids, caps: Capabilities) -> tuple:
     )
 
 
+def _block_payload(block):
+    """One block as it crosses a process boundary.
+
+    Store-held chunks with a spill file travel as tiny
+    :class:`~repro.api.chunkstore.ChunkHandle` descriptors (the worker
+    resolves them against its attached store — bytes never transit the
+    control channel); everything else ships as raw ndarray bytes.
+    """
+    if isinstance(block, ChunkRef):
+        handle = getattr(block.store, "handle", None)
+        if handle is not None:
+            h = handle(block)
+            if h is not None:
+                return h
+    return np.asarray(resolve_chunk(block))
+
+
+def _remote_operands_builder(arrays, ids, extra) -> Callable[[], tuple]:
+    """Builder of a task's raw remote payload — evaluated at dispatch time."""
+
+    def build():
+        data = tuple(
+            tuple(_block_payload(a.blocks[b]) for b in ids) for a in arrays
+        )
+        extras = tuple(np.asarray(e) for e in extra)
+        return data, extras
+
+    return build
+
+
 def _lower_partition_views(spec, arrays, groups, caps: Capabilities) -> list[Task]:
     tasks = []
     for g in groups:
@@ -413,6 +524,26 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
     fn_key = stable_task_key(spec.fn)
     tasks: list[Task] = []
 
+    # Remote code references (Capabilities.remote): computed once per plan,
+    # shared by every task.  A None reference — unencodable fn/combine —
+    # simply leaves the tasks in-process-only; lowering never fails on it.
+    plain_ref = scan_ref = None
+    if caps.remote:
+        efn = encode_fn(spec.fn)
+        plain_ref = ("fn", efn) if efn is not None else None
+        if spec.combine is not None:
+            ecomb = encode_fn(spec.combine)
+            if efn is not None and ecomb is not None:
+                scan_ref = ("scan", efn, ecomb, n_in)
+
+    def remote_fields(fn_ref, ids):
+        if not caps.remote or fn_ref is None:
+            return {}
+        return {
+            "fn_ref": fn_ref,
+            "remote_operands": _remote_operands_builder(arrays, ids, extra),
+        }
+
     fused = isinstance(pol, SplIter) and not pol.materialize and spec.combine is not None
     if fused:
         # Fused iteration: ONE dispatch scanning (or pallas-gridding) the
@@ -422,6 +553,10 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
         kernel = partition_kernel_for(spec.fn) if n_in == 1 else None
         scan_fn = _partition_body(spec.fn, spec.combine, n_in)
         scan_key = ("part", fn_key, stable_task_key(spec.combine), n_in)
+        pallas_ref = None
+        if caps.remote and kernel is not None:
+            kref = kernel_ref(spec.fn)
+            pallas_ref = ("kernel", kref) if kref is not None else None
         for g in groups:
             by_shape: dict[tuple, list[int]] = {}
             for b in g.block_ids:
@@ -459,6 +594,9 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                             )
                             for a in arrays
                         ),
+                        **remote_fields(
+                            pallas_ref if choice == "pallas" else scan_ref, ids
+                        ),
                     )
                 )
     elif isinstance(pol, SplIter) and pol.materialize:
@@ -491,6 +629,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                         )
                         for a in arrays
                     ),
+                    **remote_fields(plain_ref, g.block_ids),
                 )
             )
     else:
@@ -517,6 +656,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                     data_shapes=tuple(
                         (a.blocks[b].shape, str(a.blocks[b].dtype)) for a in arrays
                     ),
+                    **remote_fields(plain_ref, (b,)),
                 )
             )
     return tasks

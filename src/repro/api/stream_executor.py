@@ -227,6 +227,12 @@ class StreamExecutor(_PlanExecutor):
         StreamExecutor leaves no temp files behind.  With
         ``close_stores=False`` stores are only trimmed (resident chunks
         shed, spill files kept) and remain usable by other executors.
+
+        Idempotent: the seen-store set is consumed by the first call, and
+        a store that is already closed (by an earlier close, or by its
+        owner) is never re-entered — calling ``close()`` again is a clean
+        no-op, and the executor remains usable (the prefetch thread
+        respawns on next use).
         """
         if self._prefetcher is not None:
             self._prefetcher.stop()
@@ -235,6 +241,8 @@ class StreamExecutor(_PlanExecutor):
         self._seen_stores.clear()
         super().close()
         for store in stores:
+            if getattr(store, "closed", False):
+                continue  # already torn down; re-entering close would be a bug
             if self._close_stores:
                 store.close()
             else:

@@ -28,7 +28,6 @@ Design points for the 1000-node story:
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

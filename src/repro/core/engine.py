@@ -58,6 +58,9 @@ class EngineReport:
     bytes_loaded: int = 0        # chunk-store spill reads during this window
     bytes_spilled: int = 0       # chunk-store spill writes (evictions of dirty chunks)
     prefetch_hits: int = 0       # chunk gets served by an earlier prefetch
+    remote_dispatches: int = 0   # dispatches executed in a worker process (cluster)
+    ipc_bytes: int = 0           # serialized bytes over the cluster control channel
+    retries: int = 0             # units replayed after a worker death (cluster)
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
@@ -72,6 +75,9 @@ class EngineReport:
         self.bytes_loaded += other.bytes_loaded
         self.bytes_spilled += other.bytes_spilled
         self.prefetch_hits += other.prefetch_hits
+        self.remote_dispatches += other.remote_dispatches
+        self.ipc_bytes += other.ipc_bytes
+        self.retries += other.retries
         if other.granularity:
             self.granularity = other.granularity
         return self

@@ -19,7 +19,6 @@ from __future__ import annotations
 import dataclasses
 import math
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocked import BlockedArray, contiguous_placement, PlacementPolicy

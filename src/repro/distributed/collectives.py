@@ -15,7 +15,6 @@ cross-pod hop (4× fewer DCN bytes); error feedback lives in the optimizer
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
@@ -23,7 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.compat import axis_size, shard_map
-from repro.optim.compression import int8_compress, int8_decompress
+from repro.optim.compression import int8_compress
 
 __all__ = [
     "hierarchical_psum",

@@ -18,7 +18,6 @@ Entry points (all pure functions of explicit params):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

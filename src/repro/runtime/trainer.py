@@ -26,7 +26,6 @@ from repro.configs.base import ModelConfig
 from repro.data.pipeline import BlockedBatchPipeline, PipelineState
 from repro.models import build_model
 from repro.optim import (
-    AdamWState,
     accumulate_gradients,
     adamw_init,
     adamw_update,

@@ -6,9 +6,6 @@ import numpy as np
 
 from repro.analysis.hlo import parse_collectives
 from repro.analysis.roofline import (
-    HBM_BW,
-    ICI_BW,
-    PEAK_FLOPS,
     analyze,
     model_flops,
 )

@@ -8,7 +8,6 @@ zero re-splits and zero bytes moved across retunes — plus end-to-end
 `SplIter(partitions_per_location="auto")` runs on all three backends.
 """
 
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

@@ -2,11 +2,9 @@
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     BlockedArray,
-    Partition,
     contiguous_placement,
     rechunk,
     round_robin_placement,

@@ -8,7 +8,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.api import Collection, LocalExecutor, ThreadedExecutor, as_policy
+from repro.api import Collection, ThreadedExecutor, as_policy
 from repro.core import (
     BlockedArray,
     contiguous_placement,

@@ -17,8 +17,11 @@ import pytest
 API_MODULES = (
     "repro.api.autotune",
     "repro.api.chunkstore",
+    "repro.api.cluster_executor",
+    "repro.api.cluster_worker",
     "repro.api.collection",
     "repro.api.executors",
+    "repro.api.fnref",
     "repro.api.kernels",
     "repro.api.lowering",
     "repro.api.mesh_executor",

@@ -4,7 +4,6 @@ All kernels run in interpret=True (Pallas interpreter on CPU); the same
 kernel bodies compile to Mosaic on TPU.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Hypothesis property tests on the one-hot MoE dispatch invariants."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

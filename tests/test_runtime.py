@@ -6,7 +6,6 @@ import os
 
 import jax
 import numpy as np
-import pytest
 
 from repro.checkpoint import Checkpointer
 from repro.data.pipeline import BlockedBatchPipeline

@@ -3,7 +3,6 @@ pspecs, non-divisible fallbacks, and the logical-axis shard() constraint."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
