@@ -22,6 +22,16 @@ Locality (the paper's placement story, now with real transport costs):
 * ``EngineReport`` bills the boundary: ``ipc_bytes`` (exact serialized
   bytes both directions), ``remote_dispatches`` and ``retries``.
 
+Flow control: the parent keeps at most ONE un-replied command in flight
+per worker.  The drain sweep only sends a unit to a worker whose window
+is empty (busy targets are deferred past the next reply pump, so one
+busy worker never head-of-line blocks the idle ones), and driver RPCs
+pump until their target's window clears.  Both directions are blocking
+writes over ~64KB OS pipes, so without the window a worker blocked
+writing a large result while the parent blocks writing it more commands
+would deadlock; with it, every send targets a worker that is parked in
+``recv``, and the parent always comes back to draining reply pipes.
+
 Fault tolerance (the Chunks-and-Tasks deterministic-replay model):
 
 * workers heartbeat on the shared reply queue; the drain loop doubles as
@@ -173,8 +183,14 @@ class _WorkerHandle:
         return self.process.is_alive()
 
     def send(self, msg) -> int:
-        """Pickle + send one command; returns the exact serialized size."""
-        payload = pickle.dumps(msg)
+        """Pickle + send one command; returns the exact serialized size.
+
+        Pickling errors propagate untouched — only the transport write
+        (``OSError`` out of :meth:`send_raw`) signals worker death.
+        """
+        return self.send_raw(pickle.dumps(msg))
+
+    def send_raw(self, payload: bytes) -> int:
         self._conn.send_bytes(payload)
         return len(payload)
 
@@ -201,8 +217,9 @@ class _DrainContext:
         self.state = state
         self.epoch = epoch
         self.ready: collections.deque[_Unit] = collections.deque()
+        self.replays: collections.deque[_Unit] = collections.deque()
         self.inflight: dict[int, _Unit] = {}
-        self.meta: dict[int, tuple] = {}  # unit index -> (t_send, sent_bytes)
+        self.meta: dict[int, tuple] = {}  # unit index -> (t0_send, send_seconds)
 
 
 class ClusterExecutor(_PlanExecutor):
@@ -258,6 +275,8 @@ class ClusterExecutor(_PlanExecutor):
         self._attached: set[tuple[int, str]] = set()
         self._call_seq = itertools.count()
         self._call_results: dict[int, tuple] = {}
+        self._pending_calls: set[int] = set()  # issued, not yet resolved
+        self._outstanding: dict[int, int] = {}  # wid -> un-replied commands
         self._active: _DrainContext | None = None
         if log_dir:
             os.makedirs(log_dir, exist_ok=True)
@@ -321,13 +340,23 @@ class ClusterExecutor(_PlanExecutor):
         return self._spawn(wid, location)
 
     def _survivor(self, *, not_worker: int | None = None) -> _WorkerHandle | None:
+        """A live worker, preferring one whose command window is empty.
+
+        The preference keeps replays and driver RPCs off a worker that is
+        mid-unit (they would otherwise wait out its reply) whenever any
+        other survivor is idle.
+        """
+        fallback = None
         for wid in sorted(self._workers):
             if wid == not_worker:
                 continue
             handle = self._workers[wid]
-            if handle.alive():
+            if not handle.alive():
+                continue
+            if self._outstanding.get(wid, 0) == 0:
                 return handle
-        return None
+            fallback = fallback or handle
+        return fallback
 
     # -- the Executor entry points --------------------------------------------
 
@@ -394,12 +423,36 @@ class ClusterExecutor(_PlanExecutor):
             self.engine.report.ipc_bytes += worker.send(("attach", manifest))
             self._attached.add((worker.id, uid))
 
+    def _await_window(self, worker: _WorkerHandle, ctx: _DrainContext | None) -> bool:
+        """Pump replies until ``worker`` has no un-replied command in flight.
+
+        The one-command-per-worker window is the deadlock guard for the
+        ~64KB OS pipes: a send only ever targets a worker that is parked
+        in ``recv`` (nothing outstanding), so the parent cannot block in
+        ``send_bytes`` against a worker that is itself blocked writing a
+        large reply — the parent always returns here to keep draining
+        reply pipes first.  Returns False if the worker died while we
+        waited (the caller re-resolves a target).
+        """
+        while self._outstanding.get(worker.id, 0) > 0:
+            if worker.id not in self._workers or not worker.alive():
+                self._on_worker_death(worker.id)
+                return False
+            self._pump(ctx)
+        return worker.id in self._workers
+
     def _dispatch_remote(
         self, unit: _Unit, ctx: _DrainContext, *, prefer_survivor: bool = False
-    ) -> None:
-        """Ship one unit to its location's worker (or any survivor).
+    ) -> bool:
+        """Try to ship one unit to its location's worker (or any survivor).
 
-        ``prefer_survivor`` is the requeue path: a replayed unit goes to a
+        Returns False — *without* blocking — when the target worker still
+        has a command in flight: the drain sweep defers the unit and
+        retries after the next pump, so a busy worker never head-of-line
+        blocks dispatch to idle ones, and a send never queues up behind a
+        worker that isn't parked in ``recv`` (the pipe-deadlock guard).
+
+        ``prefer_survivor`` is the replay path: a requeued unit goes to a
         worker that is already alive (locality traded for liveness — the
         dead worker's location has no owner anyway); only when the whole
         pool is gone does a fresh worker spawn.
@@ -408,32 +461,43 @@ class ClusterExecutor(_PlanExecutor):
         worker = (self._survivor() if prefer_survivor else None) or self._worker_for(
             unit.location
         )
+        if ctx.state.errors:  # a death inside _worker_for poisoned the run
+            return True
+        if self._outstanding.get(worker.id, 0) > 0:
+            return False  # window full: defer rather than risk a blocking send
+        spec = task.spec()  # payload errors propagate: nothing pinned/assigned yet
         self._acquire_unit(unit)  # pin chunks for the whole round-trip
-        t0 = time.perf_counter()
         release_pin = True  # dropped only if neither success nor requeue settles it
         try:
-            spec = task.spec()
-            self._ensure_attached(worker, spec)
+            # Assign BEFORE touching the transport: a worker death anywhere
+            # at the send boundary then leaves the unit owned, so the death
+            # sweep's requeue returns it for replay instead of losing it.
             ctx.state.assign(unit, worker.id)
-            sent = worker.send(
+            payload = pickle.dumps(
                 ("unit", ctx.epoch, spec, ctx.state.attempts[unit.index] - 1)
             )
+            t0 = time.perf_counter()
+            try:
+                self._ensure_attached(worker, spec)
+                sent = worker.send_raw(payload)
+            except OSError:
+                # Worker died between the liveness check and the send.  The
+                # unit is assigned, so the death sweep's requeue covers it —
+                # including the poison check — and that path releases THIS
+                # dispatch's pin before the replay takes its own, so the
+                # ledger is settled there, not in the finally below.
+                release_pin = False
+                self._on_worker_death(worker.id)
+                return True
             release_pin = False  # success: the pin rides until reply/requeue
-        except (OSError, ValueError):
-            # Worker died between liveness check and send.  The unit is
-            # already assigned, so the death sweep's requeue covers it —
-            # including the poison check — and that path releases THIS
-            # dispatch's pin before the replay takes its own, so the
-            # ledger is settled there, not in the finally below.
-            release_pin = False
-            self._on_worker_death(worker.id)
-            return
         finally:
-            if release_pin:  # unexpected error (bad spec, missing manifest)
+            if release_pin:  # genuine payload error (pickling, missing manifest)
                 self._release_unit(unit)
+        self._outstanding[worker.id] = self._outstanding.get(worker.id, 0) + 1
         self.engine.report.ipc_bytes += sent
         ctx.meta[unit.index] = (t0, time.perf_counter() - t0)
         ctx.inflight[unit.index] = unit
+        return True
 
     def _drain(self, state: _SchedulerState) -> None:
         self._epoch += 1
@@ -443,19 +507,34 @@ class ClusterExecutor(_PlanExecutor):
         self._active = ctx
         try:
             while not state.errors:
+                # Dispatch sweep: replays first (retry urgency), then fresh
+                # ready units.  A unit whose target worker still has a
+                # command in flight is deferred to the next sweep — the
+                # pump in between is what closes the window again.
+                deferred: list[_Unit] = []
+                while ctx.replays and not state.errors:
+                    unit = ctx.replays.popleft()
+                    if state.is_done(unit.index):
+                        continue  # a salvaged duplicate reply beat the replay
+                    if not self._dispatch_remote(unit, ctx, prefer_survivor=True):
+                        deferred.append(unit)
+                ctx.replays.extend(deferred)
+                deferred = []
                 while ctx.ready and not state.errors:
                     unit = ctx.ready.popleft()
                     if self._remotable(unit):
-                        self._dispatch_remote(unit, ctx)
+                        if not self._dispatch_remote(unit, ctx):
+                            deferred.append(unit)
                     else:
                         # In-process unit (merge fold, driver view).  Runs
                         # on the calling thread; its task() dispatches may
                         # themselves be remote RPCs, which pump this same
                         # context reentrantly.
                         ctx.ready.extend(self._run_unit(unit, state))
+                ctx.ready.extend(deferred)
                 if state.done.is_set() or state.errors:
                     break
-                if not ctx.inflight and not ctx.ready:
+                if not ctx.inflight and not ctx.ready and not ctx.replays:
                     break  # nothing left to wait for (defensive)
                 self._pump(ctx)
         finally:
@@ -506,10 +585,16 @@ class ClusterExecutor(_PlanExecutor):
     def _on_reply(self, payload: bytes, ctx: _DrainContext | None) -> None:
         msg = pickle.loads(payload)
         kind, wid = msg[0], msg[1]
-        self._last_hb[wid] = time.monotonic()
+        if wid in self._workers:  # never resurrect a buried worker's heartbeat
+            self._last_hb[wid] = time.monotonic()
         if kind in ("hb", "ready"):
             return
+        # any unit/call reply closes that worker's one-command window
+        if wid in self._workers and self._outstanding.get(wid, 0) > 0:
+            self._outstanding[wid] -= 1
         if kind in ("call_done", "call_error"):
+            if msg[3] not in self._pending_calls:
+                return  # superseded call (replayed after a death): drop it
             self.engine.report.ipc_bytes += len(payload)
             self._call_results[msg[3]] = msg
             return
@@ -566,6 +651,7 @@ class ClusterExecutor(_PlanExecutor):
             del self._by_location[handle.location]
         self._attached -= {p for p in self._attached if p[0] == wid}
         self._last_hb.pop(wid, None)
+        self._outstanding.pop(wid, None)
         if handle.alive():  # hung (heartbeat-stale), not dead: put it down
             handle.process.terminate()
         handle.process.join(1.0)
@@ -605,7 +691,10 @@ class ClusterExecutor(_PlanExecutor):
                 )
                 return
             self.engine.report.retries += 1
-            self._dispatch_remote(unit, ctx, prefer_survivor=True)
+            # Enqueue, don't dispatch: this may run deep inside a _pump —
+            # the drain sweep replays the unit once control unwinds, so
+            # death handling never nests a send inside a send.
+            ctx.replays.append(unit)
 
     # -- driver-level remote calls --------------------------------------------
 
@@ -615,12 +704,15 @@ class ClusterExecutor(_PlanExecutor):
         failures = 0
         while True:
             worker = self._survivor() or self._worker_for(0)
+            if not self._await_window(worker, self._active):
+                continue  # died while we waited for its window: re-resolve
             call_id = next(self._call_seq)
+            payload = pickle.dumps(
+                ("call", self._epoch, call_id, fn_ref, payload_args, key_repr)
+            )
             try:
-                report.ipc_bytes += worker.send(
-                    ("call", self._epoch, call_id, fn_ref, payload_args, key_repr)
-                )
-            except (OSError, ValueError):
+                report.ipc_bytes += worker.send_raw(payload)
+            except OSError:
                 self._on_worker_death(worker.id)
                 failures += 1
                 if failures > self.max_retries:
@@ -631,6 +723,8 @@ class ClusterExecutor(_PlanExecutor):
                     ) from None
                 report.retries += 1
                 continue
+            self._pending_calls.add(call_id)
+            self._outstanding[worker.id] = self._outstanding.get(worker.id, 0) + 1
             while call_id not in self._call_results:
                 if worker.id not in self._workers or not worker.alive():
                     # The pump's sweep may already have buried it; make
@@ -641,6 +735,7 @@ class ClusterExecutor(_PlanExecutor):
                     break
                 self._pump(self._active)
             msg = self._call_results.pop(call_id, None)
+            self._pending_calls.discard(call_id)  # resolved or abandoned: done
             if msg is None:  # worker died mid-call: replay on a survivor
                 failures += 1
                 if failures > self.max_retries:
@@ -673,6 +768,8 @@ class ClusterExecutor(_PlanExecutor):
         self._last_hb.clear()
         self._manifests.clear()
         self._call_results.clear()
+        self._pending_calls.clear()
+        self._outstanding.clear()
         for w in workers:
             w.stop()
         super().close()

@@ -141,6 +141,42 @@ class TestBitIdentity:
             assert identical(g, r)
 
 
+def test_large_payloads_do_not_deadlock_pipes():
+    """Regression: both control-channel directions are blocking writes over
+    ~64KB OS pipes.  In-memory plans ship operands inline, so a single
+    command or result above the buffer used to let the parent block in
+    ``send_bytes`` while the worker blocked writing its reply — a mutual
+    hang.  The one-un-replied-command-per-worker window must keep every
+    send aimed at a worker that is parked in ``recv``."""
+    rng = np.random.default_rng(3)
+    big = _blocked(rng.random((2048, 128)).astype(np.float32), 256)  # 128KB/block
+    plan = Collection.from_blocked(big).split(Baseline()).map_blocks(
+        lambda b: b * 2.0
+    )
+    ref = plan.compute(executor=LocalExecutor())
+    ex = _cluster()
+    box: dict = {}
+
+    def run():
+        box["got"] = plan.compute(executor=ex)
+
+    t = threading.Thread(target=run, daemon=True)  # watchdog: hang -> fail, not CI stall
+    t.start()
+    t.join(timeout=180)
+    try:
+        if t.is_alive():
+            pytest.fail("cluster run deadlocked on >64KB pipe payloads")
+    finally:
+        if not t.is_alive():
+            ex.close()
+    got = box["got"]
+    assert got.report.remote_dispatches >= 1
+    # operands AND results crossed the wire: ipc dwarfs the dataset
+    assert got.report.ipc_bytes > 1.9 * big.nbytes
+    for g, r in zip(got.value, ref.value):
+        assert identical(g, r)
+
+
 # ---------------------------------------------------------------------------
 # chunk-backed plans: bytes stay off the control channel
 # ---------------------------------------------------------------------------
@@ -233,6 +269,21 @@ class TestFaultTolerance:
         h, rep = histogram(points, bins=8, policy=POL, executor=ex)
         assert identical(h, ref)
         ex.close()
+
+    def test_send_boundary_death_requeues_unit(self, points):
+        # A worker that passes the liveness check but whose command pipe
+        # is already torn raises OSError inside the send itself.  The unit
+        # is assigned before the transport is touched, so the death
+        # sweep's requeue must replay it — not silently lose it.
+        ref, _ = histogram(points, bins=8, policy=POL)
+        ex = _cluster()
+        h0, _ = histogram(points, bins=8, policy=POL, executor=ex)  # warm pool
+        assert identical(h0, ref)
+        ex._workers[0]._conn.close()  # torn transport, process still alive
+        h, rep = histogram(points, bins=8, policy=POL, executor=ex)
+        ex.close()
+        assert identical(h, ref)
+        assert rep.retries >= 1
 
     def test_driver_rpc_retries_on_worker_death(self, points):
         rng = np.random.default_rng(1)
