@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Baseline, Rechunk, SplIter
+from repro.api import Baseline, JobClient, JobServer, Rechunk, SplIter
 from repro.core.apps.kmeans import kmeans
 from repro.core.blocked import BlockedArray, round_robin_placement
 
@@ -76,6 +76,8 @@ def _aggregate_row(pol, executor_name: str, warm, res) -> dict:
         "remote_dispatches": sum(r.remote_dispatches for r in res.reports),
         "ipc_bytes": sum(r.ipc_bytes for r in res.reports),
         "retries": sum(r.retries for r in res.reports),
+        "jobs": 0,
+        "resumes": 0,
     }
 
 
@@ -95,7 +97,32 @@ def smoke() -> list[dict]:
             if hasattr(ex, "close"):
                 ex.close()
     rows.append(_stream_disk_row())
+    rows.append(_server_row())
     return rows
+
+
+def _server_row() -> dict:
+    """The engine-as-a-service axis: kmeans through JobServer + JobClient.
+
+    Each Lloyd iteration becomes one server job (3 iterations → 3 jobs),
+    multiplexed on the server's shared pool; centers must stay bit-identical
+    to the direct-executor run.  ``jobs`` (submissions in the steady-state
+    window) and ``resumes`` (0 — nobody killed the server) are structural.
+    """
+    x = _dataset(2, 4, 1024, d=4)
+    pol = SplIter()
+    ref = kmeans(x, k=4, iters=3, policy=pol)
+    server = JobServer()
+    client = JobClient(server, tenant="bench")
+    warm = kmeans(x, k=4, iters=3, policy=pol, executor=client)  # warm+prepare
+    jobs_before = len(server.jobs())
+    res = kmeans(x, k=4, iters=3, policy=pol, executor=client)   # steady state
+    assert bool(jnp.all(res.centers == ref.centers)), "server kmeans diverged"
+    row = _aggregate_row(pol, "server", warm, res)
+    row["jobs"] = len(server.jobs()) - jobs_before
+    row["resumes"] = server.resumed_jobs
+    server.close()
+    return row
 
 
 def _stream_disk_row() -> dict:

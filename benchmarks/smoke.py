@@ -43,7 +43,10 @@ import time
 #: ``remote_dispatches`` and ``retries`` pin the cluster rows: how much of
 #: each plan crosses the IPC boundary is structural, and a non-zero retry
 #: count in a no-fault smoke run is a bug.  ``ipc_bytes`` is excluded —
-#: serialized sizes may drift across pickle/numpy versions.
+#: serialized sizes may drift across pickle/numpy versions.  ``jobs`` and
+#: ``resumes`` pin the JobServer rows: how many submissions one app run
+#: multiplexes is structural, and a non-zero resume count in a no-kill
+#: smoke run is a bug.
 STRUCTURAL = (
     "dispatches",
     "merges",
@@ -52,6 +55,8 @@ STRUCTURAL = (
     "prep_bytes",
     "remote_dispatches",
     "retries",
+    "jobs",
+    "resumes",
 )
 
 

@@ -67,8 +67,12 @@ from repro.api.executors import (
     LocalExecutor,
     PartitionView,
     PrepareStats,
+    SharedAssets,
     ThreadedExecutor,
 )
+from repro.api.jobclient import JobClient
+from repro.api.jobserver import Job, JobEvent, JobFailedError, JobRejected, JobServer
+from repro.api.journal import JobJournal
 from repro.api.kernels import (
     PartitionKernel,
     pallas_interpret,
@@ -81,7 +85,9 @@ from repro.api.lowering import (
     Task,
     TaskGraph,
     TaskSpec,
+    inputs_signature,
     lower,
+    plan_fingerprint,
     stable_task_key,
     stacked_fold,
 )
@@ -102,6 +108,16 @@ __all__ = [
     "ClusterExecutor",
     "ClusterFailedError",
     "FaultPlan",
+    "JobServer",
+    "JobClient",
+    "Job",
+    "JobEvent",
+    "JobRejected",
+    "JobFailedError",
+    "JobJournal",
+    "SharedAssets",
+    "inputs_signature",
+    "plan_fingerprint",
     "ChunkRef",
     "ChunkHandle",
     "StoreManifest",

@@ -202,6 +202,23 @@ class Autotuner:
         """The ppl to use for the next execution."""
         return self._proposal
 
+    def describe(self) -> dict:
+        """JSON-able schedule summary (diagnostics / JobServer snapshots).
+
+        Shared-asset pools snapshot this per tuner so an operator can see
+        what granularity each (geometry, task, policy) workload converged
+        to across tenants; it is informational — resume never replays
+        tuner state (a resumed job's policy is pinned in its journal).
+        """
+        return {
+            "proposal": self._proposal,
+            "last_ppl": self.last_ppl,
+            "retunes": self.retunes,
+            "frozen": self.frozen,
+            "probing": self.probing,
+            "samples": {str(k): v.wall_s for k, v in self.samples.items()},
+        }
+
     @property
     def probing(self) -> bool:
         """True while probe-ladder candidates remain unmeasured (the window

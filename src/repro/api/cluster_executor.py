@@ -91,11 +91,35 @@ class ClusterFailedError(RuntimeError):
 
     ``task_key`` names the poisoned task so operators can tell *which*
     work item keeps killing workers, not just that something did.
+    ``attempts`` is the per-attempt history — one ``{"worker", "error"}``
+    dict per failed attempt, in order, each carrying the worker id and a
+    one-line cause summary ("process died", "hung (heartbeat stale)", or
+    the remote exception's first line).  ``log_paths`` lists the involved
+    workers' log files when worker logging is on (the ``log_dir``
+    argument, or the ``REPRO_CLUSTER_LOG_DIR`` environment default), so a
+    poisoned run points straight at the evidence.
     """
 
-    def __init__(self, message: str, *, task_key: str | None = None):
+    def __init__(
+        self,
+        message: str,
+        *,
+        task_key: str | None = None,
+        attempts: tuple = (),
+        log_paths: tuple = (),
+    ):
+        if attempts:
+            lines = [
+                f"  attempt {i + 1}: worker {a['worker']}: {a['error']}"
+                for i, a in enumerate(attempts)
+            ]
+            message = message + "\nattempt history:\n" + "\n".join(lines)
+        if log_paths:
+            message += "\nworker logs: " + ", ".join(log_paths)
         super().__init__(message)
         self.task_key = task_key
+        self.attempts = tuple(attempts)
+        self.log_paths = tuple(log_paths)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +244,26 @@ class _DrainContext:
         self.replays: collections.deque[_Unit] = collections.deque()
         self.inflight: dict[int, _Unit] = {}
         self.meta: dict[int, tuple] = {}  # unit index -> (t0_send, send_seconds)
+        # unit index -> [{"worker", "error", "log"}, ...]: one entry per
+        # FAILED attempt, consumed by ClusterFailedError on poison.
+        self.history: dict[int, list[dict]] = {}
+
+    def record_failure(
+        self, index: int, wid: int, error: str, log_path: str | None
+    ) -> None:
+        self.history.setdefault(index, []).append(
+            {"worker": wid, "error": error, "log": log_path}
+        )
+
+    def error_kwargs(self, index: int) -> dict:
+        """attempts/log_paths keyword payload for a ClusterFailedError."""
+        attempts = tuple(self.history.get(index, ()))
+        return {
+            "attempts": attempts,
+            "log_paths": tuple(
+                dict.fromkeys(a["log"] for a in attempts if a["log"])
+            ),
+        }
 
 
 class ClusterExecutor(_PlanExecutor):
@@ -262,7 +306,10 @@ class ClusterExecutor(_PlanExecutor):
         self.heartbeat_s = heartbeat_s
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.fault_plan = fault_plan
-        self.log_dir = log_dir
+        # Env default: the CI fault lane (and any operator) can turn on
+        # worker logging for every executor in a process without plumbing
+        # the argument through app code.
+        self.log_dir = log_dir or os.environ.get("REPRO_CLUSTER_LOG_DIR") or None
         self.poll_s = poll_s
         self._ctx = multiprocessing.get_context("spawn")
         self._workers: dict[int, _WorkerHandle] = {}
@@ -609,11 +656,19 @@ class ClusterExecutor(_PlanExecutor):
         self._release_unit(unit)
         if kind == "unit_error":
             task = unit.tasks[0]
+            handle = self._workers.get(wid)
+            ctx.record_failure(
+                index,
+                wid,
+                str(msg[4]).strip().splitlines()[-1] if msg[4] else "unit_error",
+                handle.log_path if handle is not None else None,
+            )
             ctx.state.fail(
                 ClusterFailedError(
                     f"task {key_summary(task.key)} (blocks={task.block_ids}) "
                     f"failed on worker {wid}:\n{msg[4]}",
                     task_key=key_summary(task.key),
+                    **ctx.error_kwargs(index),
                 )
             )
             return
@@ -652,6 +707,7 @@ class ClusterExecutor(_PlanExecutor):
         self._attached -= {p for p in self._attached if p[0] == wid}
         self._last_hb.pop(wid, None)
         self._outstanding.pop(wid, None)
+        cause = "hung (heartbeat stale)" if handle.alive() else "process died"
         if handle.alive():  # hung (heartbeat-stale), not dead: put it down
             handle.process.terminate()
         handle.process.join(1.0)
@@ -679,6 +735,7 @@ class ClusterExecutor(_PlanExecutor):
             # it, or the store could never evict the chunks it holds.
             self._release_unit(unit)
             task = unit.tasks[0]
+            ctx.record_failure(unit.index, wid, cause, handle.log_path)
             if ctx.state.attempts[unit.index] > self.max_retries:
                 ctx.state.fail(
                     ClusterFailedError(
@@ -687,6 +744,7 @@ class ClusterExecutor(_PlanExecutor):
                         f"died with their workers (max_retries="
                         f"{self.max_retries})",
                         task_key=key_summary(task.key),
+                        **ctx.error_kwargs(unit.index),
                     )
                 )
                 return
@@ -702,6 +760,16 @@ class ClusterExecutor(_PlanExecutor):
         payload_args = tuple(np.asarray(a) for a in args)
         report = self.engine.report
         failures = 0
+        history: list[dict] = []
+
+        def err_kwargs():
+            return {
+                "attempts": tuple(history),
+                "log_paths": tuple(
+                    dict.fromkeys(a["log"] for a in history if a["log"])
+                ),
+            }
+
         while True:
             worker = self._survivor() or self._worker_for(0)
             if not self._await_window(worker, self._active):
@@ -714,12 +782,17 @@ class ClusterExecutor(_PlanExecutor):
                 report.ipc_bytes += worker.send_raw(payload)
             except OSError:
                 self._on_worker_death(worker.id)
+                history.append(
+                    {"worker": worker.id, "error": "process died",
+                     "log": worker.log_path}
+                )
                 failures += 1
                 if failures > self.max_retries:
                     raise ClusterFailedError(
                         f"call {key_repr} poisoned: {failures} workers died "
                         f"under it (max_retries={self.max_retries})",
                         task_key=key_repr,
+                        **err_kwargs(),
                     ) from None
                 report.retries += 1
                 continue
@@ -737,19 +810,32 @@ class ClusterExecutor(_PlanExecutor):
             msg = self._call_results.pop(call_id, None)
             self._pending_calls.discard(call_id)  # resolved or abandoned: done
             if msg is None:  # worker died mid-call: replay on a survivor
+                history.append(
+                    {"worker": worker.id, "error": "process died mid-call",
+                     "log": worker.log_path}
+                )
                 failures += 1
                 if failures > self.max_retries:
                     raise ClusterFailedError(
                         f"call {key_repr} poisoned: {failures} workers died "
                         f"under it (max_retries={self.max_retries})",
                         task_key=key_repr,
+                        **err_kwargs(),
                     )
                 report.retries += 1
                 continue
             if msg[0] == "call_error":
+                handle = self._workers.get(msg[1])
+                history.append(
+                    {"worker": msg[1],
+                     "error": str(msg[4]).strip().splitlines()[-1]
+                     if msg[4] else "call_error",
+                     "log": handle.log_path if handle is not None else None}
+                )
                 raise ClusterFailedError(
                     f"call {key_repr} failed on worker {msg[1]}:\n{msg[4]}",
                     task_key=key_repr,
+                    **err_kwargs(),
                 )
             report.dispatches += 1
             report.remote_dispatches += 1

@@ -95,6 +95,7 @@ from repro.api.lowering import (
     PlacedGroup,
     Task,
     TaskGraph,
+    inputs_signature,
     lower,
     stable_task_key,
     stacked_fold,
@@ -114,6 +115,7 @@ __all__ = [
     "LocalExecutor",
     "ThreadedExecutor",
     "PrepareStats",
+    "SharedAssets",
 ]
 
 
@@ -176,6 +178,34 @@ class PrepareStats:
     splits: int = 0      # placement scans (SplitBase builds)
     regroups: int = 0    # ppl regroups served WITHOUT re-splitting
     rechunks: int = 0    # physical rechunk preparations
+
+
+@dataclasses.dataclass
+class SharedAssets:
+    """Cross-executor caches, owned by a long-lived service (DESIGN.md §12).
+
+    A standalone executor owns a private copy of each of these; a
+    :class:`~repro.api.jobserver.JobServer` builds ONE ``SharedAssets`` and
+    has every pooled executor :meth:`~_PlanExecutor.adopt_shared_assets`, so
+    prepared placements, profile events and autotuner state accumulate
+    across tenants: tenant B's ``SplIter("auto")`` submission starts from
+    the granularity tenant A's probes already converged on, keyed by the
+    geometry-based :func:`~repro.api.lowering.inputs_signature` rather than
+    object ids (two tenants never share array objects).
+
+    Mutation happens under whichever thread runs units; the JobServer's
+    single scheduler thread serializes unit execution, so no extra locking
+    is layered on top of what each structure already has.
+    """
+
+    prepare_cache: collections.OrderedDict = dataclasses.field(
+        default_factory=collections.OrderedDict
+    )
+    prepare_stats: PrepareStats = dataclasses.field(default_factory=PrepareStats)
+    profile: ProfileStore = dataclasses.field(default_factory=ProfileStore)
+    tuners: collections.OrderedDict = dataclasses.field(
+        default_factory=collections.OrderedDict
+    )
 
 
 @dataclasses.dataclass
@@ -369,6 +399,27 @@ class _PlanExecutor:
         )
         self._scope_depth = 0
 
+    def adopt_shared_assets(self, assets: SharedAssets) -> None:
+        """Rebind this executor's caches to server-owned :class:`SharedAssets`.
+
+        After adoption the executor reads and writes the shared structures
+        directly (no copies), so probes/preparations done through any
+        sibling executor in the pool are visible here.  Pre-adoption
+        private profile history folds into the shared store
+        (:meth:`~repro.api.profile.ProfileStore.merge`) so earlier probes
+        keep informing the shared overhead hint; prepare/tuner entries
+        migrate by dict update (shared entries win on key collision).
+        """
+        assets.profile.merge(self.profile)
+        for key, entry in self._prepare_cache.items():
+            assets.prepare_cache.setdefault(key, entry)
+        for key, entry in self._tuners.items():
+            assets.tuners.setdefault(key, entry)
+        self._prepare_cache = assets.prepare_cache
+        self.prepare_stats = assets.prepare_stats
+        self.profile = assets.profile
+        self._tuners = assets.tuners
+
     # -- backend capabilities (consumed by the lowering pass) -----------------
 
     @property
@@ -477,8 +528,13 @@ class _PlanExecutor:
         )
 
     def _tuner_for(self, spec: MapReduceSpec, pol: SplIter) -> Autotuner:
+        # Geometry-keyed (not id-keyed): two equal-geometry datasets — e.g.
+        # two tenants submitting over the same blocking through a JobServer
+        # pool with SharedAssets, or a journal-rebuilt array after a server
+        # restart — resolve to the SAME tuner, so probe cost is paid once
+        # per (geometry, kind, fn, policy) rather than once per array object.
         key = (
-            tuple(id(a) for a in spec.inputs),
+            inputs_signature(spec.inputs),
             spec.kind,
             stable_task_key(spec.fn),
             pol,
@@ -490,9 +546,9 @@ class _PlanExecutor:
         x0 = spec.inputs[0]
         counts = [len(x0.blocks_at(loc)) for loc in range(x0.num_locations)]
         tuner = Autotuner(counts, seed=pol.autotune_seed)
-        # The entry pins the inputs (id-keyed, like the prepare cache) and
-        # shares its LRU bound.
-        self._tuners[key] = (spec.inputs, tuner)
+        # Tuple value kept for compat with snapshot/introspection call
+        # sites; the geometry key does not pin the input arrays alive.
+        self._tuners[key] = (None, tuner)
         while len(self._tuners) > self.prepare_cache_size:
             self._tuners.popitem(last=False)
         return tuner
@@ -648,14 +704,17 @@ class _PlanExecutor:
             for i, t in enumerate(graph.tasks)
         ]
 
-    def _schedule(self, graph: TaskGraph) -> Any:
-        """Run a TaskGraph through the shared dependency-driven core.
+    def _build_units(
+        self, graph: TaskGraph
+    ) -> tuple[list[_Unit], _SchedulerState, _Unit | None]:
+        """TaskGraph → ``(units, state, merge_unit)``, merge closure bound.
 
-        One implementation for every backend: plan dispatch units (hook),
-        append the merge as a unit depending on all of them, drain the
-        ready set (hook) with per-unit profiling.  Returns the merged value
-        when the graph has a merge, else the per-task partials in plan
-        order.
+        The unit-level handoff point: :meth:`_schedule` drains the whole
+        list through the backend's ``_drain`` hook, while a
+        :class:`~repro.api.jobserver.JobServer` calls this directly and
+        interleaves units from MANY graphs on one scheduler thread via
+        :meth:`_run_unit` — the gap between two units is the preemption
+        point where per-tenant fair scheduling happens.
         """
         units = list(self._plan_dispatches(graph))
         merge_unit = None
@@ -678,6 +737,18 @@ class _PlanExecutor:
                 return _merge_partials(self.engine, graph.merge, partials)
 
             merge_unit.run = run_merge
+        return units, state, merge_unit
+
+    def _schedule(self, graph: TaskGraph) -> Any:
+        """Run a TaskGraph through the shared dependency-driven core.
+
+        One implementation for every backend: plan dispatch units (hook),
+        append the merge as a unit depending on all of them, drain the
+        ready set (hook) with per-unit profiling.  Returns the merged value
+        when the graph has a merge, else the per-task partials in plan
+        order.
+        """
+        units, state, merge_unit = self._build_units(graph)
         if units:
             self._drain(state)
         if state.errors:

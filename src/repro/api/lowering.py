@@ -34,6 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import pickle
 from typing import Any, Callable, Hashable
 
 import jax
@@ -57,6 +59,8 @@ __all__ = [
     "MergeSpec",
     "TaskGraph",
     "lower",
+    "inputs_signature",
+    "plan_fingerprint",
     "stable_task_key",
     "stacked_fold",
 ]
@@ -108,6 +112,68 @@ def stable_task_key(fn: Callable) -> Hashable:
     except (TypeError, ValueError):  # unhashable default/cell, or empty cell
         return fn
     return ("fn", *parts)
+
+
+# ---------------------------------------------------------------------------
+# plan fingerprints (cross-request identity for shared server assets)
+# ---------------------------------------------------------------------------
+
+
+def inputs_signature(arrays: tuple) -> tuple:
+    """The geometry identity of a set of inputs, independent of object ids.
+
+    Two submissions over equal-geometry datasets (same blocking, dtypes and
+    placements) share this signature even when the arrays are distinct
+    objects — e.g. two tenants loading the same dataset, or a journal-
+    rebuilt array after a server restart.  It deliberately excludes buffer
+    *contents* (hashing them would force chunk loads), so it is a
+    cache/tuner sharing key, not a proof of data equality.
+    """
+    return tuple(
+        (
+            tuple(int(r) for r in a.block_rows),
+            tuple(a.row_shape),
+            str(a.dtype),
+            int(a.num_locations),
+            tuple(int(p) for p in a.placements),
+        )
+        for a in arrays
+    )
+
+
+def plan_fingerprint(spec: MapReduceSpec, policy=None) -> str:
+    """A stable hex digest identifying a plan across processes and restarts.
+
+    Combines the plan shape (kind, fn/combine references via
+    :func:`~repro.api.fnref.encode_fn`, extra-arg bytes), the policy and
+    the :func:`inputs_signature`.  The JobServer journals it per
+    submission: equal fingerprints mean "the same work", which is what
+    lets shared assets (profiles, tuner state) accumulate across tenants
+    and a restarted server match journal records to rebuilt plans.
+    Unencodable callables degrade to their qualified name, so the
+    fingerprint always exists — it is an identity, not a replay payload.
+    """
+
+    def fn_part(fn):
+        if fn is None:
+            return None
+        ref = encode_fn(fn)
+        if ref is not None:
+            return ref
+        return getattr(fn, "__qualname__", repr(type(fn)))
+
+    parts = (
+        spec.kind,
+        repr(policy if policy is not None else spec.policy),
+        fn_part(spec.fn),
+        fn_part(spec.combine),
+        tuple(
+            (tuple(np.asarray(e).shape), str(np.asarray(e).dtype))
+            for e in spec.extra_args
+        ),
+        inputs_signature(spec.inputs),
+    )
+    return hashlib.sha256(pickle.dumps(parts)).hexdigest()[:32]
 
 
 # ---------------------------------------------------------------------------

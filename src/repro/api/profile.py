@@ -217,6 +217,33 @@ class ProfileStore:
             overhead = sum(p.dispatch_s for p in profs)
         return overhead / tasks if tasks else 0.0
 
+    def merge(self, other: "ProfileStore") -> None:
+        """Fold another store's aggregates into this one (events included).
+
+        The shared-asset adoption path: when an executor joins a
+        :class:`~repro.api.executors.SharedAssets` pool, its pre-pool
+        private history folds into the shared store so earlier probes
+        keep informing the overhead hint.  ``other`` is left untouched.
+        """
+        with other._lock:
+            events = list(other.events)
+            profs = [dataclasses.replace(p) for p in other.profiles.values()]
+        with self._lock:
+            self.events.extend(events)
+            for p in profs:
+                sig = (_hashable(p.key), p.data_shapes, p.kind)
+                mine = self.profiles.get(sig)
+                if mine is None:
+                    self.profiles[sig] = p
+                else:
+                    mine.calls += p.calls
+                    mine.tasks += p.tasks
+                    mine.blocks += p.blocks
+                    mine.rows += p.rows
+                    mine.nbytes += p.nbytes
+                    mine.dispatch_s += p.dispatch_s
+                    mine.wall_s += p.wall_s
+
     def clear(self) -> None:
         with self._lock:
             self.events.clear()

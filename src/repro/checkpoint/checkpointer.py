@@ -124,6 +124,27 @@ class Checkpointer:
                 steps.append(int(f[len("step_") : -len(_COMMIT_SUFFIX)]))
         return max(steps) if steps else None
 
+    def load_manifest(self, step: int | None = None) -> tuple[dict[str, Any], int]:
+        """Read a committed step's MANIFEST.json without loading leaves.
+
+        The template-free inspection path: a
+        :class:`~repro.api.jobserver.JobServer` snapshots scheduler state
+        as pure-JSON ``extras`` (no array leaves at all), so resume only
+        needs the manifest.  Returns ``(manifest, step)``; raises
+        ``FileNotFoundError`` when no committed step exists — a ``.tmp``
+        directory or a step directory without its COMMITTED marker is never
+        considered (the crash-mid-save contract).
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {self.root}")
+        d = os.path.join(self.root, f"step_{step:09d}")
+        if not os.path.exists(d + _COMMIT_SUFFIX):
+            raise FileNotFoundError(f"uncommitted checkpoint {d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            return json.load(f), step
+
     def restore(
         self,
         template: Any,

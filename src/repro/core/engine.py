@@ -25,6 +25,7 @@ only as a deprecated shim over the plan-based layer.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 import warnings
 from typing import Any, Callable, Hashable, Sequence
@@ -64,6 +65,34 @@ class EngineReport:
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
+
+    def merge(self, other: "EngineReport") -> "EngineReport":
+        """A NEW report aggregating two windows (neither input is mutated).
+
+        The JobServer uses this to fold a resumed job's segments into one
+        per-job report: counters and wall time sum, ``granularity`` keeps
+        the most recent non-zero value (the setting the run ended on), and
+        the mode string joins when the segments disagree.
+        """
+        mode = self.mode if self.mode == other.mode else f"{self.mode}+{other.mode}"
+        out = dataclasses.replace(self, mode=mode)
+        out += other
+        return out
+
+    def to_json(self) -> str:
+        """Serialize for the client channel / journal (see :meth:`from_json`)."""
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "EngineReport":
+        """Rebuild a report serialized by :meth:`to_json`.
+
+        Unknown keys are ignored so a journal written by a newer build (with
+        extra counters) still replays; missing keys take field defaults.
+        """
+        data = json.loads(payload)
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in data.items() if k in names})
 
     def __iadd__(self, other: "EngineReport") -> "EngineReport":
         self.dispatches += other.dispatches

@@ -1,0 +1,141 @@
+"""Checkpointer crash-mid-save semantics — now load-bearing (DESIGN.md §12).
+
+The JobServer snapshots scheduler state through
+:class:`repro.checkpoint.checkpointer.Checkpointer`, so the atomic-commit
+contract graduates from dormant to tier-1:
+
+* a ``.tmp`` directory (crash before the rename) is invisible to restore;
+* a step directory WITHOUT its COMMITTED marker (crash between rename and
+  marker) is equally invisible;
+* the newest COMMITTED step wins, regardless of junk written after it;
+* :meth:`load_manifest` reads extras template-free — the JobServer resume
+  path, which persists no array leaves at all.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(value: float):
+    return {"w": jnp.full((4, 2), value), "b": jnp.full((2,), value)}
+
+
+def _save(ckpt: Checkpointer, step: int, value: float, **extras):
+    ckpt.save(step, _tree(value), extras=dict(extras) or None)
+
+
+class TestCrashMidSave:
+    def test_tmp_dir_without_commit_is_skipped(self, tmp_path):
+        root = str(tmp_path)
+        ckpt = Checkpointer(root)
+        _save(ckpt, 1, 1.0)
+        # simulate a crash mid-save of step 2: the .tmp directory exists
+        # (with a plausible manifest!) but was never renamed or committed
+        tmp = os.path.join(root, "step_000000002.tmp")
+        os.makedirs(tmp)
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump({"step": 2, "extras": {"poison": True}}, f)
+        assert ckpt.latest_step() == 1
+        tree, extras, step = ckpt.restore(_tree(0.0))
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(tree["w"]), np.full((4, 2), 1.0))
+
+    def test_renamed_dir_without_marker_is_skipped(self, tmp_path):
+        # crash in the window between os.rename and the marker write: the
+        # final directory exists and looks complete, but was never committed
+        root = str(tmp_path)
+        ckpt = Checkpointer(root)
+        _save(ckpt, 1, 1.0)
+        _save(ckpt, 2, 2.0)
+        os.remove(os.path.join(root, "step_000000002.COMMITTED"))
+        assert ckpt.latest_step() == 1
+        _, _, step = ckpt.restore(_tree(0.0))
+        assert step == 1
+
+    def test_newest_committed_step_wins(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        for step, value in ((1, 1.0), (5, 5.0), (3, 3.0)):
+            _save(ckpt, step, value)
+        assert ckpt.latest_step() == 5
+        tree, _, step = ckpt.restore(_tree(0.0))
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(tree["b"]), np.full((2,), 5.0))
+
+    def test_restore_explicit_step_requires_its_marker(self, tmp_path):
+        root = str(tmp_path)
+        ckpt = Checkpointer(root)
+        _save(ckpt, 1, 1.0)
+        _save(ckpt, 2, 2.0)
+        os.remove(os.path.join(root, "step_000000002.COMMITTED"))
+        with pytest.raises(AssertionError, match="uncommitted"):
+            ckpt.restore(_tree(0.0), step=2)
+
+    def test_empty_root_has_no_checkpoint(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        assert ckpt.latest_step() is None
+        with pytest.raises(AssertionError, match="no committed checkpoint"):
+            ckpt.restore(_tree(0.0))
+
+
+class TestLoadManifest:
+    def test_reads_extras_without_template(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        _save(ckpt, 7, 1.0, tenant_pass={"alice": 2.5}, jobs=3)
+        manifest, step = ckpt.load_manifest()
+        assert step == 7
+        assert manifest["extras"] == {"tenant_pass": {"alice": 2.5}, "jobs": 3}
+        assert len(manifest["leaves"]) == 2  # w and b, described not loaded
+
+    def test_zero_leaf_snapshot_round_trips(self, tmp_path):
+        # the JobServer shape: pure-JSON extras, empty pytree
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(1, {}, extras={"state": [1, 2, 3]})
+        manifest, step = ckpt.load_manifest()
+        assert (manifest["extras"]["state"], step) == ([1, 2, 3], 1)
+        assert manifest["leaves"] == []
+
+    def test_skips_uncommitted_and_raises_when_none(self, tmp_path):
+        root = str(tmp_path)
+        ckpt = Checkpointer(root)
+        with pytest.raises(FileNotFoundError):
+            ckpt.load_manifest()
+        _save(ckpt, 2, 2.0, marker="good")
+        _save(ckpt, 4, 4.0, marker="uncommitted")
+        os.remove(os.path.join(root, "step_000000004.COMMITTED"))
+        manifest, step = ckpt.load_manifest()
+        assert (step, manifest["extras"]["marker"]) == (2, "good")
+
+
+class TestRetention:
+    def test_keep_last_drops_old_committed_steps(self, tmp_path):
+        root = str(tmp_path)
+        ckpt = Checkpointer(root)
+        for step in (1, 2, 3, 4):
+            _save(ckpt, step, float(step))
+        ckpt.keep_last(2)
+        assert sorted(
+            int(f[len("step_"):-len(".COMMITTED")])
+            for f in os.listdir(root)
+            if f.endswith(".COMMITTED")
+        ) == [3, 4]
+        # the dropped steps' directories are gone too
+        assert not os.path.exists(os.path.join(root, "step_000000001"))
+        _, _, step = ckpt.restore(_tree(0.0))
+        assert step == 4
+
+    def test_keep_last_ignores_uncommitted_junk(self, tmp_path):
+        root = str(tmp_path)
+        ckpt = Checkpointer(root)
+        _save(ckpt, 1, 1.0)
+        os.makedirs(os.path.join(root, "step_000000009.tmp"))
+        ckpt.keep_last(1)  # must not trip over the .tmp dir
+        assert ckpt.latest_step() == 1

@@ -264,6 +264,16 @@ class TestFaultTolerance:
             histogram(points, bins=8, policy=POL, executor=ex)
         assert ei.value.task_key is not None
         assert "histogramdd_block" in ei.value.task_key
+        # the error carries the full attempt history: both deaths, with
+        # worker ids and a per-attempt cause summary
+        assert len(ei.value.attempts) >= 2
+        assert len({a["worker"] for a in ei.value.attempts}) >= 2
+        assert all(a["error"] for a in ei.value.attempts)
+        assert "attempt history" in str(ei.value)
+        if LOG_DIR:
+            # with worker logging on, the error points at the log files
+            assert ei.value.log_paths
+            assert all(p.startswith(LOG_DIR) for p in ei.value.log_paths)
         # the executor survives the failure: fresh workers, clean run
         ref, _ = histogram(points, bins=8, policy=POL)
         h, rep = histogram(points, bins=8, policy=POL, executor=ex)

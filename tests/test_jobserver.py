@@ -1,0 +1,447 @@
+"""JobServer — multi-tenant multiplexing, fairness, durability, resume.
+
+The acceptance contract of DESIGN.md §12:
+
+* two concurrent clients (kmeans + histogram) on ONE shared pool both
+  complete bit-identically vs direct LocalExecutor runs, with interleaved
+  progress events proving neither job starves;
+* admission control is a typed :class:`JobRejected`, not an unbounded
+  queue;
+* killing the server after ≥1 completed unit and restarting resumes from
+  journal + snapshot, recomputing ONLY unfinished units (asserted via the
+  restored/recomputed unit counters) with a bit-identical final result;
+* :class:`EngineReport` serializes over the client channel and merges
+  across resumed segments;
+* the journal tolerates a torn tail (crash mid-append).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    Baseline,
+    Collection,
+    Executor,
+    JobClient,
+    JobFailedError,
+    JobJournal,
+    JobRejected,
+    JobServer,
+    LocalExecutor,
+    SplIter,
+    ThreadedExecutor,
+)
+from repro.core.apps.histogram import histogram, histogramdd_block
+from repro.core.apps.kmeans import kmeans
+from repro.core.blocked import BlockedArray
+from repro.core.engine import EngineReport
+
+POL = SplIter(partitions_per_location=2)
+WATCHDOG_S = 120.0  # every wait in this module is bounded
+
+
+def _points(n=240, d=4, block_rows=30, locations=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, d)).astype(np.float32))
+    return BlockedArray.from_array(x, block_rows, num_locations=locations)
+
+
+def _hist_plan(ba, bins=4, policy=POL):
+    return (
+        Collection.from_blocked(ba)
+        .split(policy)
+        .map_blocks(partial(histogramdd_block, bins=bins, lo=0.0, hi=1.0))
+        .reduce(lambda a, b: a + b)
+        .plan()
+    )
+
+
+def identical(a, b) -> bool:
+    return bool(jnp.all(jnp.asarray(a) == jnp.asarray(b)))
+
+
+# ---------------------------------------------------------------------------
+# satellite: EngineReport channel serialization + segment merging
+# ---------------------------------------------------------------------------
+
+
+class TestEngineReportChannel:
+    def test_json_round_trip_is_exact(self):
+        rep = EngineReport(
+            mode="spliter", dispatches=12, merges=2, traces=3, bytes_moved=640,
+            wall_s=1.25, granularity=4, retunes=1, bytes_loaded=100,
+            bytes_spilled=50, prefetch_hits=7, remote_dispatches=8,
+            ipc_bytes=4096, retries=1,
+        )
+        back = EngineReport.from_json(rep.to_json())
+        assert back == rep
+        assert back is not rep
+
+    def test_from_json_ignores_unknown_keys(self):
+        # forward-compat: a journal written by a newer build still replays
+        payload = EngineReport(mode="x", dispatches=1).to_json()
+        payload = payload.replace("{", '{"counter_from_the_future": 9, ', 1)
+        assert EngineReport.from_json(payload).dispatches == 1
+
+    def test_merge_sums_counters_without_mutating_inputs(self):
+        a = EngineReport(mode="spliter", dispatches=5, traces=2, granularity=2)
+        b = EngineReport(mode="spliter", dispatches=3, traces=0, granularity=4)
+        out = a.merge(b)
+        assert (out.dispatches, out.traces, out.granularity) == (8, 2, 4)
+        assert (a.dispatches, b.dispatches) == (5, 3)  # inputs untouched
+
+    def test_merge_joins_disagreeing_modes(self):
+        out = EngineReport(mode="spliter").merge(EngineReport(mode="rechunk"))
+        assert out.mode == "spliter+rechunk"
+
+
+# ---------------------------------------------------------------------------
+# satellite: the write-ahead journal
+# ---------------------------------------------------------------------------
+
+
+class TestJobJournal:
+    def test_append_replay_round_trip(self, tmp_path):
+        path = str(tmp_path / "j.bin")
+        with JobJournal(path, fsync=False) as j:
+            j.append(("job", "job-0000", {"weight": 2}))
+            j.append(("unit", "job-0000", "u0:abc:0,1", b"\x00payload"))
+        assert list(JobJournal.replay(path)) == [
+            ("job", "job-0000", {"weight": 2}),
+            ("unit", "job-0000", "u0:abc:0,1", b"\x00payload"),
+        ]
+
+    def test_torn_tail_is_dropped_not_fatal(self, tmp_path):
+        path = str(tmp_path / "j.bin")
+        with JobJournal(path, fsync=False) as j:
+            for i in range(3):
+                j.append(("rec", i))
+        size = os.path.getsize(path)
+        with open(path, "ab") as f:  # crash mid-append: half a frame
+            f.write(b"\x00\x00\x01\x00garbage")
+        assert [r[1] for r in JobJournal.replay(path)] == [0, 1, 2]
+        # corrupting the LAST record's payload drops only that record
+        with open(path, "r+b") as f:
+            f.seek(size - 1)
+            f.write(b"\xff")
+        assert [r[1] for r in JobJournal.replay(path)] == [0, 1]
+
+    def test_missing_file_is_empty_history(self, tmp_path):
+        assert list(JobJournal.replay(str(tmp_path / "absent.bin"))) == []
+
+
+# ---------------------------------------------------------------------------
+# multiplexing: concurrent tenants on one pool
+# ---------------------------------------------------------------------------
+
+
+class TestMultiplexing:
+    def test_jobclient_satisfies_executor_protocol(self):
+        server = JobServer()
+        assert isinstance(JobClient(server), Executor)
+        server.close()
+
+    def test_two_clients_bit_identical_and_interleaved(self):
+        """The headline acceptance case: kmeans + histogram, one pool."""
+        kdata = _points(seed=0)
+        hdata = _points(n=400, d=2, block_rows=40, seed=1)
+        ref_k = kmeans(kdata, k=4, iters=3, policy=POL, executor=LocalExecutor())
+        ref_h, _ = histogram(hdata, bins=4, policy=POL, executor=LocalExecutor())
+
+        # submit both BEFORE the scheduler starts so their units provably
+        # coexist in the run queue, then let the stride scheduler drain
+        server = JobServer(autostart=False)
+        alice = JobClient(server, tenant="alice")
+        bob = JobClient(server, tenant="bob")
+        results: dict[str, object] = {}
+
+        def run_kmeans():
+            results["k"] = kmeans(kdata, k=4, iters=3, policy=POL, executor=alice)
+
+        def run_hist():
+            results["h"] = histogram(hdata, bins=4, policy=POL, executor=bob)[0]
+
+        threads = [
+            threading.Thread(target=run_kmeans),
+            threading.Thread(target=run_hist),
+        ]
+        for t in threads:
+            t.start()
+        while len(server.jobs()) < 2:  # both tenants admitted...
+            time.sleep(0.002)
+        server.start()                 # ...before a single unit runs
+        for t in threads:
+            t.join(WATCHDOG_S)
+            assert not t.is_alive()
+        assert identical(results["k"].centers, ref_k.centers)
+        assert identical(results["h"], ref_h)
+
+        # interleaving: within the window where both jobs were open, unit
+        # progress events of the two tenants alternate (neither starves)
+        jobs = server.jobs()
+        a_id, b_id = jobs[0].id, jobs[1].id
+        unit_owners = [
+            e.job_id for e in server.event_log
+            if e.kind in ("running", "merged") and e.total
+        ]
+        first_b = unit_owners.index(b_id)
+        last_a = len(unit_owners) - 1 - unit_owners[::-1].index(a_id)
+        assert first_b < last_a, "tenant B's units never ran between A's"
+        server.close()
+
+    def test_per_job_reports_are_channel_copies(self):
+        server = JobServer()
+        client = JobClient(server, tenant="t")
+        data = _points()
+        res = client.execute(_hist_plan(data))
+        job = server.jobs()[0]
+        assert res.report is not job.report           # crossed by value
+        assert res.report.dispatches == job.report.dispatches
+        assert res.report.dispatches > 0
+        server.close()
+
+    def test_weighted_tenant_gets_more_unit_slots(self):
+        # submit two identical jobs under weights 1 and 3 before starting;
+        # the heavier tenant's units must lead in the event prefix
+        data = _points(n=480, block_rows=30, locations=2)
+        server = JobServer(autostart=False)
+        light = server.submit(_hist_plan(data), tenant="light", weight=1)
+        heavy = server.submit(_hist_plan(data), tenant="heavy", weight=3)
+        server.start()
+        server.wait(light, WATCHDOG_S)
+        server.wait(heavy, WATCHDOG_S)
+        owners = [
+            e.job_id for e in server.event_log
+            if e.kind in ("running", "merged") and e.total
+        ]
+        n = len(owners) // 2
+        heavy_early = sum(1 for j in owners[:n] if j == heavy.id)
+        assert heavy_early > n // 2, "weight-3 tenant did not lead the schedule"
+        server.close()
+
+    def test_scope_and_task_on_the_client(self):
+        server = JobServer()
+        client = JobClient(server, tenant="t")
+        data = _points()
+        double = client.task(lambda x: x * 2.0, key="double")
+        with client.scope("spliter") as report:
+            client.execute(_hist_plan(data))
+            double(jnp.ones((2,)))
+        assert report.dispatches > 1  # job dispatches + the local task
+        server.close()
+
+    def test_shared_assets_reuse_probes_across_tenants(self):
+        # Two tenants, two distinct-but-equal-geometry datasets, same auto
+        # policy: the geometry-keyed shared tuner must be created ONCE, so
+        # tenant B starts from tenant A's probe history.
+        auto = SplIter(partitions_per_location="auto")
+        a = _points(n=256, d=2, block_rows=16, seed=2)
+        b = _points(n=256, d=2, block_rows=16, seed=3)
+        server = JobServer()
+        ca = JobClient(server, tenant="a")
+        cb = JobClient(server, tenant="b")
+        for _ in range(2):
+            histogram(a, bins=4, policy=auto, executor=ca)
+        for _ in range(2):
+            histogram(b, bins=4, policy=auto, executor=cb)
+        assert len(server.assets.tuners) == 1
+        (_, tuner), = server.assets.tuners.values()
+        assert len(tuner.samples) >= 2  # B's runs extended A's schedule
+        server.close()
+
+    def test_pool_backend_is_pluggable(self):
+        # same contract on a ThreadedExecutor pool
+        data = _points()
+        ref, _ = histogram(data, bins=4, policy=POL, executor=LocalExecutor())
+        server = JobServer(executor=ThreadedExecutor())
+        h, _ = histogram(data, bins=4, policy=POL,
+                         executor=JobClient(server, tenant="t"))
+        assert identical(h, ref)
+        server.close()
+        server.executor.close()
+
+    def test_failed_job_raises_typed_error(self):
+        def boom(block):
+            raise ValueError("deliberate block failure")
+
+        plan = (
+            Collection.from_blocked(_points())
+            .split(Baseline())
+            .map_blocks(boom)
+            .reduce(lambda a, b: a)
+            .plan()
+        )
+        server = JobServer()
+        client = JobClient(server, tenant="t")
+        job = client.submit(plan)
+        with pytest.raises(JobFailedError, match="deliberate"):
+            client.wait(job, WATCHDOG_S)
+        assert job.status == "failed"
+        assert server.event_log[-1].kind == "failed"
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_queue_full_is_typed_rejection(self):
+        data = _points()
+        server = JobServer(max_pending=2, autostart=False)  # nothing drains
+        server.submit(_hist_plan(data), tenant="t")
+        server.submit(_hist_plan(data), tenant="t")
+        with pytest.raises(JobRejected) as ei:
+            server.submit(_hist_plan(data), tenant="t")
+        assert ei.value.reason == "queue_full"
+        server.start()
+        for job in server.jobs():
+            server.wait(job, WATCHDOG_S)
+        # drained below the bound: admission reopens
+        server.submit(_hist_plan(data), tenant="t")
+        server.close()
+
+    def test_closed_server_rejects(self):
+        server = JobServer()
+        server.close()
+        with pytest.raises(JobRejected) as ei:
+            server.submit(_hist_plan(_points()))
+        assert ei.value.reason == "closed"
+
+    def test_lifecycle_event_order(self):
+        server = JobServer()
+        job = server.submit(_hist_plan(_points()), tenant="t")
+        server.wait(job, WATCHDOG_S)
+        kinds = [e.kind for e in job.events]
+        assert kinds[0] == "queued"
+        assert kinds[1] == "preparing"
+        assert kinds[-2] == "merged"
+        assert kinds[-1] == "done"
+        assert all(k == "running" for k in kinds[2:-2])
+        # running events carry monotone k/n progress
+        progress = [e.completed for e in job.events if e.total]
+        assert progress == sorted(progress)
+        assert job.events[-1].completed == job.total_units
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# durability: kill + restart resumes from journal + snapshot
+# ---------------------------------------------------------------------------
+
+
+class TestDurability:
+    def test_kill_and_resume_recomputes_only_unfinished_units(self, tmp_path):
+        data = _points(n=800, d=2, block_rows=50, locations=4, seed=5)
+        ref, _ = histogram(data, bins=4, policy=POL, executor=LocalExecutor())
+        plan = _hist_plan(data)
+
+        server = JobServer(root=str(tmp_path), snapshot_every=2, autostart=False)
+        job = server.submit(plan, tenant="alice")
+        server.start()
+        deadline = time.monotonic() + WATCHDOG_S
+        while job.recomputed_units < 2:  # ≥1 completed unit journaled
+            assert time.monotonic() < deadline, "no unit completed in time"
+            assert job.status != "failed", job.error
+            time.sleep(0.005)
+        server.kill()  # crash: no terminal records, journal left as-is
+        done_at_kill = job.recomputed_units
+        assert job.status in ("preparing", "running")
+        assert done_at_kill < job.total_units
+
+        # restart in a fresh server (fresh executor, fresh engine)
+        server2 = JobServer(root=str(tmp_path))
+        assert server2.resumed_jobs == 1
+        job2 = server2.jobs()[0]
+        res = server2.wait(job2, WATCHDOG_S)
+        # only unfinished units recomputed; journaled ones restored
+        assert job2.restored_units >= done_at_kill
+        assert job2.restored_units + job2.recomputed_units == job2.total_units
+        assert job2.recomputed_units < job2.total_units
+        assert identical(res.value, ref)
+        assert any(e.kind == "resumed" for e in job2.events)
+        server2.close()
+
+    def test_resumed_report_merges_segments(self, tmp_path):
+        # snapshot_every=1 ⇒ the pre-kill segment is always snapshotted, so
+        # the final report must aggregate both segments' dispatches
+        data = _points(n=400, d=2, block_rows=50, locations=2, seed=6)
+        server = JobServer(root=str(tmp_path), snapshot_every=1, autostart=False)
+        job = server.submit(_hist_plan(data), tenant="t")
+        server.start()
+        deadline = time.monotonic() + WATCHDOG_S
+        while job.recomputed_units < 2:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        server.kill()
+
+        server2 = JobServer(root=str(tmp_path))
+        job2 = server2.jobs()[0]
+        res = server2.wait(job2, WATCHDOG_S)
+        # dispatches: every task unit + the merge, across both segments
+        assert res.report.dispatches == job2.total_units
+        server2.close()
+
+    def test_completed_job_survives_restart_without_rerun(self, tmp_path):
+        data = _points()
+        server = JobServer(root=str(tmp_path))
+        job = server.submit(_hist_plan(data), tenant="t")
+        ref = server.wait(job, WATCHDOG_S)
+        server.close()
+
+        server2 = JobServer(root=str(tmp_path))
+        assert server2.resumed_jobs == 0
+        job2 = server2.jobs()[0]
+        assert job2.status == "done"
+        res = server2.wait(job2, WATCHDOG_S)
+        assert identical(res.value, ref.value)
+        assert job2.recomputed_units == 0
+        server2.close()
+
+    def test_non_durable_job_fails_cleanly_at_restart(self, tmp_path):
+        # a closure over un-picklable state is accepted and runs, but
+        # cannot be replayed; after a kill it must fail with a clear error
+        lock = threading.Lock()  # unpicklable cell value
+
+        def opaque(block):
+            with lock:
+                return jnp.sum(block, 0)
+
+        plan = (
+            Collection.from_blocked(_points())
+            .split(POL)
+            .map_blocks(opaque)
+            .reduce(lambda a, b: a + b)
+            .plan()
+        )
+        server = JobServer(root=str(tmp_path), autostart=False)
+        job = server.submit(plan, tenant="t")
+        assert not job.durable
+        server.kill()
+
+        server2 = JobServer(root=str(tmp_path))
+        job2 = server2.jobs()[0]
+        with pytest.raises(JobFailedError, match="not durable"):
+            server2.wait(job2, WATCHDOG_S)
+        server2.close()
+
+    def test_snapshots_use_committed_marker_layout(self, tmp_path):
+        data = _points(n=400, d=2, block_rows=25, locations=2)
+        server = JobServer(root=str(tmp_path), snapshot_every=2)
+        job = server.submit(_hist_plan(data), tenant="t")
+        server.wait(job, WATCHDOG_S)
+        snaps = os.path.join(str(tmp_path), "snapshots")
+        committed = [f for f in os.listdir(snaps) if f.endswith(".COMMITTED")]
+        assert committed, "no committed scheduler snapshot written"
+        manifest, _ = server.checkpointer.load_manifest()
+        assert "tenant_pass" in manifest["extras"]
+        server.close()
