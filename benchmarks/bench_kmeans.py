@@ -75,6 +75,7 @@ def _aggregate_row(pol, executor_name: str, warm, res) -> dict:
         "prefetch_hits": sum(r.prefetch_hits for r in res.reports),
         "remote_dispatches": sum(r.remote_dispatches for r in res.reports),
         "ipc_bytes": sum(r.ipc_bytes for r in res.reports),
+        "shm_bytes": sum(r.shm_bytes for r in res.reports),
         "retries": sum(r.retries for r in res.reports),
         "jobs": 0,
         "resumes": 0,

@@ -95,6 +95,7 @@ def smoke() -> list[dict]:
             "bytes_moved": 0,
             "prep_bytes": 0,
             "remote_dispatches": 0,
+            "shm_bytes": 0,
             "retries": 0,
         })
     return rows

@@ -142,6 +142,7 @@ def report_row(
         "prefetch_hits": report.prefetch_hits,
         "remote_dispatches": report.remote_dispatches,
         "ipc_bytes": report.ipc_bytes,
+        "shm_bytes": report.shm_bytes,
         "retries": report.retries,
     }
 

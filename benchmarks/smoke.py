@@ -42,11 +42,15 @@ import time
 #: in either the per-iteration or the preparation path are caught.
 #: ``remote_dispatches`` and ``retries`` pin the cluster rows: how much of
 #: each plan crosses the IPC boundary is structural, and a non-zero retry
-#: count in a no-fault smoke run is a bug.  ``ipc_bytes`` is excluded —
-#: serialized sizes may drift across pickle/numpy versions.  ``jobs`` and
-#: ``resumes`` pin the JobServer rows: how many submissions one app run
-#: multiplexes is structural, and a non-zero resume count in a no-kill
-#: smoke run is a bug.
+#: count in a no-fault smoke run is a bug.  ``shm_bytes`` pins the cluster
+#: data plane: exact block bytes copied into shared-memory segments (raw
+#: array sizes, not serialized forms — deterministic), so a regression
+#: that silently re-routes payloads back onto the pipes (shm_bytes → 0)
+#: or re-copies cached exports (shm_bytes inflated) fails the diff.
+#: ``ipc_bytes`` is excluded — serialized sizes may drift across
+#: pickle/numpy versions.  ``jobs`` and ``resumes`` pin the JobServer
+#: rows: how many submissions one app run multiplexes is structural, and
+#: a non-zero resume count in a no-kill smoke run is a bug.
 STRUCTURAL = (
     "dispatches",
     "merges",
@@ -54,6 +58,7 @@ STRUCTURAL = (
     "bytes_moved",
     "prep_bytes",
     "remote_dispatches",
+    "shm_bytes",
     "retries",
     "jobs",
     "resumes",

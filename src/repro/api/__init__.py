@@ -93,6 +93,7 @@ from repro.api.lowering import (
 )
 from repro.api.mesh_executor import MeshExecutor
 from repro.api.plan import ExecutionPlan, PlanError
+from repro.api.shm import ShmAttachments, ShmBlockRef, ShmStore, shm_available
 from repro.api.policy import Baseline, ExecutionPolicy, Rechunk, SplIter, as_policy
 from repro.api.profile import ProfileEvent, ProfileStore, TaskProfile
 from repro.api.stream_executor import StreamExecutor
@@ -129,6 +130,10 @@ __all__ = [
     "DiskStore",
     "StoreStats",
     "resolve_chunk",
+    "ShmStore",
+    "ShmBlockRef",
+    "ShmAttachments",
+    "shm_available",
     "PartitionView",
     "PrepareStats",
     "Autotuner",

@@ -59,6 +59,8 @@ from typing import Iterable, Protocol, runtime_checkable
 import jax
 import numpy as np
 
+from repro.api.shm import ShmAttachments, ShmBlockRef
+
 __all__ = [
     "ChunkRef",
     "ChunkHandle",
@@ -167,37 +169,59 @@ class ChunkHandle:
 
 @dataclasses.dataclass(frozen=True)
 class StoreManifest:
-    """The handoff half of store attach: every chunk's spill location.
+    """The handoff half of store attach: where every chunk's bytes live.
 
-    Produced by :meth:`DiskStore.manifest` (which force-spills chunks that
-    have never been evicted, so every entry has a readable file) and
-    consumed worker-side by :class:`AttachedStore`.  Picklable by
-    construction: uid, directory and per-chunk ``(path, shape, dtype)``.
+    Produced by :meth:`DiskStore.manifest` and consumed worker-side by
+    :class:`AttachedStore`.  Picklable by construction; each entry is a
+    tagged tuple naming its transport:
+
+    ``("shm", ShmBlockRef)``
+        The chunk was resident driver-side and exported into a shared
+        memory segment — workers resolve it zero-copy.  The preferred
+        path: no disk write, no pipe bytes.
+    ``("file", path, shape, dtype_str)``
+        The chunk has a spill file (it was evicted, or the shm budget was
+        exhausted) — workers memory-map the ``.npy``.
+
+    Manifests of a grown store are **incremental**: ``manifest(known=...)``
+    returns only the chunks the caller has not seen, and
+    :meth:`AttachedStore.merge` folds the delta into an existing attach.
     """
 
     uid: str
     spill_dir: str
-    chunks: dict  # chunk_id -> (path, shape, dtype_str)
+    chunks: dict  # chunk_id -> ("shm", ShmBlockRef) | ("file", path, shape, dtype_str)
 
 
 class AttachedStore:
     """A worker-side, read-only view of another process's DiskStore.
 
-    Resolves :class:`ChunkHandle`\\ s by memory-mapped reads of the origin
-    store's spill files — the per-worker store of the cluster backend.
-    There is no residency budget: a worker holds at most its in-flight
-    task's operands, and the buffers are released when the task replies.
-    ``stats.bytes_loaded`` bills the reads so the parent can account
-    worker I/O in its :class:`~repro.core.engine.EngineReport`.
+    Resolves :class:`ChunkHandle`\\ s against the manifest's tagged
+    entries: ``shm`` chunks as zero-copy views of the origin's shared
+    memory segments (attached once per segment, cached), ``file`` chunks
+    by memory-mapped reads of the spill files.  There is no residency
+    budget: a worker holds at most its in-flight task's operands, and the
+    buffers are released when the task replies.  ``stats.bytes_loaded``
+    bills only the *disk* reads — shm resolution moves no bytes the
+    parent has not already paid for (billed once as ``shm_bytes``).
     """
 
     def __init__(self, manifest: StoreManifest):
         self.manifest = manifest
         self.stats = StoreStats()
+        self._shm = ShmAttachments()
 
     @property
     def uid(self) -> str:
         return self.manifest.uid
+
+    def merge(self, delta: StoreManifest) -> None:
+        """Fold a grown store's incremental manifest into this attach."""
+        if delta.uid != self.uid:
+            raise ChunkStoreError(
+                f"manifest for store {delta.uid} merged into {self.uid}"
+            )
+        self.manifest.chunks.update(delta.chunks)
 
     def get(self, chunk_id: int):
         import jax.numpy as jnp
@@ -207,7 +231,9 @@ class AttachedStore:
             raise ChunkStoreError(
                 f"chunk {chunk_id} not in manifest of store {self.uid}"
             )
-        path, _shape, _dtype = entry
+        if entry[0] == "shm":
+            return jnp.asarray(np.asarray(self._shm.view(entry[1])))
+        _tag, path, _shape, _dtype = entry
         mm = np.load(path, mmap_mode="r")
         arr = jnp.asarray(np.asarray(mm))  # copy out of the mmap, then free it
         self.stats.loads += 1
@@ -220,6 +246,9 @@ class AttachedStore:
                 f"handle for store {handle.store_uid} resolved against {self.uid}"
             )
         return self.get(handle.chunk_id)
+
+    def close(self) -> None:
+        self._shm.close()
 
 
 def chunk_stores(arrays: Iterable) -> list["ChunkStore"]:
@@ -391,6 +420,7 @@ class DiskStore:
         self._pending_spills: dict[int, object] = {}
         self._pending_bytes = 0
         self._spilling: set[int] = set()  # cids with a write in flight
+        self._manifested: set[int] = set()  # cids covered by some manifest()
         self._next_id = 0
         self._lock = threading.RLock()
         self._closed = False
@@ -545,15 +575,16 @@ class DiskStore:
         self._flush_spills()
 
     def handle(self, ref: ChunkRef) -> ChunkHandle | None:
-        """Picklable :class:`ChunkHandle` for ``ref``, if it has a spill file.
+        """Picklable :class:`ChunkHandle` for ``ref``, if workers can read it.
 
-        Returns None for a chunk that was never spilled — callers (the
-        cluster payload builder) then ship the bytes inline instead.  Run
-        :meth:`manifest` first to guarantee every chunk is handle-able.
+        A chunk is handle-able once it has a spill file OR has appeared in
+        a :meth:`manifest` (whose shm entries workers resolve without any
+        file).  Returns None otherwise — callers (the cluster payload
+        builder) then ship the bytes inline/exported instead.
         """
         with self._lock:
             meta = self._meta.get(ref.chunk_id)
-            if meta is None or meta[2] is None:
+            if meta is None or (meta[2] is None and ref.chunk_id not in self._manifested):
                 return None
         return ChunkHandle(
             store_uid=self.uid,
@@ -562,17 +593,30 @@ class DiskStore:
             dtype_str=ref.dtype.str,
         )
 
-    def manifest(self) -> StoreManifest:
-        """Handoff projection for worker attach: spill-complete the store.
+    def manifest(self, *, export=None, known: Iterable[int] = ()) -> StoreManifest:
+        """Handoff projection for worker attach — shm-first, incremental.
 
-        Chunks that were never evicted have no spill file; the manifest
-        pass writes them (``np.save``, outside the lock) WITHOUT dropping
-        their residency, so the parent keeps its warm cache while workers
-        gain a readable copy of every chunk.  The writes are billed as
-        spills — they are real spill I/O, paid once (a chunk with a
-        recorded path is never re-written).
+        Args:
+          export: ``callable(chunk_id, array) -> ShmBlockRef | None`` — the
+            executor's shared-memory exporter.  Chunks that are resident
+            (or eviction-pending) hand off as ``("shm", ref)`` entries
+            with **no disk write**; only when the exporter declines (shm
+            budget exhausted, or ``export is None``) does the chunk
+            force-spill to a ``("file", ...)`` entry.  Chunks that already
+            have a spill file always reuse it.
+          known: chunk ids the caller has already received — the returned
+            manifest contains only the REST, so a store that grew
+            mid-session yields a cheap delta instead of re-shipping (and
+            re-exporting) the world.
+
+        Billing: only a genuinely new spill *write* counts as
+        ``stats.spills``/``bytes_spilled``.  Shm handoffs and chunks whose
+        file already exists bill nothing — a second manifest of an
+        unchanged store is free.
         """
         self._flush_spills()  # settle any deferred eviction writes first
+        known = set(known)
+        chunks: dict = {}
         while True:
             with self._lock:
                 if self._closed:
@@ -581,31 +625,49 @@ class DiskStore:
                     (
                         c
                         for c, (_s, _d, p) in self._meta.items()
-                        if p is None and c not in self._spilling
+                        if p is None
+                        and c not in known
+                        and c not in chunks
+                        and c not in self._spilling
                     ),
                     None,
                 )
                 if cid is None:
-                    chunks = {
-                        c: (p, s, np.dtype(d).str)
-                        for c, (s, d, p) in self._meta.items()
-                        if p is not None
-                    }
+                    for c, (s, d, p) in self._meta.items():
+                        if p is not None and c not in known and c not in chunks:
+                            chunks[c] = ("file", p, s, np.dtype(d).str)
+                    self._manifested.update(chunks)
                     return StoreManifest(uid=self.uid, spill_dir=self._dir, chunks=chunks)
                 arr = self._resident.get(cid)
                 if arr is None:
                     arr = self._pending_spills.get(cid)
-                self._spilling.add(cid)
                 shape, dtype, _ = self._meta[cid]
+            # Shm-first: the resident buffer hands off as a segment
+            # descriptor — the residency cache stays warm, nothing is
+            # written, nothing is billed.
+            if export is not None:
+                ref = export(cid, np.asarray(arr))
+                if ref is not None:
+                    chunks[cid] = ("shm", ref)
+                    continue
+            # Fallback: force-spill (exporter declined / shm disabled).
+            # The write happens outside the lock; _spilling claims the
+            # chunk against a concurrent flusher.
+            with self._lock:
+                if cid in self._spilling:
+                    continue  # a flusher claimed it meanwhile: re-scan
+                self._spilling.add(cid)
             path = self._path(cid)
             np.save(path, np.asarray(arr))
             with self._lock:
                 self._spilling.discard(cid)
                 if self._closed or cid not in self._meta:
                     raise ChunkStoreError("DiskStore closed during manifest()")
+                _s, _d, existing = self._meta[cid]
                 self._meta[cid] = (shape, dtype, path)
-                self.stats.spills += 1
-                self.stats.bytes_spilled += self._nbytes(cid)
+                if existing is None:  # bill only a genuinely NEW spill write
+                    self.stats.spills += 1
+                    self.stats.bytes_spilled += self._nbytes(cid)
                 if cid in self._pending_spills:
                     del self._pending_spills[cid]
                     self._pending_bytes -= self._nbytes(cid)
@@ -622,6 +684,7 @@ class DiskStore:
             self._pins.clear()
             self._pending_spills.clear()
             self._pending_bytes = 0
+            self._manifested.clear()
             self.stats.resident_bytes = 0
         if self._finalizer is not None:
             self._finalizer()  # rmtree now, exactly once

@@ -15,22 +15,36 @@ Locality (the paper's placement story, now with real transport costs):
 * units route to the worker that owns their partition's location, reusing
   the ``PlacedGroup`` placement metadata the SplIter prepare derived;
 * chunk-backed plans hand off their :class:`~repro.api.chunkstore.DiskStore`
-  via :meth:`~repro.api.chunkstore.DiskStore.manifest` and workers resolve
+  via shm-first, *incremental* manifests
+  (:meth:`~repro.api.chunkstore.DiskStore.manifest`): resident chunks
+  export as shared-memory descriptors, already-spilled chunks reuse their
+  files, and a grown store ships only the delta — workers resolve
   :class:`~repro.api.chunkstore.ChunkHandle`\\ s against an attached
-  per-worker store — block bytes are read from the spill files
-  worker-side and never transit the control channel;
+  per-worker store, so block bytes never transit the control channel;
 * ``EngineReport`` bills the boundary: ``ipc_bytes`` (exact serialized
-  bytes both directions), ``remote_dispatches`` and ``retries``.
+  control-channel bytes both directions), ``shm_bytes`` (block bytes
+  copied into shared memory, once per block), ``remote_dispatches`` and
+  ``retries``.
 
-Flow control: the parent keeps at most ONE un-replied command in flight
-per worker.  The drain sweep only sends a unit to a worker whose window
-is empty (busy targets are deferred past the next reply pump, so one
-busy worker never head-of-line blocks the idle ones), and driver RPCs
-pump until their target's window clears.  Both directions are blocking
-writes over ~64KB OS pipes, so without the window a worker blocked
-writing a large result while the parent blocks writing it more commands
-would deadlock; with it, every send targets a worker that is parked in
-``recv``, and the parent always comes back to draining reply pipes.
+The data plane (:mod:`repro.api.shm`): operands and large worker partials
+cross as ``ShmBlockRef`` descriptors over POSIX shared memory instead of
+pickled bytes.  The driver owns segment lifecycle — its arena
+(:class:`~repro.api.shm.ShmStore`) caches exports so iterative plans copy
+each block once, reply segments are unlinked the moment a partial is
+consumed (or discarded as stale), a dead worker's undelivered reply
+segments are swept by name prefix, and :meth:`close` unlinks everything.
+When shared memory is unavailable (or ``shm=False``), every payload falls
+back to the PR 5 pickle/spill-file paths unchanged.
+
+Flow control: the parent keeps at most ONE un-replied *send* in flight
+per worker.  The drain sweep stages ready units per target and flushes
+each worker's staging queue as a single batched ``send_bytes`` (small
+command descriptors amortize per-message pipe overhead); a batch is only
+flushed to a worker with an empty window, so every send still targets a
+worker that is parked in ``recv`` — the ~64KB-pipe deadlock guard from
+the PR 5 hardening.  Busy targets are deferred past the next reply pump,
+and driver RPCs flush pending batches, then pump until their target's
+window clears.
 
 Fault tolerance (the Chunks-and-Tasks deterministic-replay model):
 
@@ -66,7 +80,9 @@ from typing import Any, Callable, Hashable
 import jax
 import numpy as np
 
-from repro.api.chunkstore import ChunkHandle, chunk_stores
+from repro.api import shm
+from repro.api.chunkstore import ChunkHandle, StoreManifest, chunk_stores, resolve_chunk
+from repro.api.shm import ShmBlockRef, ShmStore, shm_available
 from repro.api.executors import (
     _LIVE_POOLS,
     _PlanExecutor,
@@ -174,12 +190,17 @@ class _WorkerHandle:
         heartbeat_s: float,
         fault: FaultPlan | None,
         log_dir: str | None,
+        result_prefix: str | None = None,
+        result_min_bytes: int = 1024,
     ):
         self.id = wid
         self.location = location
         self.log_path = (
             os.path.join(log_dir, f"worker-{wid}.log") if log_dir else None
         )
+        # Name prefix for the worker's reply segments; the parent sweeps
+        # it when the worker dies with undelivered replies.
+        self.result_prefix = result_prefix
         cmd_recv, cmd_send = ctx.Pipe(duplex=False)
         rep_recv, rep_send = ctx.Pipe(duplex=False)
         self._conn = cmd_send
@@ -195,6 +216,8 @@ class _WorkerHandle:
                 kill_on_retry=bool(fault and wid in fault.kill_on_retry),
                 mute_after=fault.mute_after_for(wid) if fault else None,
                 log_path=self.log_path,
+                result_prefix=result_prefix,
+                result_min_bytes=result_min_bytes,
             ),
             name=f"repro-cluster-w{wid}",
             daemon=True,
@@ -244,6 +267,9 @@ class _DrainContext:
         self.replays: collections.deque[_Unit] = collections.deque()
         self.inflight: dict[int, _Unit] = {}
         self.meta: dict[int, tuple] = {}  # unit index -> (t0_send, send_seconds)
+        # unit index -> shm refs this dispatch exported: segment pins that
+        # must drop on reply, requeue, or drain teardown.
+        self.shm_pins: dict[int, tuple] = {}
         # unit index -> [{"worker", "error", "log"}, ...]: one entry per
         # FAILED attempt, consumed by ClusterFailedError on poison.
         self.history: dict[int, list[dict]] = {}
@@ -284,10 +310,23 @@ class ClusterExecutor(_PlanExecutor):
         uploads the logs as artifacts on failure.
       poll_s: supervisor tick — reply-queue wait quantum between liveness
         checks.
+      shm: use the shared-memory data plane (:mod:`repro.api.shm`) for
+        operand and partial transport.  ``None`` (default) enables it
+        when the host supports POSIX shared memory, honoring the
+        ``REPRO_CLUSTER_SHM=0`` kill switch; ``False`` forces the PR 5
+        pickle/spill-file paths (useful for A/B-measuring ``ipc_bytes``).
+      shm_min_bytes: payloads below this ship inline — a descriptor
+        round-trip is not worth it for tiny arrays.
+      shm_segment_bytes: arena segment size of the driver's
+        :class:`~repro.api.shm.ShmStore`.
+      shm_budget_bytes: cap on live segment bytes (default 256 MiB, or
+        the ``REPRO_SHM_BUDGET`` environment variable).  Exhaustion falls
+        back to inline/spill-file transport, never to an error.
 
     Workers spawn lazily (first dispatch needing their location) and are
-    reused across ``execute`` calls; :meth:`close` is idempotent and also
-    runs from the shared atexit sweep.
+    reused across ``execute`` calls; :meth:`close` is idempotent (it
+    unlinks every shared-memory segment) and also runs from the shared
+    atexit sweep.
     """
 
     def __init__(
@@ -300,6 +339,10 @@ class ClusterExecutor(_PlanExecutor):
         fault_plan: FaultPlan | None = None,
         log_dir: str | None = None,
         poll_s: float = 0.02,
+        shm: bool | None = None,
+        shm_min_bytes: int = 1024,
+        shm_segment_bytes: int = 4 << 20,
+        shm_budget_bytes: int | None = None,
     ):
         super().__init__(engine)
         self.max_retries = max_retries
@@ -311,6 +354,22 @@ class ClusterExecutor(_PlanExecutor):
         # the argument through app code.
         self.log_dir = log_dir or os.environ.get("REPRO_CLUSTER_LOG_DIR") or None
         self.poll_s = poll_s
+        if shm is None:
+            shm = (
+                os.environ.get("REPRO_CLUSTER_SHM", "1") != "0" and shm_available()
+            )
+        if shm_budget_bytes is None:
+            shm_budget_bytes = int(os.environ.get("REPRO_SHM_BUDGET", 256 << 20))
+        self._shm = (
+            ShmStore(
+                budget_bytes=shm_budget_bytes,
+                segment_bytes=shm_segment_bytes,
+                min_bytes=shm_min_bytes,
+            )
+            if shm
+            else None
+        )
+        self.shm_min_bytes = shm_min_bytes
         self._ctx = multiprocessing.get_context("spawn")
         self._workers: dict[int, _WorkerHandle] = {}
         self._by_location: dict[int, int] = {}
@@ -319,11 +378,16 @@ class ClusterExecutor(_PlanExecutor):
         self._epoch = 0
         self._last_hb: dict[int, float] = {}
         self._manifests: dict[str, Any] = {}
-        self._attached: set[tuple[int, str]] = set()
+        # (wid, uid) -> chunk ids already shipped: attach messages carry
+        # only the manifest delta a worker has not seen.
+        self._attached: dict[tuple[int, str], set] = {}
         self._call_seq = itertools.count()
         self._call_results: dict[int, tuple] = {}
         self._pending_calls: set[int] = set()  # issued, not yet resolved
         self._outstanding: dict[int, int] = {}  # wid -> un-replied commands
+        # wid -> staged (attach_msgs, unit_msg, unit) entries, flushed as
+        # one batched send per sweep (see _flush_outbox).
+        self._outbox: dict[int, list] = {}
         self._active: _DrainContext | None = None
         if log_dir:
             os.makedirs(log_dir, exist_ok=True)
@@ -342,6 +406,7 @@ class ClusterExecutor(_PlanExecutor):
             name=type(self).__name__,
             remote=True,
             out_of_core=True,
+            exporter=self._export_block if self._shm is not None else None,
         )
 
     # -- pool management ------------------------------------------------------
@@ -358,6 +423,12 @@ class ClusterExecutor(_PlanExecutor):
             heartbeat_s=self.heartbeat_s,
             fault=self.fault_plan,
             log_dir=self.log_dir,
+            # "q" separates wid from the reply sequence number, so sweeping
+            # worker 5's prefix can never match worker 55's segments.
+            result_prefix=(
+                f"{self._shm.prefix}w{wid}q" if self._shm is not None else None
+            ),
+            result_min_bytes=self.shm_min_bytes,
         )
         self._workers[wid] = handle
         self._by_location[location] = wid
@@ -400,7 +471,7 @@ class ClusterExecutor(_PlanExecutor):
             handle = self._workers[wid]
             if not handle.alive():
                 continue
-            if self._outstanding.get(wid, 0) == 0:
+            if self._outstanding.get(wid, 0) == 0 and wid not in self._outbox:
                 return handle
             fallback = fallback or handle
         return fallback
@@ -408,18 +479,23 @@ class ClusterExecutor(_PlanExecutor):
     # -- the Executor entry points --------------------------------------------
 
     def execute(self, plan):
-        # Hand off chunk stores before scheduling: manifest() force-spills
-        # so every chunk is worker-readable, and a grown manifest
-        # invalidates earlier attaches.
+        # Hand off chunk stores before scheduling.  manifest() is shm-first
+        # and incremental: resident chunks export as segment descriptors
+        # (no disk write), already-spilled chunks reuse their files, and a
+        # grown store contributes only the chunks this driver has not seen
+        # — workers then receive exactly the per-worker delta through
+        # _stage_attaches, so re-attach after growth is O(new chunks).
         for store in chunk_stores(plan.spec.inputs):
             manifest = getattr(store, "manifest", None)
             if manifest is None:
                 continue  # in-memory store: payloads ship inline
-            m = manifest()
-            old = self._manifests.get(m.uid)
-            if old is None or len(old.chunks) != len(m.chunks):
-                self._attached -= {p for p in self._attached if p[1] == m.uid}
-            self._manifests[m.uid] = m
+            full = self._manifests.get(store.uid)
+            known = frozenset(full.chunks) if full is not None else frozenset()
+            delta = manifest(export=self._manifest_export(store), known=known)
+            if full is None:
+                self._manifests[delta.uid] = delta
+            else:
+                full.chunks.update(delta.chunks)
         return super().execute(plan)
 
     def task(self, fn: Callable, *, key: Hashable = None) -> Callable:
@@ -442,6 +518,44 @@ class ClusterExecutor(_PlanExecutor):
 
         return dispatch
 
+    # -- the shared-memory data plane -----------------------------------------
+
+    def _export_block(self, block):
+        """``Capabilities.exporter`` hook: one operand block as a descriptor.
+
+        Cached by object identity inside the arena, so an iterative plan
+        re-dispatching the same blocks copies each one exactly once;
+        ``shm_bytes`` bills only genuine copies.  ``None`` (undersized
+        block, budget exhausted) sends the caller down the inline path.
+        """
+        ref, wrote = self._shm.export(
+            block, materialize=lambda: np.asarray(resolve_chunk(block))
+        )
+        if wrote:
+            self.engine.report.shm_bytes += wrote
+        return ref
+
+    def _manifest_export(self, store):
+        """Chunk exporter handed to ``DiskStore.manifest`` (None: shm off).
+
+        Manifest entries outlive any single dispatch, so their segments
+        are locked against eviction; no size floor — a chunk must be
+        worker-readable either way, and a segment at any size beats a
+        spill-file write.
+        """
+        if self._shm is None:
+            return None
+
+        def export(cid, arr):
+            ref, wrote = self._shm.export(
+                arr, key=("chunk", store.uid, cid), min_bytes=0, lock=True
+            )
+            if wrote:
+                self.engine.report.shm_bytes += wrote
+            return ref
+
+        return export
+
     # -- remote dispatch ------------------------------------------------------
 
     def _remotable(self, unit: _Unit) -> bool:
@@ -452,23 +566,37 @@ class ClusterExecutor(_PlanExecutor):
             and unit.tasks[0].remote_operands is not None
         )
 
-    def _ensure_attached(self, worker: _WorkerHandle, spec) -> None:
+    def _stage_attaches(self, worker: _WorkerHandle, spec) -> list:
+        """Attach messages ``worker`` needs before running ``spec``.
+
+        Incremental: ``self._attached`` records which chunk ids each
+        worker has already been sent per store, so a store that grew
+        mid-session ships only its new entries (the worker's
+        ``AttachedStore.merge`` folds them in).  Returned messages are
+        staged ahead of the unit in the same batch, preserving order.
+        """
         uids = {
             b.store_uid
             for blocks in spec.data
             for b in blocks
             if isinstance(b, ChunkHandle)
         }
+        msgs = []
         for uid in sorted(uids):
-            if (worker.id, uid) in self._attached:
-                continue
             manifest = self._manifests.get(uid)
             if manifest is None:
                 raise ClusterFailedError(
                     f"no manifest for chunk store {uid}; inputs changed mid-run?"
                 )
-            self.engine.report.ipc_bytes += worker.send(("attach", manifest))
-            self._attached.add((worker.id, uid))
+            seen = self._attached.get((worker.id, uid), frozenset())
+            delta = {c: e for c, e in manifest.chunks.items() if c not in seen}
+            if not delta:
+                continue
+            msgs.append(
+                ("attach", StoreManifest(uid, manifest.spill_dir, delta))
+            )
+            self._attached[(worker.id, uid)] = set(manifest.chunks)
+        return msgs
 
     def _await_window(self, worker: _WorkerHandle, ctx: _DrainContext | None) -> bool:
         """Pump replies until ``worker`` has no un-replied command in flight.
@@ -491,13 +619,18 @@ class ClusterExecutor(_PlanExecutor):
     def _dispatch_remote(
         self, unit: _Unit, ctx: _DrainContext, *, prefer_survivor: bool = False
     ) -> bool:
-        """Try to ship one unit to its location's worker (or any survivor).
+        """Stage one unit for its location's worker (or any survivor).
+
+        Staging, not sending: the unit's spec is built (operands exported
+        to shared memory here), its chunks pinned and ownership assigned,
+        and the message queued in ``self._outbox`` — ``_flush_outbox``
+        ships each worker's queue as ONE batched send per sweep.
 
         Returns False — *without* blocking — when the target worker still
-        has a command in flight: the drain sweep defers the unit and
-        retries after the next pump, so a busy worker never head-of-line
-        blocks dispatch to idle ones, and a send never queues up behind a
-        worker that isn't parked in ``recv`` (the pipe-deadlock guard).
+        has a command window in flight from an earlier flush: the drain
+        sweep defers the unit and retries after the next pump, so a busy
+        worker never head-of-line blocks dispatch to idle ones.  Units
+        staged to the same idle worker within one sweep become one batch.
 
         ``prefer_survivor`` is the replay path: a requeued unit goes to a
         worker that is already alive (locality traded for liveness — the
@@ -511,40 +644,65 @@ class ClusterExecutor(_PlanExecutor):
         if ctx.state.errors:  # a death inside _worker_for poisoned the run
             return True
         if self._outstanding.get(worker.id, 0) > 0:
-            return False  # window full: defer rather than risk a blocking send
-        spec = task.spec()  # payload errors propagate: nothing pinned/assigned yet
+            return False  # window full: defer rather than queue behind it
+        # Payload errors (unpicklable operand, missing manifest) propagate
+        # from these two with nothing pinned or assigned yet.
+        spec = task.spec()
+        attaches = self._stage_attaches(worker, spec)
         self._acquire_unit(unit)  # pin chunks for the whole round-trip
-        release_pin = True  # dropped only if neither success nor requeue settles it
-        try:
-            # Assign BEFORE touching the transport: a worker death anywhere
-            # at the send boundary then leaves the unit owned, so the death
-            # sweep's requeue returns it for replay instead of losing it.
-            ctx.state.assign(unit, worker.id)
-            payload = pickle.dumps(
-                ("unit", ctx.epoch, spec, ctx.state.attempts[unit.index] - 1)
-            )
+        # Assign BEFORE the message leaves our hands: a worker death any
+        # time after this leaves the unit owned, so the death sweep's
+        # requeue returns it for replay instead of losing it.
+        ctx.state.assign(unit, worker.id)
+        if self._shm is not None:
+            refs = tuple(
+                b for blocks in spec.data for b in blocks
+                if isinstance(b, ShmBlockRef)
+            ) + tuple(e for e in spec.extras if isinstance(e, ShmBlockRef))
+            if refs:
+                self._shm.pin_refs(refs)
+                ctx.shm_pins[unit.index] = refs
+        msg = ("unit", ctx.epoch, spec, ctx.state.attempts[unit.index] - 1)
+        self._outbox.setdefault(worker.id, []).append((attaches, msg, unit))
+        return True
+
+    def _flush_outbox(self, ctx: _DrainContext) -> None:
+        """Ship every staged queue whose target worker's window is empty.
+
+        One ``send_bytes`` per worker carries its attach messages plus all
+        units staged this sweep — batching amortizes per-message pipe
+        overhead while keeping the flow-control invariant: the single send
+        targets a worker with nothing outstanding (parked in ``recv``), so
+        the parent can never block in ``send_bytes`` against a worker that
+        is itself blocked writing a reply.  ``_outstanding`` then counts
+        one window slot per unit in the batch; the window reopens when the
+        last reply lands.
+        """
+        for wid in list(self._outbox):
+            if self._outstanding.get(wid, 0) > 0:
+                continue  # window busy: flush after its replies land
+            worker = self._workers.get(wid)
+            if worker is None or not worker.alive():
+                self._on_worker_death(wid)  # staged units are assigned: replayed
+                continue
+            entries = self._outbox.pop(wid)
+            msgs = [m for attaches, msg, _unit in entries for m in (*attaches, msg)]
+            payload = pickle.dumps(msgs[0] if len(msgs) == 1 else ("batch", msgs))
             t0 = time.perf_counter()
             try:
-                self._ensure_attached(worker, spec)
                 sent = worker.send_raw(payload)
             except OSError:
-                # Worker died between the liveness check and the send.  The
-                # unit is assigned, so the death sweep's requeue covers it —
-                # including the poison check — and that path releases THIS
-                # dispatch's pin before the replay takes its own, so the
-                # ledger is settled there, not in the finally below.
-                release_pin = False
-                self._on_worker_death(worker.id)
-                return True
-            release_pin = False  # success: the pin rides until reply/requeue
-        finally:
-            if release_pin:  # genuine payload error (pickling, missing manifest)
-                self._release_unit(unit)
-        self._outstanding[worker.id] = self._outstanding.get(worker.id, 0) + 1
-        self.engine.report.ipc_bytes += sent
-        ctx.meta[unit.index] = (t0, time.perf_counter() - t0)
-        ctx.inflight[unit.index] = unit
-        return True
+                # Worker died between the liveness check and the send; the
+                # batch's units are assigned, so the death sweep replays
+                # them (and releases this dispatch's pins).
+                self._on_worker_death(wid)
+                continue
+            send_s = time.perf_counter() - t0
+            self._outstanding[wid] = self._outstanding.get(wid, 0) + len(entries)
+            self.engine.report.ipc_bytes += sent
+            for _attaches, _msg, unit in entries:
+                ctx.meta[unit.index] = (t0, send_s)
+                ctx.inflight[unit.index] = unit
 
     def _drain(self, state: _SchedulerState) -> None:
         self._epoch += 1
@@ -579,15 +737,32 @@ class ClusterExecutor(_PlanExecutor):
                         # context reentrantly.
                         ctx.ready.extend(self._run_unit(unit, state))
                 ctx.ready.extend(deferred)
+                self._flush_outbox(ctx)
                 if state.done.is_set() or state.errors:
                     break
-                if not ctx.inflight and not ctx.ready and not ctx.replays:
+                if (
+                    not ctx.inflight
+                    and not ctx.ready
+                    and not ctx.replays
+                    and not self._outbox
+                ):
                     break  # nothing left to wait for (defensive)
                 self._pump(ctx)
         finally:
-            for unit in ctx.inflight.values():  # error path: drop pins
+            # Error path: staged-but-unflushed units (the break above can
+            # skip a flush) and in-flight units both hold pins — drop them.
+            for entries in self._outbox.values():
+                for _attaches, _msg, unit in entries:
+                    ctx.inflight.pop(unit.index, None)
+                    self._release_unit(unit)
+            self._outbox.clear()
+            for unit in ctx.inflight.values():
                 self._release_unit(unit)
             ctx.inflight.clear()
+            if self._shm is not None:
+                for refs in ctx.shm_pins.values():
+                    self._shm.unpin_refs(refs)
+            ctx.shm_pins.clear()
             self._active = prev
 
     # -- the reply pump / supervisor ------------------------------------------
@@ -641,19 +816,28 @@ class ClusterExecutor(_PlanExecutor):
             self._outstanding[wid] -= 1
         if kind in ("call_done", "call_error"):
             if msg[3] not in self._pending_calls:
+                if kind == "call_done":
+                    shm.discard_tree(msg[4])  # its segments, or they leak
                 return  # superseded call (replayed after a death): drop it
             self.engine.report.ipc_bytes += len(payload)
             self._call_results[msg[3]] = msg
             return
         # unit replies need an active drain of the same epoch
         epoch, index = msg[2], msg[3]
-        if ctx is None or epoch != ctx.epoch or ctx.state.is_done(index):
-            return  # stale: an earlier run, or a duplicate after replay
-        unit = ctx.inflight.pop(index, None)
+        stale = ctx is None or epoch != ctx.epoch or ctx.state.is_done(index)
+        unit = None if stale else ctx.inflight.pop(index, None)
         if unit is None:
+            # Stale: an earlier run, or a duplicate after replay.  A
+            # dropped unit_done still owns reply segments — unlink them.
+            if kind == "unit_done":
+                shm.discard_tree(msg[4])
             return
         self.engine.report.ipc_bytes += len(payload)
         self._release_unit(unit)
+        if self._shm is not None:
+            refs = ctx.shm_pins.pop(index, None)
+            if refs:
+                self._shm.unpin_refs(refs)
         if kind == "unit_error":
             task = unit.tasks[0]
             handle = self._workers.get(wid)
@@ -672,12 +856,14 @@ class ClusterExecutor(_PlanExecutor):
                 )
             )
             return
-        _, _, _, _, result, loaded = msg
+        _, _, _, _, result, loaded, shm_wrote = msg
+        result, _segs = shm.unpack_tree(result)  # consume-and-unlink
         value = jax.tree.map(np.asarray, result)
         report = self.engine.report
         report.dispatches += 1
         report.remote_dispatches += 1
         report.bytes_loaded += loaded
+        report.shm_bytes += shm_wrote
         t0, send_s = ctx.meta.get(index, (None, 0.0))
         wall = (time.perf_counter() - t0) if t0 is not None else 0.0
         self.profile.record_tasks(
@@ -704,9 +890,10 @@ class ClusterExecutor(_PlanExecutor):
             return
         if self._by_location.get(handle.location) == wid:
             del self._by_location[handle.location]
-        self._attached -= {p for p in self._attached if p[0] == wid}
+        self._attached = {k: v for k, v in self._attached.items() if k[0] != wid}
         self._last_hb.pop(wid, None)
         self._outstanding.pop(wid, None)
+        self._outbox.pop(wid, None)  # staged units are assigned: requeued below
         cause = "hung (heartbeat stale)" if handle.alive() else "process died"
         if handle.alive():  # hung (heartbeat-stale), not dead: put it down
             handle.process.terminate()
@@ -725,6 +912,11 @@ class ClusterExecutor(_PlanExecutor):
                     conn.close()
                 except OSError:
                     pass
+        # Undelivered replies died with the worker; their segments did not.
+        # Salvage above consumed (and unlinked) what reached the pipe — the
+        # prefix sweep reaps anything the worker packed but never sent.
+        if handle.result_prefix:
+            shm.sweep_segments(handle.result_prefix)
         ctx = self._active
         if ctx is None:
             return
@@ -732,8 +924,13 @@ class ClusterExecutor(_PlanExecutor):
         for unit in lost:
             ctx.inflight.pop(unit.index, None)
             # Release-on-requeue: the dead dispatch's pins must not outlive
-            # it, or the store could never evict the chunks it holds.
+            # it, or the store could never evict the chunks (or segments)
+            # it holds.  The replay's own dispatch re-pins.
             self._release_unit(unit)
+            if self._shm is not None:
+                refs = ctx.shm_pins.pop(unit.index, None)
+                if refs:
+                    self._shm.unpin_refs(refs)
             task = unit.tasks[0]
             ctx.record_failure(unit.index, wid, cause, handle.log_path)
             if ctx.state.attempts[unit.index] > self.max_retries:
@@ -757,7 +954,38 @@ class ClusterExecutor(_PlanExecutor):
     # -- driver-level remote calls --------------------------------------------
 
     def _remote_call(self, fn_ref: tuple, args: tuple, key_repr: str):
-        payload_args = tuple(np.asarray(a) for a in args)
+        """One driver-level RPC: export big args, pin them, run the loop.
+
+        Args export through the arena's identity cache, so an iterative
+        driver loop passing the same arrays every call (k-NN's lookup
+        over a fixed train set) copies them into shared memory once and
+        ships ~100-byte descriptors thereafter — the bulk of the cluster
+        ``ipc_bytes`` win for RPC-shaped apps.  The pins span the whole
+        call including replays: a retried call reuses the same refs.
+        """
+        report = self.engine.report
+        arg_refs: list[ShmBlockRef] = []
+        if self._shm is not None:
+            exported = []
+            for a in args:
+                ref, wrote = self._shm.export(a, materialize=lambda a=a: np.asarray(a))
+                if ref is not None:
+                    report.shm_bytes += wrote
+                    arg_refs.append(ref)
+                    exported.append(ref)
+                else:
+                    exported.append(np.asarray(a))
+            payload_args = tuple(exported)
+            self._shm.pin_refs(arg_refs)
+        else:
+            payload_args = tuple(np.asarray(a) for a in args)
+        try:
+            return self._remote_call_loop(fn_ref, payload_args, key_repr)
+        finally:
+            if self._shm is not None and arg_refs:
+                self._shm.unpin_refs(arg_refs)
+
+    def _remote_call_loop(self, fn_ref: tuple, payload_args: tuple, key_repr: str):
         report = self.engine.report
         failures = 0
         history: list[dict] = []
@@ -771,6 +999,10 @@ class ClusterExecutor(_PlanExecutor):
             }
 
         while True:
+            if self._active is not None:
+                # Pending batches first: the window invariant (send only to
+                # a worker parked in recv) must hold for THIS send too.
+                self._flush_outbox(self._active)
             worker = self._survivor() or self._worker_for(0)
             if not self._await_window(worker, self._active):
                 continue  # died while we waited for its window: re-resolve
@@ -839,14 +1071,22 @@ class ClusterExecutor(_PlanExecutor):
                 )
             report.dispatches += 1
             report.remote_dispatches += 1
+            result, _segs = shm.unpack_tree(msg[4])  # consume-and-unlink
+            report.shm_bytes += msg[5]
             import jax.numpy as jnp
 
-            return jax.tree.map(jnp.asarray, msg[4])
+            return jax.tree.map(jnp.asarray, result)
 
     # -- lifecycle -------------------------------------------------------------
 
     def close(self) -> None:
-        """Stop the worker pool (idempotent; workers respawn on next use)."""
+        """Stop the worker pool (idempotent; workers respawn on next use).
+
+        Shared-memory teardown happens AFTER the workers are down: unlink
+        the arena, then sweep the whole name prefix — which also reaps any
+        reply segment a worker packed but whose message was never consumed
+        — so no ``/dev/shm`` entry outlives the executor.
+        """
         workers = list(self._workers.values())
         self._workers.clear()
         self._by_location.clear()
@@ -856,6 +1096,10 @@ class ClusterExecutor(_PlanExecutor):
         self._call_results.clear()
         self._pending_calls.clear()
         self._outstanding.clear()
+        self._outbox.clear()
         for w in workers:
             w.stop()
+        if self._shm is not None:
+            self._shm.close()
+            shm.sweep_segments(self._shm.prefix)
         super().close()

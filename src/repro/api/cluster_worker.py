@@ -10,11 +10,13 @@ buries that worker, while every other worker's replies keep flowing.  (A
 shared ``multiprocessing.Queue`` fails this: a killed producer can leave
 the common pipe locked/torn for everyone.)
 
-parent → worker
+parent → worker (either one bare message, or ``("batch", [messages])`` —
+the parent coalesces a scheduling sweep's commands into one send)
     ``("attach", StoreManifest)`` — build an
     :class:`~repro.api.chunkstore.AttachedStore` so later units can
-    resolve :class:`~repro.api.chunkstore.ChunkHandle` payloads from the
-    parent's spill files (bytes never transit the control channel);
+    resolve :class:`~repro.api.chunkstore.ChunkHandle` payloads; a second
+    attach for the same store is a *delta* of a grown store and merges
+    into the existing attach (bytes never transit the control channel);
     ``("unit", epoch, TaskSpec, attempt)`` — execute one task descriptor;
     ``("call", epoch, call_id, fn_ref, args, key)`` — execute one
     driver-level task RPC (the ``executor.task()`` path);
@@ -23,10 +25,19 @@ parent → worker
 worker → parent, over the worker's own reply connection (each message
 pre-pickled so the parent can bill exact ``ipc_bytes``)
     ``("ready", wid, pid)``, ``("hb", wid, t)`` — liveness;
-    ``("unit_done", wid, epoch, index, result, loaded)`` /
+    ``("unit_done", wid, epoch, index, result, loaded, shm_wrote)`` /
     ``("unit_error", wid, epoch, index, err)`` — unit outcomes;
-    ``("call_done", wid, epoch, call_id, result, loaded)`` /
+    ``("call_done", wid, epoch, call_id, result, shm_wrote)`` /
     ``("call_error", wid, epoch, call_id, err)`` — RPC outcomes.
+
+The shared-memory data plane (:mod:`repro.api.shm`): operand payloads may
+arrive as ``ShmBlockRef`` descriptors, resolved zero-copy against
+read-only attachments of the parent's segments.  Results above
+``result_min_bytes`` travel back the same way — packed into ONE fresh
+segment per reply named ``<result_prefix><seq>`` (the parent unlinks it
+on consume, or sweeps the prefix if this worker dies first);
+``shm_wrote`` in the reply bills the copied bytes to the parent's
+``EngineReport.shm_bytes``.
 
 Determinism: the worker rebuilds exactly the stack/concat + function the
 in-process lowering would have dispatched (same jnp ops, same fold order,
@@ -39,7 +50,9 @@ worker ``os._exit`` on *receiving* its nth dispatch (the unit is lost
 in-flight, exercising requeue); ``kill_on_retry`` does the same when it
 receives an already-replayed unit (exercising retry exhaustion);
 ``mute_after`` silences heartbeats and hangs (exercising the
-heartbeat-timeout detector while the process stays alive).
+heartbeat-timeout detector while the process stays alive).  Dispatch
+counts are per unit/call message, so a fault keyed on "the nth dispatch"
+fires identically whether the commands arrived batched or one by one.
 """
 
 from __future__ import annotations
@@ -93,39 +106,46 @@ def _resolve_fn(fn_ref: tuple, cache: dict):
     return fn
 
 
-def _build_operands(kind: str, data: tuple, extras: tuple, stores: dict):
+def _build_operands(kind: str, data: tuple, extras: tuple, stores: dict, shm_att):
     """Payloads → operand tuple, mirroring the in-process lowering exactly.
 
     Stacked kinds (``partition_scan``/``partition_pallas``) stack the
     blocks on a new leading axis, ``partition_materialized`` concatenates,
     ``block`` passes the single block through.  Returns the operands plus
-    the chunk bytes read from attached stores (billed upstream as
-    ``bytes_loaded``).
+    the chunk bytes read from spill files (billed upstream as
+    ``bytes_loaded`` — shared-memory resolutions move no file bytes and
+    bill nothing).
     """
     import jax.numpy as jnp
 
     from repro.api.chunkstore import ChunkHandle, ChunkStoreError
+    from repro.api.shm import ShmBlockRef
+
+    def resolve(b):
+        nonlocal loaded
+        if isinstance(b, ChunkHandle):
+            store = stores.get(b.store_uid)
+            if store is None:
+                raise ChunkStoreError(f"store {b.store_uid} not attached")
+            entry = store.manifest.chunks.get(b.chunk_id)
+            if entry is not None and entry[0] == "file":
+                loaded += b.nbytes
+            return store.resolve(b)
+        if isinstance(b, ShmBlockRef):
+            return jnp.asarray(shm_att.view(b))  # zero-copy off the pipe
+        return jnp.asarray(b)
 
     loaded = 0
     ops = []
     for blocks in data:
-        arrs = []
-        for b in blocks:
-            if isinstance(b, ChunkHandle):
-                store = stores.get(b.store_uid)
-                if store is None:
-                    raise ChunkStoreError(f"store {b.store_uid} not attached")
-                arrs.append(store.resolve(b))
-                loaded += b.nbytes
-            else:
-                arrs.append(jnp.asarray(b))
+        arrs = [resolve(b) for b in blocks]
         if kind in ("partition_scan", "partition_pallas"):
             ops.append(jnp.stack(arrs, axis=0))
         elif kind == "partition_materialized":
             ops.append(jnp.concatenate(arrs, axis=0))
         else:
             ops.append(arrs[0])
-    ops.extend(jnp.asarray(e) for e in extras)
+    ops.extend(resolve(e) for e in extras)
     return tuple(ops), loaded
 
 
@@ -140,6 +160,8 @@ def worker_main(
     kill_on_retry: bool = False,
     mute_after: int | None = None,
     log_path: str | None = None,
+    result_prefix: str | None = None,
+    result_min_bytes: int = 1024,
 ) -> None:
     """Entry point of one cluster worker process."""
     log = open(log_path, "a") if log_path else None
@@ -167,37 +189,54 @@ def worker_main(
 
     import numpy as np  # deferred: keep the pre-ready window minimal
 
+    from repro.api import shm as shm_mod
+
+    shm_att = shm_mod.ShmAttachments()
     fns: dict = {}
     stores: dict = {}
     dispatches = 0
+    reply_seq = 0
 
     def to_host(tree):
         import jax
 
         return jax.tree.map(np.asarray, tree)
 
-    while True:
-        try:
-            payload = conn.recv_bytes()
-        except EOFError:
-            _log_line(log, worker_id, "command channel closed; exiting")
-            break
-        msg = pickle.loads(payload)
+    def pack(tree):
+        """Large reply leaves → one fresh segment; (tree, bytes_copied)."""
+        nonlocal reply_seq
+        if result_prefix is None:
+            return tree, 0
+        reply_seq += 1
+        packed, _seg, wrote = shm_mod.pack_tree(
+            tree,
+            threshold=result_min_bytes,
+            name=f"{result_prefix}{reply_seq}",
+        )
+        return packed, wrote
+
+    def handle(msg) -> bool:
+        """Process one command message; False means exit the main loop."""
+        nonlocal dispatches
         kind = msg[0]
         if kind == "stop":
             _log_line(log, worker_id, "stop")
-            break
+            return False
         if kind == "attach":
             manifest = msg[1]
             from repro.api.chunkstore import AttachedStore
 
-            stores[manifest.uid] = AttachedStore(manifest)
+            store = stores.get(manifest.uid)
+            if store is not None:
+                store.merge(manifest)  # a grown store's delta
+            else:
+                stores[manifest.uid] = AttachedStore(manifest)
             _log_line(
                 log,
                 worker_id,
                 f"attach store={manifest.uid} chunks={len(manifest.chunks)}",
             )
-            continue
+            return True
 
         dispatches += 1
         if mute_after is not None and dispatches >= mute_after:
@@ -212,13 +251,19 @@ def worker_main(
         if kind == "unit":
             _, epoch, spec, attempt = msg
             if kill_on_retry and attempt > 0:
-                _log_line(log, worker_id, f"FAULT: killing on retried unit {spec.index}")
+                _log_line(
+                    log, worker_id, f"FAULT: killing on retried unit {spec.index}"
+                )
                 os._exit(RETRY_KILLED_EXIT)
             try:
                 fn = _resolve_fn(spec.fn_ref, fns)
-                ops, loaded = _build_operands(spec.kind, spec.data, spec.extras, stores)
-                out = to_host(fn(*ops))
-                reply(("unit_done", worker_id, epoch, spec.index, out, loaded))
+                ops, loaded = _build_operands(
+                    spec.kind, spec.data, spec.extras, stores, shm_att
+                )
+                out, wrote = pack(to_host(fn(*ops)))
+                reply(
+                    ("unit_done", worker_id, epoch, spec.index, out, loaded, wrote)
+                )
                 _log_line(
                     log,
                     worker_id,
@@ -235,8 +280,16 @@ def worker_main(
                 fn = _resolve_fn(fn_ref, fns)
                 import jax.numpy as jnp
 
-                out = to_host(fn(*(jnp.asarray(a) for a in args)))
-                reply(("call_done", worker_id, epoch, call_id, out, 0))
+                from repro.api.shm import ShmBlockRef
+
+                ops = (
+                    jnp.asarray(shm_att.view(a))
+                    if isinstance(a, ShmBlockRef)
+                    else jnp.asarray(a)
+                    for a in args
+                )
+                out, wrote = pack(to_host(fn(*ops)))
+                reply(("call_done", worker_id, epoch, call_id, out, wrote))
                 _log_line(log, worker_id, f"call {call_id} key={key} ok")
             except BaseException:
                 err = traceback.format_exc()
@@ -244,7 +297,24 @@ def worker_main(
                 reply(("call_error", worker_id, epoch, call_id, err))
         else:
             _log_line(log, worker_id, f"unknown message {kind!r}; ignoring")
+        return True
+
+    running = True
+    while running:
+        try:
+            payload = conn.recv_bytes()
+        except EOFError:
+            _log_line(log, worker_id, "command channel closed; exiting")
+            break
+        msg = pickle.loads(payload)
+        for m in msg[1] if msg[0] == "batch" else (msg,):
+            if not handle(m):
+                running = False
+                break
 
     stop_beat.set()
+    shm_att.close()  # release our mappings; unlink stays the parent's job
+    for store in stores.values():
+        store.close()
     if log is not None:
         log.close()

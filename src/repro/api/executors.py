@@ -764,6 +764,12 @@ class _PlanExecutor:
         residency-budget eviction of its store(s) must not drop buffers the
         ``operands()`` closure is about to (or did just) resolve.  Units of
         non-chunked inputs carry no refs and the hook is free.
+
+        The pin routes through the store protocol, so it covers shared
+        memory too: a :class:`~repro.api.shm.ShmStore`-backed chunk's pin
+        guards its *segment* against budget eviction for the round-trip
+        (the cluster backend additionally pins the shm descriptors its
+        dispatch exported — see ``ClusterExecutor``).
         """
         for task in unit.tasks:
             for ref in task.chunk_refs:

@@ -210,6 +210,12 @@ class Capabilities:
         process boundary.  Tasks whose code cannot be referenced (driver
         views, unpicklable closures) keep ``fn_ref=None`` and the backend
         runs them in-process.
+      exporter: dispatch-time block exporter of the shared-memory data
+        plane (``callable(block) -> ShmBlockRef | None``), or None.  When
+        set, operand builders hand large blocks off as shm descriptors
+        instead of raw ndarray payloads; a ``None`` return falls back to
+        inline bytes.  Excluded from equality/hash so caches keyed on
+        capabilities don't fragment on executor identity.
     """
 
     name: str = "local"
@@ -218,6 +224,7 @@ class Capabilities:
     grouped_dispatch: bool = False
     out_of_core: bool = False
     remote: bool = False
+    exporter: Any = dataclasses.field(default=None, compare=False, repr=False)
 
 
 # ---------------------------------------------------------------------------
@@ -532,13 +539,15 @@ def _refs_of(arrays, ids, caps: Capabilities) -> tuple:
     )
 
 
-def _block_payload(block):
+def _block_payload(block, exporter=None):
     """One block as it crosses a process boundary.
 
-    Store-held chunks with a spill file travel as tiny
-    :class:`~repro.api.chunkstore.ChunkHandle` descriptors (the worker
-    resolves them against its attached store — bytes never transit the
-    control channel); everything else ships as raw ndarray bytes.
+    Cheapest transport first: store-held chunks covered by a manifest
+    travel as tiny :class:`~repro.api.chunkstore.ChunkHandle` descriptors
+    (the worker resolves them against its attached store); other blocks go
+    through the backend's shared-memory ``exporter`` when one is set
+    (:class:`Capabilities.exporter` — descriptors instead of bytes); only
+    when both decline do raw ndarray bytes ship over the control channel.
     """
     if isinstance(block, ChunkRef):
         handle = getattr(block.store, "handle", None)
@@ -546,18 +555,25 @@ def _block_payload(block):
             h = handle(block)
             if h is not None:
                 return h
+    if exporter is not None:
+        ref = exporter(block)
+        if ref is not None:
+            return ref
     return np.asarray(resolve_chunk(block))
 
 
-def _remote_operands_builder(arrays, ids, extra) -> Callable[[], tuple]:
+def _remote_operands_builder(arrays, ids, extra, exporter=None) -> Callable[[], tuple]:
     """Builder of a task's raw remote payload — evaluated at dispatch time."""
 
     def build():
         data = tuple(
-            tuple(_block_payload(a.blocks[b]) for b in ids) for a in arrays
+            tuple(_block_payload(a.blocks[b], exporter) for b in ids) for a in arrays
         )
-        extras = tuple(np.asarray(e) for e in extra)
-        return data, extras
+        extras = []
+        for e in extra:
+            ref = exporter(e) if exporter is not None else None
+            extras.append(ref if ref is not None else np.asarray(e))
+        return data, tuple(extras)
 
     return build
 
@@ -607,7 +623,9 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
             return {}
         return {
             "fn_ref": fn_ref,
-            "remote_operands": _remote_operands_builder(arrays, ids, extra),
+            "remote_operands": _remote_operands_builder(
+                arrays, ids, extra, caps.exporter
+            ),
         }
 
     fused = isinstance(pol, SplIter) and not pol.materialize and spec.combine is not None

@@ -44,6 +44,20 @@ BlockFn = Callable[..., Any]           # (*blocks, *extra_args) -> partial pytre
 CombineFn = Callable[[Any, Any], Any]  # (acc, partial) -> acc, associative
 
 
+#: Per-field aggregation rules for :meth:`EngineReport.__iadd__` /
+#: :meth:`EngineReport.merge` — the single registry every aggregation and
+#: (de)serialization path derives from ``dataclasses.fields``, so a newly
+#: added counter (e.g. ``shm_bytes``) is summed, merged and JSON
+#: round-tripped without touching any hand-listed key set.
+#:   "sum"    — counters/timers: add (the default for unlisted fields)
+#:   "latest" — settings: keep the other window's value when non-zero
+#:   "label"  — identity strings: untouched by ``+=`` (merge() joins them)
+_FIELD_RULES = {
+    "mode": "label",
+    "granularity": "latest",
+}
+
+
 @dataclasses.dataclass
 class EngineReport:
     """Cost accounting for one workload execution."""
@@ -60,7 +74,9 @@ class EngineReport:
     bytes_spilled: int = 0       # chunk-store spill writes (evictions of dirty chunks)
     prefetch_hits: int = 0       # chunk gets served by an earlier prefetch
     remote_dispatches: int = 0   # dispatches executed in a worker process (cluster)
-    ipc_bytes: int = 0           # serialized bytes over the cluster control channel
+    ipc_bytes: int = 0           # serialized control-channel bytes (cluster); block
+    #                              payloads travel out-of-band via shm_bytes
+    shm_bytes: int = 0           # bytes copied into shared-memory segments (cluster)
     retries: int = 0             # units replayed after a worker death (cluster)
 
     def as_row(self) -> dict:
@@ -95,20 +111,15 @@ class EngineReport:
         return cls(**{k: v for k, v in data.items() if k in names})
 
     def __iadd__(self, other: "EngineReport") -> "EngineReport":
-        self.dispatches += other.dispatches
-        self.merges += other.merges
-        self.traces += other.traces
-        self.bytes_moved += other.bytes_moved
-        self.wall_s += other.wall_s
-        self.retunes += other.retunes
-        self.bytes_loaded += other.bytes_loaded
-        self.bytes_spilled += other.bytes_spilled
-        self.prefetch_hits += other.prefetch_hits
-        self.remote_dispatches += other.remote_dispatches
-        self.ipc_bytes += other.ipc_bytes
-        self.retries += other.retries
-        if other.granularity:
-            self.granularity = other.granularity
+        for f in dataclasses.fields(self):
+            rule = _FIELD_RULES.get(f.name, "sum")
+            if rule == "sum":
+                setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+            elif rule == "latest":
+                value = getattr(other, f.name)
+                if value:
+                    setattr(self, f.name, value)
+            # "label" fields (mode) are merge()'s business, untouched here
         return self
 
 

@@ -42,7 +42,9 @@ from repro.api import (
     decode_fn,
     encode_fn,
 )
+from repro.api import shm_available
 from repro.api.executors import _SchedulerState, _Unit
+from repro.api.shm import leaked_segments
 from repro.core.apps.cascade_svm import cascade_svm
 from repro.core.apps.histogram import histogram
 from repro.core.apps.kmeans import kmeans
@@ -51,6 +53,9 @@ from repro.core.blocked import BlockedArray, round_robin_placement
 
 LOG_DIR = os.environ.get("REPRO_CLUSTER_LOG_DIR")  # CI fault lane artifacts
 POL = SplIter(partitions_per_location=2)
+needs_shm = pytest.mark.skipif(
+    not shm_available(), reason="host has no POSIX shared memory"
+)
 
 
 def _cluster(**kw) -> ClusterExecutor:
@@ -154,7 +159,7 @@ def test_large_payloads_do_not_deadlock_pipes():
         lambda b: b * 2.0
     )
     ref = plan.compute(executor=LocalExecutor())
-    ex = _cluster()
+    ex = _cluster(shm=False)  # force inline payloads: this test IS the pipe path
     box: dict = {}
 
     def run():
@@ -183,14 +188,15 @@ def test_large_payloads_do_not_deadlock_pipes():
 
 
 def test_chunk_handles_keep_bytes_off_the_wire(points):
+    """shm=False — the PR 5 spill-file path, unchanged by the data plane."""
     ref, _ = histogram(points, bins=8, policy=POL)
-    ex_mem = _cluster()
+    ex_mem = _cluster(shm=False)
     _, rep_mem = histogram(points, bins=8, policy=POL, executor=ex_mem)
     ex_mem.close()
 
     store = DiskStore(residency_bytes=1 << 20)
     chunked = points.to_store(store)
-    ex = _cluster()
+    ex = _cluster(shm=False)
     h, rep = histogram(chunked, bins=8, policy=POL, executor=ex)
     ex.close()
     assert identical(h, ref)
@@ -202,6 +208,110 @@ def test_chunk_handles_keep_bytes_off_the_wire(points):
     assert rep.bytes_loaded >= points.nbytes
     assert all(not store.is_pinned(r) for r in chunked.blocks)
     store.close()
+
+
+@needs_shm
+def test_chunk_manifest_hands_off_via_shm_without_spilling(points):
+    """shm on — resident chunks manifest as segments: no spill, no loads."""
+    ref, _ = histogram(points, bins=8, policy=POL)
+    store = DiskStore(residency_bytes=64 << 20)  # everything stays resident
+    chunked = points.to_store(store)
+    ex = _cluster(shm=True)
+    h, rep = histogram(chunked, bins=8, policy=POL, executor=ex)
+    assert identical(h, ref)
+    # The old handoff force-spilled EVERY chunk; shm-first writes nothing
+    # to disk and workers read segments, not files.  (Asserted before
+    # close(): the close-time trim legitimately spills the residency
+    # cache, which is release bookkeeping, not handoff traffic.)
+    assert store.stats.spills == 0 and store.stats.bytes_spilled == 0
+    ex.close()
+    assert rep.bytes_spilled == 0 and rep.bytes_loaded == 0
+    assert rep.shm_bytes >= points.nbytes  # each chunk copied exactly once
+    assert rep.ipc_bytes < points.nbytes  # descriptors, not block bytes
+    assert all(not store.is_pinned(r) for r in chunked.blocks)
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# the shared-memory data plane — the PR 7 acceptance numbers
+# ---------------------------------------------------------------------------
+
+
+@needs_shm
+class TestShmDataPlane:
+    """Block payloads move through /dev/shm; the pipes carry descriptors.
+
+    The acceptance bar: ≥10× less control-channel traffic on the two
+    payload-heavy apps (knn ships fit structures into every lookup RPC,
+    cascade_svm ships group matrices into every cascade level), with
+    results bit-identical to both LocalExecutor and the shm-off cluster.
+    """
+
+    def _run_both(self, app):
+        out = {}
+        for shm in (False, True):
+            ex = _cluster(shm=shm)
+            try:
+                for _ in range(2):  # 2nd call: steady-state, export cache warm
+                    res = app(ex)
+            finally:
+                ex.close()
+            out[shm] = res
+        return out[False], out[True]
+
+    def test_knn_ipc_bytes_drop_10x(self):
+        rng = np.random.default_rng(0)
+        fit = _blocked(rng.random((2048, 3)).astype(np.float32))
+        qry = _blocked(rng.random((512, 3)).astype(np.float32), 256)
+        ref = knn(fit, qry, k=4, policy=POL)
+        off, on = self._run_both(lambda ex: knn(fit, qry, k=4, policy=POL, executor=ex))
+        for res in (off, on):
+            assert identical(res.indices, ref.indices)
+            assert identical(res.distances, ref.distances)
+        assert off.report.ipc_bytes >= 10 * on.report.ipc_bytes
+        assert on.report.shm_bytes > 0 and off.report.shm_bytes == 0
+
+    def test_svm_ipc_bytes_drop_10x(self):
+        rng = np.random.default_rng(0)
+        pts = rng.standard_normal((4096, 16)).astype(np.float32)
+        w = rng.standard_normal(16).astype(np.float32)
+        labels = np.sign(pts @ w + 0.05 * rng.standard_normal(4096)).astype(np.float32)
+        x, y = _blocked(pts, 512), _blocked(labels, 512)
+
+        def app(ex):
+            return cascade_svm(
+                x, y, num_sv=32, steps=30, iterations=1, policy=POL, executor=ex
+            )
+
+        ref = cascade_svm(x, y, num_sv=32, steps=30, iterations=1, policy=POL)
+        off, on = self._run_both(app)
+        for res in (off, on):
+            assert identical(res.sv_x, ref.sv_x)
+            assert identical(res.sv_y, ref.sv_y)
+        assert off.report.ipc_bytes >= 10 * on.report.ipc_bytes
+        assert on.report.shm_bytes > 0
+
+    def test_grown_store_reattaches_as_a_delta(self, points):
+        # A second dataset lands in an ALREADY handed-off store: workers
+        # hold an attach from run 1, so run 2 must ship only the new
+        # chunks' descriptors (manifest delta, merged in place) — not
+        # re-manifest, re-spill, or re-send the world.
+        store = DiskStore(residency_bytes=64 << 20)
+        chunked = points.to_store(store)
+        ref, _ = histogram(points, bins=8, policy=POL)
+        ex = _cluster(shm=True)
+        h1, _ = histogram(chunked, bins=8, policy=POL, executor=ex)
+        assert identical(h1, ref)
+        rng = np.random.default_rng(7)
+        pts2 = _blocked(rng.random((1024, 4)).astype(np.float32))
+        ref2, _ = histogram(pts2, bins=8, policy=POL)
+        chunked2 = pts2.to_store(store)  # the SAME store, grown mid-session
+        h2, rep2 = histogram(chunked2, bins=8, policy=POL, executor=ex)
+        assert identical(h2, ref2)
+        assert store.stats.spills == 0  # delta handed off via shm too
+        assert rep2.ipc_bytes < pts2.nbytes  # descriptors, not block bytes
+        ex.close()
+        store.close()
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +414,35 @@ class TestFaultTolerance:
         ex.close()
         assert identical(res.indices, ref.indices)
         assert res.report.retries >= 1
+
+    @needs_shm
+    def test_kill_midrun_leaks_no_shm_segments(self, points):
+        # The dead worker's in-flight reply segment (and every operand
+        # segment pinned for its units) must be swept: close() leaves
+        # /dev/shm with zero entries under this executor's prefix.
+        pol = SplIter(partitions_per_location=4)
+        ref, _ = histogram(points, bins=8, policy=pol)
+        ex = _cluster(fault_plan=FaultPlan(kill_after=((0, 2),)))
+        prefix = ex._shm.prefix
+        h, rep = histogram(points, bins=8, policy=pol, executor=ex)
+        assert identical(h, ref)
+        assert rep.retries >= 1
+        ex.close()
+        assert leaked_segments(prefix) == []
+
+    @needs_shm
+    def test_poisoned_run_leaks_no_shm_segments(self, points):
+        # Even the failure path — two kills, typed ClusterFailedError,
+        # partial results discarded — must unwind every segment.
+        ex = _cluster(
+            max_retries=1,
+            fault_plan=FaultPlan(kill_after=((0, 1),), kill_on_retry=(1,)),
+        )
+        prefix = ex._shm.prefix
+        with pytest.raises(ClusterFailedError):
+            histogram(points, bins=8, policy=POL, executor=ex)
+        ex.close()
+        assert leaked_segments(prefix) == []
 
     def test_hung_worker_detected_by_heartbeat_timeout(self, points):
         # mute: the worker process stays alive but stops heartbeating and

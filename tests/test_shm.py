@@ -1,0 +1,293 @@
+"""The shared-memory data plane (repro.api.shm) and its billing contracts.
+
+What PR 7's tentpole must guarantee, independent of any cluster run:
+
+* ``ShmBlockRef`` descriptors pickle to ~100 bytes and round-trip exactly;
+* the arena (``ShmStore``) caches exports by identity (one copy per block,
+  ever), declines over-budget exports instead of erroring, evicts only
+  unpinned/unlocked segments, and ``close()`` leaves ``/dev/shm`` clean;
+* the ChunkStore contract holds (put/get bit-identity, budget errors);
+* reply transport (``pack_tree``/``unpack_tree``/``discard_tree``) has a
+  strict send→consume→unlink lifecycle — no segment outlives its reply;
+* ``DiskStore.manifest`` is shm-first and incremental, and bills
+  ``spills``/``bytes_spilled`` only for genuinely new spill writes;
+* ``EngineReport`` aggregation/serialization is field-registry driven, so
+  ``shm_bytes`` (and any future counter) sums and round-trips untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import ChunkRef, DiskStore
+from repro.api.chunkstore import ChunkStoreError
+from repro.api.shm import (
+    ShmAttachments,
+    ShmBlockRef,
+    ShmStore,
+    discard_tree,
+    leaked_segments,
+    pack_tree,
+    shm_available,
+    sweep_segments,
+    unpack_tree,
+)
+from repro.core.engine import _FIELD_RULES, EngineReport
+
+pytestmark = pytest.mark.skipif(
+    not shm_available(), reason="host has no POSIX shared memory"
+)
+
+
+def _arr(n=1024, seed=0, shape=None):
+    rng = np.random.default_rng(seed)
+    return rng.random(shape or (n,)).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# descriptors
+# ---------------------------------------------------------------------------
+
+
+def test_block_ref_pickles_small_and_exact():
+    ref = ShmBlockRef("rshm1x1a1", 256, (128, 4), "<f4")
+    blob = pickle.dumps(ref)
+    assert len(blob) < 200  # the whole point: descriptors, not payloads
+    assert pickle.loads(blob) == ref
+    assert ref.nbytes == 128 * 4 * 4
+
+
+# ---------------------------------------------------------------------------
+# the arena
+# ---------------------------------------------------------------------------
+
+
+class TestShmStore:
+    def test_export_round_trip(self):
+        a = _arr()
+        with ShmStore() as store:
+            ref, wrote = store.export(a)
+            assert ref is not None and wrote == a.nbytes
+            att = ShmAttachments()
+            view = att.view(ref)
+            assert not view.flags.writeable
+            np.testing.assert_array_equal(view, a)
+            att.close()
+
+    def test_export_caches_by_identity(self):
+        a = _arr()
+        with ShmStore() as store:
+            ref1, wrote1 = store.export(a)
+            ref2, wrote2 = store.export(a)
+            assert ref1 == ref2
+            assert wrote1 == a.nbytes and wrote2 == 0  # one copy, ever
+            assert store.bytes_exported == a.nbytes
+
+    def test_small_blocks_decline(self):
+        with ShmStore(min_bytes=1024) as store:
+            ref, wrote = store.export(np.zeros(4))
+            assert ref is None and wrote == 0
+
+    def test_budget_exhaustion_declines_not_raises(self):
+        with ShmStore(budget_bytes=1 << 16, segment_bytes=1 << 16) as store:
+            pinned, _ = store.export(_arr(4096, seed=1))  # 32KB
+            store.pin_refs([pinned])
+            b, c = _arr(4096, seed=2), _arr(8192, seed=3)
+            refb, _ = store.export(b)
+            store.pin_refs([refb])
+            # nothing evictable is left and c does not fit: decline
+            refc, wrote = store.export(c)
+            assert refc is None and wrote == 0
+            store.unpin_refs([pinned])
+            store.unpin_refs([refb])
+
+    def test_lru_eviction_spares_pinned_segments(self):
+        # 32KB segments, 96KB budget: each 32KB export fills one segment.
+        with ShmStore(budget_bytes=3 << 15, segment_bytes=1 << 15) as store:
+            a, b, c = (_arr(4096, seed=i) for i in (1, 2, 3))
+            ra, _ = store.export(a)
+            rb, _ = store.export(b)
+            store.pin_refs([ra])
+            rc, _ = store.export(c)  # budget now fully allocated
+            rd, _ = store.export(_arr(4096, seed=4))  # must evict one segment
+            assert rd is not None
+            live = store.live_segments()
+            assert ra.segment in live  # pinned survived
+            assert rc.segment in live  # recently used survived
+            assert rb.segment not in live  # LRU unpinned victim
+            store.unpin_refs([ra])
+
+    def test_close_unlinks_everything_and_is_reusable(self):
+        store = ShmStore()
+        store.export(_arr(seed=4))
+        prefix = store.prefix
+        assert leaked_segments(prefix)
+        store.close()
+        assert leaked_segments(prefix) == []
+        ref, wrote = store.export(_arr(seed=5))  # reusable after close
+        assert ref is not None and wrote > 0
+        store.close()
+        assert leaked_segments(prefix) == []
+
+
+class TestShmChunkStore:
+    def test_put_get_bit_identical(self):
+        a = _arr(seed=6).astype(np.float32)  # jnp round-trips f32 untouched
+        with ShmStore() as store:
+            ref = store.put(a)
+            assert isinstance(ref, ChunkRef)
+            np.testing.assert_array_equal(np.asarray(store.get(ref)), a)
+            assert store.handle(ref) is not None  # picklable descriptor
+
+    def test_put_ignores_min_bytes_floor(self):
+        with ShmStore(min_bytes=1 << 20) as store:
+            ref = store.put(np.arange(8.0))
+            np.testing.assert_array_equal(np.asarray(store.get(ref)), np.arange(8.0))
+
+    def test_put_raises_when_budget_exhausted(self):
+        with ShmStore(budget_bytes=1 << 14, segment_bytes=1 << 14) as store:
+            store.put(_arr(1024, seed=7))  # 8KB, locked by put
+            with pytest.raises(ChunkStoreError):
+                store.put(_arr(4096, seed=8))  # 32KB can never fit
+
+
+# ---------------------------------------------------------------------------
+# reply transport
+# ---------------------------------------------------------------------------
+
+
+class TestReplyTransport:
+    def test_pack_unpack_round_trip_unlinks(self):
+        tree = {"big": _arr(1024, seed=9), "small": np.float64(3.5)}
+        packed, seg, wrote = pack_tree(tree, threshold=1024, name="rshmtestp1")
+        assert seg == "rshmtestp1" and wrote == tree["big"].nbytes
+        assert isinstance(packed["big"], ShmBlockRef)
+        assert packed["small"] == tree["small"]  # under threshold: inline
+        out, segs = unpack_tree(packed)
+        np.testing.assert_array_equal(out["big"], tree["big"])
+        assert segs == ["rshmtestp1"]
+        assert leaked_segments("rshmtestp1") == []  # consume == unlink
+
+    def test_pack_without_big_leaves_is_a_no_op(self):
+        tree = (np.arange(4.0), 7)
+        packed, seg, wrote = pack_tree(tree, threshold=1024, name="rshmtestp2")
+        assert seg is None and wrote == 0 and packed is tree
+        assert leaked_segments("rshmtestp2") == []
+
+    def test_discard_tree_unlinks_unconsumed_replies(self):
+        packed, seg, _ = pack_tree(
+            [_arr(1024, seed=10)], threshold=1024, name="rshmtestp3"
+        )
+        assert leaked_segments("rshmtestp3") == [seg]
+        discard_tree(packed)  # the stale-reply path
+        assert leaked_segments("rshmtestp3") == []
+
+    def test_sweep_reaps_orphans(self):
+        pack_tree([_arr(1024, seed=11)], threshold=1024, name="rshmtestp4x1")
+        pack_tree([_arr(1024, seed=12)], threshold=1024, name="rshmtestp4x2")
+        assert sweep_segments("rshmtestp4") == 2
+        assert leaked_segments("rshmtestp4") == []
+
+
+# ---------------------------------------------------------------------------
+# DiskStore.manifest — shm-first, incremental, honest billing
+# ---------------------------------------------------------------------------
+
+
+class TestManifestHandoff:
+    def _store_with_chunks(self, n=4):
+        store = DiskStore(residency_bytes=64 << 20)
+        refs = [store.put(_arr(512, seed=20 + i)) for i in range(n)]
+        return store, refs
+
+    def test_shm_first_writes_no_files(self):
+        store, refs = self._store_with_chunks()
+        with ShmStore() as arena:
+
+            def export(cid, arr):
+                ref, _ = arena.export(arr, key=cid, min_bytes=0, lock=True)
+                return ref
+
+            m = store.manifest(export=export)
+            assert {tag for tag, *_ in m.chunks.values()} == {"shm"}
+            assert store.stats.spills == 0 and store.stats.bytes_spilled == 0
+            assert len(m.chunks) == len(refs)
+        store.close()
+
+    def test_fallback_spill_billed_once(self):
+        store, refs = self._store_with_chunks()
+        m1 = store.manifest()  # no exporter: force-spill path
+        assert {tag for tag, *_ in m1.chunks.values()} == {"file"}
+        first = (store.stats.spills, store.stats.bytes_spilled)
+        assert first[0] == len(refs) and first[1] > 0
+        # regression (the PR 5 bug): a second manifest re-spilled and
+        # re-billed the world; now chunks with files reuse them for free.
+        m2 = store.manifest()
+        assert (store.stats.spills, store.stats.bytes_spilled) == first
+        assert m2.chunks.keys() == m1.chunks.keys()
+        store.close()
+
+    def test_known_yields_only_the_delta(self):
+        store, _ = self._store_with_chunks(n=2)
+        m1 = store.manifest()
+        grown = store.put(_arr(512, seed=99))
+        delta = store.manifest(known=m1.chunks.keys())
+        assert set(delta.chunks) == {grown.chunk_id}
+        store.close()
+
+    def test_manifested_resident_chunks_get_handles(self):
+        store, refs = self._store_with_chunks(n=2)
+        assert store.handle(refs[0]) is None  # resident, never handed off
+        with ShmStore() as arena:
+
+            def export(cid, arr):
+                ref, _ = arena.export(arr, key=cid, min_bytes=0, lock=True)
+                return ref
+
+            store.manifest(export=export)
+            h = store.handle(refs[0])  # no spill file, but manifested
+            assert h is not None and h.chunk_id == refs[0].chunk_id
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# EngineReport — the single field registry drives every aggregation path
+# ---------------------------------------------------------------------------
+
+
+class TestReportFieldRegistry:
+    def test_registry_covers_every_non_sum_field(self):
+        names = {f.name for f in dataclasses.fields(EngineReport)}
+        assert set(_FIELD_RULES) <= names
+        assert _FIELD_RULES["mode"] == "label"
+
+    def test_every_field_round_trips_and_sums_generically(self):
+        # Fill EVERY field with a distinct value — a future counter that
+        # misses to_json/from_json/__iadd__ fails here without a hand edit.
+        kw = {
+            f.name: ("m" if f.name == "mode" else i + 1)
+            for i, f in enumerate(dataclasses.fields(EngineReport))
+        }
+        rep = EngineReport(**kw)
+        assert EngineReport.from_json(rep.to_json()) == rep
+        summed = EngineReport.from_json(rep.to_json())
+        summed += rep
+        for f in dataclasses.fields(EngineReport):
+            rule = _FIELD_RULES.get(f.name, "sum")
+            want = {
+                "sum": kw[f.name] * 2,
+                "latest": kw[f.name],
+                "label": kw[f.name],
+            }[rule]
+            assert getattr(summed, f.name) == want, f.name
+
+    def test_shm_bytes_is_a_summed_counter(self):
+        a = EngineReport(mode="x", shm_bytes=100, ipc_bytes=5)
+        b = EngineReport(mode="x", shm_bytes=40, ipc_bytes=2)
+        out = a.merge(b)
+        assert (out.shm_bytes, out.ipc_bytes) == (140, 7)
+        assert EngineReport.from_json(out.to_json()).shm_bytes == 140
