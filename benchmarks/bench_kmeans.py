@@ -7,6 +7,8 @@ every iteration (paper: 10 loops amplify it 10×).
 
 from __future__ import annotations
 
+import time
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -79,6 +81,7 @@ def _aggregate_row(pol, executor_name: str, warm, res) -> dict:
         "retries": sum(r.retries for r in res.reports),
         "jobs": 0,
         "resumes": 0,
+        "overlapped_launches": sum(r.overlapped_launches for r in res.reports),
     }
 
 
@@ -99,6 +102,59 @@ def smoke() -> list[dict]:
                 ex.close()
     rows.append(_stream_disk_row())
     rows.append(_server_row())
+    rows.extend(_pipelined_rows())
+    return rows
+
+
+def _pipelined_rows() -> list[dict]:
+    """The pipelined-iteration axis (DESIGN.md §14): Lloyd with no barrier.
+
+    Same data, same policy, ``pipeline=True`` (depth-2 window of async
+    executes, centers carried as a Deferred): centers must stay
+    bit-identical to the barriered loop on the same executor, and every
+    iteration past the first must report overlapped launches — both are
+    structural, so a regression that quietly serializes (or reorders) the
+    pipeline fails the smoke job.
+
+    The dataset is deliberately larger than the toy grid (16K×8 rather
+    than 2K×4): the pipeline hides the per-execute barrier — merge wait,
+    host-side update, next iteration's lowering — so the comparison only
+    means something when iterations carry real compute.  Both arms are
+    warmed (the pipelined machinery traces on first use too) and timed
+    as a median of 3; ``barriered_wall_s`` rides in the row so each
+    pipelined row carries its own wall-clock comparison (wall columns
+    are informational, never baseline-diffed — on a single-core runner
+    the two arms tie within noise, the overlap needs idle cores or real
+    transport latency to pay).
+    """
+    from statistics import median
+
+    from repro.api import ClusterExecutor, ThreadedExecutor
+
+    x = _dataset(2, 8, 8192, d=8)
+    pol = SplIter(partitions_per_location=2)
+    rows = []
+    for name, ex in (("threaded", ThreadedExecutor()), ("cluster", ClusterExecutor())):
+        kmeans(x, k=8, iters=2, policy=pol, executor=ex)  # warm barriered
+        kmeans(x, k=8, iters=2, policy=pol, executor=ex, pipeline=True)
+        bars, pipes = [], []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            warm = kmeans(x, k=8, iters=6, policy=pol, executor=ex)
+            bars.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            res = kmeans(x, k=8, iters=6, policy=pol, executor=ex, pipeline=True)
+            pipes.append(time.perf_counter() - t0)
+        assert bool(jnp.all(res.centers == warm.centers)), (
+            f"pipelined kmeans diverged on {name}"
+        )
+        overlapped = sum(r.overlapped_launches for r in res.reports)
+        assert overlapped > 0, f"pipelined kmeans never overlapped on {name}"
+        row = _aggregate_row(pol, f"{name}-pipelined", warm, res)
+        row["wall_s"] = round(median(pipes), 5)
+        row["barriered_wall_s"] = round(median(bars), 5)
+        rows.append(row)
+        ex.close()
     return rows
 
 

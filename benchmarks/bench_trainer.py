@@ -14,6 +14,8 @@ invocation overhead increases").
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -97,6 +99,136 @@ def smoke() -> list[dict]:
             "remote_dispatches": 0,
             "shm_bytes": 0,
             "retries": 0,
+            "jobs": 0,
+            "resumes": 0,
+            "overlapped_launches": 0,
+        })
+    rows.extend(_pipelined_sgd_rows())
+    return rows
+
+
+# -- pipelined training step (DESIGN.md §14) ---------------------------------
+#
+# The Trainer's inner loop is pure jitted JAX, so the pipelined-iteration
+# axis is exercised at the level the paper targets: an executor-driven
+# gradient-accumulation loop where each optimizer step is one execute —
+# map_blocks computes per-microbatch (loss·n, grad·n, n) partials, reduce
+# folds them, and the SGD update rides on the merged value.  Pipelined,
+# the next step's execute is submitted before the current one finishes
+# (params carried as a Deferred), which is exactly the
+# parameter-broadcast-gated overlap a distributed trainer needs.
+
+
+_SGD_LR = 0.05
+
+
+def _sgd_block(b, w):
+    """Per-microbatch partials: (loss·n, grad·n, n, w).
+
+    The current params ride along in the partials so the post-merge update
+    is a *pure function of the merged value* — exactly what ``fut.map``
+    needs to chain steps without re-entering the executor.
+    """
+    y = b.sum(axis=1)  # deterministic target: recoverable by w = ones
+    err = b @ w - y
+    n = jnp.asarray(float(b.shape[0]))
+    return (err @ err, b.T @ err * 2.0, n, w)
+
+
+def _sgd_combine(a, b):
+    return (a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3])
+
+
+def _sgd_step(partials):
+    """SGD update from merged partials: w - lr · Σgrad / Σn."""
+    _loss, gsum, n, w = partials
+    return w - _SGD_LR * gsum / n
+
+
+def _pipelined_sgd_rows() -> list[dict]:
+    """Depth-2 pipelined SGD steps vs the barriered loop: params bit-equal.
+
+    Structural acceptance mirrors the kmeans pipelined rows: on both the
+    Threaded and Cluster backends, final params must match the barriered
+    run bit-for-bit (same TaskGraph, same fold order, update applied to
+    the same merged partials) and every step past the first must overlap
+    with its predecessor.  Both arms are warmed and timed whole-loop;
+    ``barriered_wall_s`` rides in the row next to the pipelined
+    ``wall_s`` so the per-step barrier cost the pipeline removes is
+    visible in the same row (informational, never baseline-diffed).
+    """
+    from repro.api import ClusterExecutor, Collection, SplIter, ThreadedExecutor
+    from repro.api.futures import resolve_deferred
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.random((512, 8), np.float32))
+    w0 = jnp.zeros((8,), jnp.float32)
+    steps = 3
+    pol = SplIter(partitions_per_location=2)
+
+    def step_plan(w):
+        return (Collection.from_array(x, block_rows=64, num_locations=2)
+                .split(pol)
+                .map_blocks(_sgd_block, extra_args=(w,))
+                .reduce(_sgd_combine))
+
+    def barriered(ex):
+        # Barriered reference: compute() per step, update on the host.
+        w = w0
+        reports = []
+        for _ in range(steps):
+            res = step_plan(w).compute(executor=ex)
+            w = _sgd_step(res.value)
+            reports.append(res.report)
+        return w, reports
+
+    def pipelined(ex):
+        # Pipelined: params flow as a Deferred; executes overlap.
+        w_op = w0
+        futs = []
+        for _ in range(steps):
+            fut = step_plan(w_op).compute_async(executor=ex)
+            futs.append(fut)
+            w_op = fut.map(_sgd_step)
+        w = resolve_deferred(w_op)
+        return w, [f.result() for f in futs]
+
+    rows = []
+    for name, ex in (("threaded", ThreadedExecutor()), ("cluster", ClusterExecutor())):
+        try:
+            barriered(ex)  # warm both arms: traces + prepare paid up front
+            pipelined(ex)
+            t0 = time.perf_counter()
+            w_ref, ref_reports = barriered(ex)
+            t_bar = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            w_pipe, results = pipelined(ex)
+            t_pipe = time.perf_counter() - t0
+        finally:
+            ex.close()
+
+        assert bool(jnp.all(w_pipe == w_ref)), (
+            f"pipelined SGD params diverged on {name}"
+        )
+        overlapped = sum(r.report.overlapped_launches for r in results)
+        assert overlapped > 0, f"pipelined SGD steps never overlapped on {name}"
+        reports = [r.report for r in results]
+        rows.append({
+            "policy": "sgd-pipelined",
+            "executor": name,
+            "wall_s": round(t_pipe, 5),
+            "barriered_wall_s": round(t_bar, 5),
+            "dispatches": sum(r.dispatches for r in reports),
+            "merges": sum(r.merges for r in reports),
+            "traces": sum(r.traces for r in reports),
+            "bytes_moved": sum(r.bytes_moved for r in reports),
+            "prep_bytes": sum(r.bytes_moved for r in ref_reports),
+            "remote_dispatches": sum(r.remote_dispatches for r in reports),
+            "shm_bytes": sum(r.shm_bytes for r in reports),
+            "retries": sum(r.retries for r in reports),
+            "jobs": 0,
+            "resumes": 0,
+            "overlapped_launches": overlapped,
         })
     return rows
 

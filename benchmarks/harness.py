@@ -144,6 +144,7 @@ def report_row(
         "ipc_bytes": report.ipc_bytes,
         "shm_bytes": report.shm_bytes,
         "retries": report.retries,
+        "overlapped_launches": report.overlapped_launches,
     }
 
 

@@ -51,6 +51,10 @@ import time
 #: pickle/numpy versions.  ``jobs`` and ``resumes`` pin the JobServer
 #: rows: how many submissions one app run multiplexes is structural, and
 #: a non-zero resume count in a no-kill smoke run is a bug.
+#: ``overlapped_launches`` pins the pipelined rows (DESIGN.md §14): the
+#: overlap count is frozen at submit time — a pure function of the app's
+#: call order, not of host speed — so a regression that silently stops
+#: iterations from overlapping (count → 0) fails the diff.
 STRUCTURAL = (
     "dispatches",
     "merges",
@@ -62,6 +66,7 @@ STRUCTURAL = (
     "retries",
     "jobs",
     "resumes",
+    "overlapped_launches",
 )
 
 

@@ -192,6 +192,37 @@ def main():
         print("  bob:", ev)
     server.close()                                   # drains, then stops
 
+    # -- 13. pipelined iteration: kill the per-execute barrier --------------------
+    # An iterative loop migrates in two lines: ``.compute(...)`` becomes
+    # ``.compute_async(...)``, and the loop-carried value becomes
+    # ``fut.map(...)`` — a lazy Deferred the next iteration consumes as an
+    # operand.  Consecutive executes now OVERLAP: iteration k+1's units
+    # launch the moment their same-partition k predecessors (and k's merge
+    # fold) finish, no global drain — while results stay bit-identical and
+    # every future's report stays exact for its own execute.
+    def weighted_sum(block, w):          # w is the loop-carried operand
+        return (block * w).sum(axis=0)
+
+    scale = lambda v: v / x.num_rows
+
+    tex = ThreadedExecutor()
+    w = jnp.ones((5,))                                        # barriered loop
+    for _ in range(3):
+        res = (col.split(SplIter()).map_blocks(weighted_sum, extra_args=(w,))
+               .reduce(combine).compute(executor=tex))
+        w = scale(res.value)
+
+    w_op, futs = jnp.ones((5,)), []                           # pipelined loop
+    for _ in range(3):
+        fut = (col.split(SplIter()).map_blocks(weighted_sum, extra_args=(w_op,))
+               .reduce(combine).compute_async(executor=tex))  # changed line 1
+        futs.append(fut)
+        w_op = fut.map(scale)                                 # changed line 2
+    reports = [f.result().report for f in futs]
+    print(f"pipelined: bit_identical={bool(jnp.all(w_op.resolve() == w))} "
+          f"overlapped_launches={[r.overlapped_launches for r in reports]}")
+    tex.close()
+
 
 if __name__ == "__main__":
     main()

@@ -70,6 +70,7 @@ from repro.api.executors import (
     SharedAssets,
     ThreadedExecutor,
 )
+from repro.api.futures import ComputeFuture, Deferred, PipelineBrokenError
 from repro.api.jobclient import JobClient
 from repro.api.jobserver import Job, JobEvent, JobFailedError, JobRejected, JobServer
 from repro.api.journal import JobJournal
@@ -101,6 +102,9 @@ from repro.api.stream_executor import StreamExecutor
 __all__ = [
     "Collection",
     "ComputeResult",
+    "ComputeFuture",
+    "Deferred",
+    "PipelineBrokenError",
     "Executor",
     "LocalExecutor",
     "ThreadedExecutor",

@@ -258,11 +258,21 @@ class _WorkerHandle:
 
 
 class _DrainContext:
-    """Per-_drain bookkeeping shared with the (reentrant) reply pump."""
+    """Per-graph scheduling context, registered in the executor's
+    epoch-keyed ``_contexts`` map.
 
-    def __init__(self, state: _SchedulerState, epoch: int):
+    One context per in-flight TaskGraph: the synchronous ``execute`` path
+    opens exactly one for the duration of its drain, while pipelined
+    submissions (DESIGN.md §14) keep one open per unresolved entry — the
+    reply pump routes each unit reply to its context by epoch, so two
+    iterations' units can interleave on the same worker pool with their
+    costs billed to the right per-execute report.
+    """
+
+    def __init__(self, state: _SchedulerState, epoch: int, report):
         self.state = state
         self.epoch = epoch
+        self.report = report
         self.ready: collections.deque[_Unit] = collections.deque()
         self.replays: collections.deque[_Unit] = collections.deque()
         self.inflight: dict[int, _Unit] = {}
@@ -327,7 +337,18 @@ class ClusterExecutor(_PlanExecutor):
     reused across ``execute`` calls; :meth:`close` is idempotent (it
     unlinks every shared-memory segment) and also runs from the shared
     atexit sweep.
+
+    Pipelined iteration (DESIGN.md §14): ``execute_async`` keeps up to
+    ``pipeline_depth`` submissions in flight, each with its own
+    :class:`_DrainContext`; the reply pump routes unit replies to their
+    context by epoch, so iteration k+1's units dispatch the moment their
+    same-partition k predecessors reply — no global drain between
+    executes.  All driving happens on the submitting (driver) thread:
+    progress is made whenever the application submits, resolves a future,
+    or the executor drains.
     """
+
+    _pipelined = True
 
     def __init__(
         self,
@@ -385,10 +406,12 @@ class ClusterExecutor(_PlanExecutor):
         self._call_results: dict[int, tuple] = {}
         self._pending_calls: set[int] = set()  # issued, not yet resolved
         self._outstanding: dict[int, int] = {}  # wid -> un-replied commands
-        # wid -> staged (attach_msgs, unit_msg, unit) entries, flushed as
-        # one batched send per sweep (see _flush_outbox).
+        # wid -> staged (attach_msgs, unit_msg, unit, ctx) entries, flushed
+        # as one batched send per sweep (see _flush_outbox).
         self._outbox: dict[int, list] = {}
-        self._active: _DrainContext | None = None
+        # epoch -> live _DrainContext, in open order.  The sync path keeps
+        # exactly one; pipelined submissions keep one per in-flight entry.
+        self._contexts: dict[int, _DrainContext] = {}
         if log_dir:
             os.makedirs(log_dir, exist_ok=True)
         _LIVE_POOLS.add(self)
@@ -478,13 +501,16 @@ class ClusterExecutor(_PlanExecutor):
 
     # -- the Executor entry points --------------------------------------------
 
-    def execute(self, plan):
-        # Hand off chunk stores before scheduling.  manifest() is shm-first
-        # and incremental: resident chunks export as segment descriptors
-        # (no disk write), already-spilled chunks reuse their files, and a
-        # grown store contributes only the chunks this driver has not seen
-        # — workers then receive exactly the per-worker delta through
-        # _stage_attaches, so re-attach after growth is O(new chunks).
+    def _handoff_stores(self, plan) -> None:
+        """Hand off chunk stores before scheduling.
+
+        ``manifest()`` is shm-first and incremental: resident chunks
+        export as segment descriptors (no disk write), already-spilled
+        chunks reuse their files, and a grown store contributes only the
+        chunks this driver has not seen — workers then receive exactly
+        the per-worker delta through ``_stage_attaches``, so re-attach
+        after growth is O(new chunks).
+        """
         for store in chunk_stores(plan.spec.inputs):
             manifest = getattr(store, "manifest", None)
             if manifest is None:
@@ -496,7 +522,14 @@ class ClusterExecutor(_PlanExecutor):
                 self._manifests[delta.uid] = delta
             else:
                 full.chunks.update(delta.chunks)
+
+    def execute(self, plan):
+        self._handoff_stores(plan)
         return super().execute(plan)
+
+    def execute_async(self, plan):
+        self._handoff_stores(plan)
+        return super().execute_async(plan)
 
     def task(self, fn: Callable, *, key: Hashable = None) -> Callable:
         """Register a driver-level task; referencable fns dispatch remotely.
@@ -532,7 +565,9 @@ class ClusterExecutor(_PlanExecutor):
             block, materialize=lambda: np.asarray(resolve_chunk(block))
         )
         if wrote:
-            self.engine.report.shm_bytes += wrote
+            # current_report: exports fire inside a dispatch sweep, which
+            # binds the owning context's per-execute report.
+            self.engine.current_report.shm_bytes += wrote
         return ref
 
     def _manifest_export(self, store):
@@ -551,7 +586,7 @@ class ClusterExecutor(_PlanExecutor):
                 arr, key=("chunk", store.uid, cid), min_bytes=0, lock=True
             )
             if wrote:
-                self.engine.report.shm_bytes += wrote
+                self.engine.current_report.shm_bytes += wrote
             return ref
 
         return export
@@ -598,7 +633,7 @@ class ClusterExecutor(_PlanExecutor):
             self._attached[(worker.id, uid)] = set(manifest.chunks)
         return msgs
 
-    def _await_window(self, worker: _WorkerHandle, ctx: _DrainContext | None) -> bool:
+    def _await_window(self, worker: _WorkerHandle) -> bool:
         """Pump replies until ``worker`` has no un-replied command in flight.
 
         The one-command-per-worker window is the deadlock guard for the
@@ -613,7 +648,7 @@ class ClusterExecutor(_PlanExecutor):
             if worker.id not in self._workers or not worker.alive():
                 self._on_worker_death(worker.id)
                 return False
-            self._pump(ctx)
+            self._pump()
         return worker.id in self._workers
 
     def _dispatch_remote(
@@ -663,10 +698,10 @@ class ClusterExecutor(_PlanExecutor):
                 self._shm.pin_refs(refs)
                 ctx.shm_pins[unit.index] = refs
         msg = ("unit", ctx.epoch, spec, ctx.state.attempts[unit.index] - 1)
-        self._outbox.setdefault(worker.id, []).append((attaches, msg, unit))
+        self._outbox.setdefault(worker.id, []).append((attaches, msg, unit, ctx))
         return True
 
-    def _flush_outbox(self, ctx: _DrainContext) -> None:
+    def _flush_outbox(self) -> None:
         """Ship every staged queue whose target worker's window is empty.
 
         One ``send_bytes`` per worker carries its attach messages plus all
@@ -677,6 +712,11 @@ class ClusterExecutor(_PlanExecutor):
         is itself blocked writing a reply.  ``_outstanding`` then counts
         one window slot per unit in the batch; the window reopens when the
         last reply lands.
+
+        A batch may mix units from several live contexts (pipelined
+        iterations sharing a worker); its serialized bytes bill to the
+        first staged entry's report — deterministic, and report sums stay
+        exact across the pipeline.
         """
         for wid in list(self._outbox):
             if self._outstanding.get(wid, 0) > 0:
@@ -686,7 +726,9 @@ class ClusterExecutor(_PlanExecutor):
                 self._on_worker_death(wid)  # staged units are assigned: replayed
                 continue
             entries = self._outbox.pop(wid)
-            msgs = [m for attaches, msg, _unit in entries for m in (*attaches, msg)]
+            msgs = [
+                m for attaches, msg, _unit, _ctx in entries for m in (*attaches, msg)
+            ]
             payload = pickle.dumps(msgs[0] if len(msgs) == 1 else ("batch", msgs))
             t0 = time.perf_counter()
             try:
@@ -699,80 +741,165 @@ class ClusterExecutor(_PlanExecutor):
                 continue
             send_s = time.perf_counter() - t0
             self._outstanding[wid] = self._outstanding.get(wid, 0) + len(entries)
-            self.engine.report.ipc_bytes += sent
-            for _attaches, _msg, unit in entries:
-                ctx.meta[unit.index] = (t0, send_s)
-                ctx.inflight[unit.index] = unit
+            entries[0][3].report.ipc_bytes += sent
+            for _attaches, _msg, unit, ectx in entries:
+                ectx.meta[unit.index] = (t0, send_s)
+                ectx.inflight[unit.index] = unit
 
-    def _drain(self, state: _SchedulerState) -> None:
+    def _open_context(self, state: _SchedulerState, report) -> _DrainContext:
         self._epoch += 1
-        ctx = _DrainContext(state, self._epoch)
-        ctx.ready.extend(state.initial_ready())
-        prev = self._active
-        self._active = ctx
-        try:
-            while not state.errors:
-                # Dispatch sweep: replays first (retry urgency), then fresh
-                # ready units.  A unit whose target worker still has a
-                # command in flight is deferred to the next sweep — the
-                # pump in between is what closes the window again.
-                deferred: list[_Unit] = []
-                while ctx.replays and not state.errors:
-                    unit = ctx.replays.popleft()
-                    if state.is_done(unit.index):
-                        continue  # a salvaged duplicate reply beat the replay
-                    if not self._dispatch_remote(unit, ctx, prefer_survivor=True):
-                        deferred.append(unit)
-                ctx.replays.extend(deferred)
-                deferred = []
-                while ctx.ready and not state.errors:
-                    unit = ctx.ready.popleft()
-                    if self._remotable(unit):
-                        if not self._dispatch_remote(unit, ctx):
-                            deferred.append(unit)
-                    else:
-                        # In-process unit (merge fold, driver view).  Runs
-                        # on the calling thread; its task() dispatches may
-                        # themselves be remote RPCs, which pump this same
-                        # context reentrantly.
-                        ctx.ready.extend(self._run_unit(unit, state))
-                ctx.ready.extend(deferred)
-                self._flush_outbox(ctx)
-                if state.done.is_set() or state.errors:
-                    break
-                if (
-                    not ctx.inflight
-                    and not ctx.ready
-                    and not ctx.replays
-                    and not self._outbox
-                ):
-                    break  # nothing left to wait for (defensive)
-                self._pump(ctx)
-        finally:
-            # Error path: staged-but-unflushed units (the break above can
-            # skip a flush) and in-flight units both hold pins — drop them.
-            for entries in self._outbox.values():
-                for _attaches, _msg, unit in entries:
+        ctx = _DrainContext(state, self._epoch, report)
+        self._contexts[ctx.epoch] = ctx
+        return ctx
+
+    def _close_context(self, ctx: _DrainContext) -> None:
+        """Deregister a context; drop every pin its dispatches still hold.
+
+        Error path included: staged-but-unflushed units (an aborted sweep
+        can skip a flush) and in-flight units both hold chunk pins and shm
+        reference pins — release exactly this context's, leaving sibling
+        contexts' staged work untouched.
+        """
+        for wid, entries in list(self._outbox.items()):
+            keep = [e for e in entries if e[3] is not ctx]
+            for _attaches, _msg, unit, ectx in entries:
+                if ectx is ctx:
                     ctx.inflight.pop(unit.index, None)
                     self._release_unit(unit)
-            self._outbox.clear()
-            for unit in ctx.inflight.values():
-                self._release_unit(unit)
-            ctx.inflight.clear()
-            if self._shm is not None:
-                for refs in ctx.shm_pins.values():
-                    self._shm.unpin_refs(refs)
-            ctx.shm_pins.clear()
-            self._active = prev
+            if keep:
+                self._outbox[wid] = keep
+            else:
+                del self._outbox[wid]
+        for unit in ctx.inflight.values():
+            self._release_unit(unit)
+        ctx.inflight.clear()
+        if self._shm is not None:
+            for refs in ctx.shm_pins.values():
+                self._shm.unpin_refs(refs)
+        ctx.shm_pins.clear()
+        self._contexts.pop(ctx.epoch, None)
+
+    def _sweep_context(self, ctx: _DrainContext) -> None:
+        """One dispatch sweep: replays first (retry urgency), then fresh
+        ready units.  A unit whose target worker still has a command in
+        flight is deferred to the next sweep — the pump in between is what
+        closes the window again.  Runs under the context's report binding
+        so operand exports and in-process dispatches bill per execute.
+        """
+        state = ctx.state
+        with self.engine.bind_report(ctx.report):
+            deferred: list[_Unit] = []
+            while ctx.replays and not state.errors:
+                unit = ctx.replays.popleft()
+                if state.is_done(unit.index):
+                    continue  # a salvaged duplicate reply beat the replay
+                if not self._dispatch_remote(unit, ctx, prefer_survivor=True):
+                    deferred.append(unit)
+            ctx.replays.extend(deferred)
+            deferred = []
+            while ctx.ready and not state.errors:
+                unit = ctx.ready.popleft()
+                if self._remotable(unit):
+                    if not self._dispatch_remote(unit, ctx):
+                        deferred.append(unit)
+                else:
+                    # In-process unit (merge fold, driver view).  Runs
+                    # on the calling thread; its task() dispatches may
+                    # themselves be remote RPCs, which pump this same
+                    # context reentrantly.
+                    ctx.ready.extend(self._run_unit(unit, state))
+            ctx.ready.extend(deferred)
+
+    def _sweep_all(self) -> None:
+        """Sweep every live context, then flush the staged batches."""
+        for ctx in list(self._contexts.values()):
+            if ctx.ready or ctx.replays:
+                self._sweep_context(ctx)
+        self._flush_outbox()
+
+    def _any_work(self) -> bool:
+        """Anything in flight, staged, or dispatchable across all contexts."""
+        if self._outbox:
+            return True
+        return any(
+            c.inflight or c.ready or c.replays for c in self._contexts.values()
+        )
+
+    def _drain(self, state: _SchedulerState) -> None:
+        ctx = self._open_context(state, state.report or self.engine.current_report)
+        ctx.ready.extend(state.initial_ready())
+        try:
+            while not state.errors:
+                self._sweep_all()
+                if state.done.is_set() or state.errors:
+                    break
+                if not self._any_work():
+                    break  # nothing left to wait for (defensive)
+                self._pump()
+        finally:
+            self._close_context(ctx)
+
+    # -- pipelined execution (DESIGN.md §14) -----------------------------------
+
+    def _start_entry(self, entry, prev) -> None:
+        """Open a context for a pipelined submission and push what's ready.
+
+        Gated units land in the context's ready queue when their
+        cross-iteration predecessors complete (the gate callbacks fire
+        inside the reply pump's ``state.complete``); ungated units land
+        immediately.  A drain-replies + sweep here gives freshly admitted
+        work its first chance to dispatch without waiting for the next
+        ``result()`` drive.
+        """
+        ctx = self._open_context(entry.state, entry.report)
+        entry.ctx = ctx
+
+        def launch(unit, ctx=ctx):
+            if not ctx.state.errors:
+                ctx.ready.append(unit)
+
+        self._gate_units(entry, prev, launch)
+        self._drain_replies()  # landed replies close windows + fire gates
+        self._sweep_all()
+
+    def _drive_raw(self, entry) -> None:
+        """Pump the event loop until ``entry`` reaches raw completion.
+
+        Sweeps EVERY live context each round: this entry's units may be
+        gated on a previous iteration's, so progress anywhere is progress
+        here.  The entry's context closes once its state settles — pins
+        drop, and later replies for it become stale by epoch.
+        """
+        state = entry.state
+        while not state.done.is_set():
+            self._sweep_all()
+            if state.done.is_set():
+                break
+            if not self._any_work():
+                if not state.done.is_set():
+                    state.fail(
+                        ClusterFailedError(
+                            "pipelined drain stalled: nothing in flight can "
+                            f"complete execute #{entry.iteration}"
+                        )
+                    )
+                break
+            self._pump()
+        ctx = entry.ctx
+        if ctx is not None:
+            entry.ctx = None
+            self._close_context(ctx)
 
     # -- the reply pump / supervisor ------------------------------------------
 
-    def _pump(self, ctx: _DrainContext | None) -> None:
+    def _pump(self) -> None:
         """Process one reply quantum, then sweep worker liveness.
 
         Waits on every live worker's reply connection at once; a readable
         connection yields either a message or EOF (the worker died with
-        the pipe torn) — EOF folds straight into the death path.
+        the pipe torn) — EOF folds straight into the death path.  Replies
+        route to their context by epoch, so one pump serves every live
+        context (pipelined iterations included).
         """
         by_conn = {w.reply: w for w in self._workers.values()}
         try:
@@ -788,7 +915,7 @@ class ClusterExecutor(_PlanExecutor):
             except (EOFError, OSError):
                 self._on_worker_death(worker.id)
                 continue
-            self._on_reply(payload, ctx)
+            self._on_reply(payload)
         self._check_workers()
 
     def _drain_replies(self) -> None:
@@ -799,12 +926,12 @@ class ClusterExecutor(_PlanExecutor):
             for worker in list(self._workers.values()):
                 try:
                     while worker.reply.poll(0):
-                        self._on_reply(worker.reply.recv_bytes(), self._active)
+                        self._on_reply(worker.reply.recv_bytes())
                         progressed = True
                 except (EOFError, OSError):
                     self._on_worker_death(worker.id)
 
-    def _on_reply(self, payload: bytes, ctx: _DrainContext | None) -> None:
+    def _on_reply(self, payload: bytes) -> None:
         msg = pickle.loads(payload)
         kind, wid = msg[0], msg[1]
         if wid in self._workers:  # never resurrect a buried worker's heartbeat
@@ -819,12 +946,14 @@ class ClusterExecutor(_PlanExecutor):
                 if kind == "call_done":
                     shm.discard_tree(msg[4])  # its segments, or they leak
                 return  # superseded call (replayed after a death): drop it
-            self.engine.report.ipc_bytes += len(payload)
+            self.engine.current_report.ipc_bytes += len(payload)
             self._call_results[msg[3]] = msg
             return
-        # unit replies need an active drain of the same epoch
+        # unit replies route to their context by epoch; no live context of
+        # that epoch (an earlier run, or one already closed) means stale
         epoch, index = msg[2], msg[3]
-        stale = ctx is None or epoch != ctx.epoch or ctx.state.is_done(index)
+        ctx = self._contexts.get(epoch)
+        stale = ctx is None or ctx.state.errors or ctx.state.is_done(index)
         unit = None if stale else ctx.inflight.pop(index, None)
         if unit is None:
             # Stale: an earlier run, or a duplicate after replay.  A
@@ -832,7 +961,7 @@ class ClusterExecutor(_PlanExecutor):
             if kind == "unit_done":
                 shm.discard_tree(msg[4])
             return
-        self.engine.report.ipc_bytes += len(payload)
+        ctx.report.ipc_bytes += len(payload)
         self._release_unit(unit)
         if self._shm is not None:
             refs = ctx.shm_pins.pop(index, None)
@@ -859,7 +988,7 @@ class ClusterExecutor(_PlanExecutor):
         _, _, _, _, result, loaded, shm_wrote = msg
         result, _segs = shm.unpack_tree(result)  # consume-and-unlink
         value = jax.tree.map(np.asarray, result)
-        report = self.engine.report
+        report = ctx.report
         report.dispatches += 1
         report.remote_dispatches += 1
         report.bytes_loaded += loaded
@@ -903,7 +1032,7 @@ class ClusterExecutor(_PlanExecutor):
         # keeps "died after finishing" from being replayed needlessly.
         try:
             while handle.reply.poll(0):
-                self._on_reply(handle.reply.recv_bytes(), self._active)
+                self._on_reply(handle.reply.recv_bytes())
         except (EOFError, OSError):
             pass  # torn end of the pipe: nothing more to salvage
         finally:
@@ -917,39 +1046,43 @@ class ClusterExecutor(_PlanExecutor):
         # prefix sweep reaps anything the worker packed but never sent.
         if handle.result_prefix:
             shm.sweep_segments(handle.result_prefix)
-        ctx = self._active
-        if ctx is None:
-            return
-        lost = ctx.state.requeue(wid)
-        for unit in lost:
-            ctx.inflight.pop(unit.index, None)
-            # Release-on-requeue: the dead dispatch's pins must not outlive
-            # it, or the store could never evict the chunks (or segments)
-            # it holds.  The replay's own dispatch re-pins.
-            self._release_unit(unit)
-            if self._shm is not None:
-                refs = ctx.shm_pins.pop(unit.index, None)
-                if refs:
-                    self._shm.unpin_refs(refs)
-            task = unit.tasks[0]
-            ctx.record_failure(unit.index, wid, cause, handle.log_path)
-            if ctx.state.attempts[unit.index] > self.max_retries:
-                ctx.state.fail(
-                    ClusterFailedError(
-                        f"task {key_summary(task.key)} (blocks={task.block_ids}) "
-                        f"poisoned: {ctx.state.attempts[unit.index]} attempts "
-                        f"died with their workers (max_retries="
-                        f"{self.max_retries})",
-                        task_key=key_summary(task.key),
-                        **ctx.error_kwargs(unit.index),
+        # Requeue the dead worker's units across EVERY live context: with
+        # pipelined iterations in flight the worker may have owned units
+        # from several graphs at once.
+        for ctx in list(self._contexts.values()):
+            lost = ctx.state.requeue(wid)
+            for unit in lost:
+                if ctx.state.errors:
+                    break  # poisoned: _close_context releases the rest
+                ctx.inflight.pop(unit.index, None)
+                # Release-on-requeue: the dead dispatch's pins must not
+                # outlive it, or the store could never evict the chunks (or
+                # segments) it holds.  The replay's own dispatch re-pins.
+                self._release_unit(unit)
+                if self._shm is not None:
+                    refs = ctx.shm_pins.pop(unit.index, None)
+                    if refs:
+                        self._shm.unpin_refs(refs)
+                task = unit.tasks[0]
+                ctx.record_failure(unit.index, wid, cause, handle.log_path)
+                if ctx.state.attempts[unit.index] > self.max_retries:
+                    ctx.state.fail(
+                        ClusterFailedError(
+                            f"task {key_summary(task.key)} "
+                            f"(blocks={task.block_ids}) poisoned: "
+                            f"{ctx.state.attempts[unit.index]} attempts "
+                            f"died with their workers (max_retries="
+                            f"{self.max_retries})",
+                            task_key=key_summary(task.key),
+                            **ctx.error_kwargs(unit.index),
+                        )
                     )
-                )
-                return
-            self.engine.report.retries += 1
-            # Enqueue, don't dispatch: this may run deep inside a _pump —
-            # the drain sweep replays the unit once control unwinds, so
-            # death handling never nests a send inside a send.
-            ctx.replays.append(unit)
+                    break
+                ctx.report.retries += 1
+                # Enqueue, don't dispatch: this may run deep inside a _pump
+                # — the drain sweep replays the unit once control unwinds,
+                # so death handling never nests a send inside a send.
+                ctx.replays.append(unit)
 
     # -- driver-level remote calls --------------------------------------------
 
@@ -963,7 +1096,7 @@ class ClusterExecutor(_PlanExecutor):
         ``ipc_bytes`` win for RPC-shaped apps.  The pins span the whole
         call including replays: a retried call reuses the same refs.
         """
-        report = self.engine.report
+        report = self.engine.current_report
         arg_refs: list[ShmBlockRef] = []
         if self._shm is not None:
             exported = []
@@ -986,7 +1119,7 @@ class ClusterExecutor(_PlanExecutor):
                 self._shm.unpin_refs(arg_refs)
 
     def _remote_call_loop(self, fn_ref: tuple, payload_args: tuple, key_repr: str):
-        report = self.engine.report
+        report = self.engine.current_report
         failures = 0
         history: list[dict] = []
 
@@ -999,12 +1132,11 @@ class ClusterExecutor(_PlanExecutor):
             }
 
         while True:
-            if self._active is not None:
-                # Pending batches first: the window invariant (send only to
-                # a worker parked in recv) must hold for THIS send too.
-                self._flush_outbox(self._active)
+            # Pending batches first: the window invariant (send only to
+            # a worker parked in recv) must hold for THIS send too.
+            self._flush_outbox()
             worker = self._survivor() or self._worker_for(0)
-            if not self._await_window(worker, self._active):
+            if not self._await_window(worker):
                 continue  # died while we waited for its window: re-resolve
             call_id = next(self._call_seq)
             payload = pickle.dumps(
@@ -1038,7 +1170,7 @@ class ClusterExecutor(_PlanExecutor):
                     self._on_worker_death(worker.id)
                     self._drain_replies()
                     break
-                self._pump(self._active)
+                self._pump()
             msg = self._call_results.pop(call_id, None)
             self._pending_calls.discard(call_id)  # resolved or abandoned: done
             if msg is None:  # worker died mid-call: replay on a survivor
@@ -1087,6 +1219,10 @@ class ClusterExecutor(_PlanExecutor):
         reply segment a worker packed but whose message was never consumed
         — so no ``/dev/shm`` entry outlives the executor.
         """
+        # In-flight pipelined submissions drain first (while the pool is
+        # still up); their outcomes stay on their futures.
+        self._drain_pipeline()
+        self._contexts.clear()
         workers = list(self._workers.values())
         self._workers.clear()
         self._by_location.clear()

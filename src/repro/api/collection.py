@@ -160,5 +160,23 @@ class Collection:
         ex = executor if executor is not None else LocalExecutor()
         return ex.execute(self.plan())
 
+    def compute_async(self, executor: Executor | None = None) -> "ComputeFuture":
+        """Submit the plan without waiting — pipelined iteration (§14).
+
+        On a pipelined backend (``ThreadedExecutor``, ``ClusterExecutor``,
+        ``StreamExecutor``) consecutive ``compute_async`` submissions
+        overlap: the next iteration's units launch as their same-partition
+        predecessors finish, with no per-execute barrier.  The returned
+        :class:`~repro.api.futures.ComputeFuture` yields the usual
+        :class:`~repro.api.executors.ComputeResult` from ``result()``, and
+        ``fut.map(fn)`` derives a lazy
+        :class:`~repro.api.futures.Deferred` usable as the next
+        iteration's ``extra_args`` operand (the loop-carried value).
+        Non-pipelined backends execute synchronously and return an
+        already-completed future — same results, same code.
+        """
+        ex = executor if executor is not None else LocalExecutor()
+        return ex.execute_async(self.plan())
+
     def __repr__(self) -> str:  # pragma: no cover
         return f"Collection<{type(self._node).__name__}>"

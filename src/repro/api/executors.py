@@ -88,6 +88,7 @@ import jax.numpy as jnp
 
 from repro.api.autotune import Autotuner
 from repro.api.chunkstore import chunk_stores
+from repro.api.futures import ComputeFuture, Deferred, PipelineBrokenError
 from repro.api.lowering import (
     Capabilities,
     MergeSpec,
@@ -95,8 +96,10 @@ from repro.api.lowering import (
     PlacedGroup,
     Task,
     TaskGraph,
+    cross_iteration_edges,
     inputs_signature,
     lower,
+    partition_key,
     stable_task_key,
     stacked_fold,
 )
@@ -110,6 +113,9 @@ from repro.core.spliter import stripe_local_blocks
 
 __all__ = [
     "ComputeResult",
+    "ComputeFuture",
+    "Deferred",
+    "PipelineBrokenError",
     "PartitionView",
     "Executor",
     "LocalExecutor",
@@ -136,10 +142,13 @@ class ComputeResult:
 class Executor(Protocol):
     """The contract every execution backend satisfies (DESIGN.md §5).
 
-    ``execute`` runs a validated plan; ``task`` registers out-of-plan app
-    stages against the same jit cache and accounting; ``report`` exposes
-    the current :class:`~repro.core.engine.EngineReport`.  All five
-    backends are structural instances:
+    ``execute`` runs a validated plan; ``execute_async`` submits one and
+    returns a :class:`~repro.api.futures.ComputeFuture` (pipelined backends
+    overlap consecutive submissions — DESIGN.md §14; the rest complete it
+    synchronously); ``task`` registers out-of-plan app stages against the
+    same jit cache and accounting; ``report`` exposes the current
+    :class:`~repro.core.engine.EngineReport`.  All five backends are
+    structural instances:
 
     >>> from repro.api import (Executor, LocalExecutor, ThreadedExecutor,
     ...                        MeshExecutor, StreamExecutor, ClusterExecutor)
@@ -150,6 +159,8 @@ class Executor(Protocol):
     """
 
     def execute(self, plan: ExecutionPlan) -> ComputeResult: ...
+
+    def execute_async(self, plan: ExecutionPlan) -> ComputeFuture: ...
 
     def task(self, fn: Callable, *, key: Hashable = None) -> Callable: ...
 
@@ -271,7 +282,7 @@ def _merge_partials(engine: TaskEngine, merge: MergeSpec, partials: list[Any]) -
         return partials[0]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *partials)
     out = engine.task(stacked_fold(merge.combine), key=merge.key)(stacked)
-    engine.report.merges += 1
+    engine.current_report.merges += 1
     return out
 
 
@@ -307,10 +318,29 @@ class _SchedulerState:
     Owners are opaque hashables; the hooks are what make fault-tolerant
     backends (ClusterExecutor) a scheduling concern instead of a fork of
     the core.
+
+    Pipelined executes (DESIGN.md §14) add three things:
+
+    * ``report`` — the :class:`~repro.core.engine.EngineReport` this
+      graph's units bill (``None``: the engine's current report, the
+      synchronous path).  With several graphs in flight, billing must ride
+      with the graph, not with whichever report the engine points at.
+    * per-unit / completion *subscriptions* — :meth:`subscribe` /
+      :meth:`on_all_done` / :meth:`on_fail`: how the NEXT iteration's
+      gated units learn their cross-iteration predecessors finished.
+      :meth:`complete` fires unit subscriptions before completion
+      subscriptions before ``done.set()``, all outside the lock — so a
+      dependent iteration's launch is enqueued before the completed
+      iteration's future can resolve, and the overlap is deterministic.
+    * ``partition_versions`` — the versioned-key counter: for each
+      :func:`~repro.api.lowering.partition_key` this graph covers, which
+      pipelined version of that partition it computes (predecessor's
+      version + 1; first submission: 1).
     """
 
-    def __init__(self, units: list[_Unit]):
+    def __init__(self, units: list[_Unit], report: EngineReport | None = None):
         self.units = units
+        self.report = report
         self.results: list[Any] = [None] * len(units)
         self.errors: list[BaseException] = []
         self._lock = threading.Lock()
@@ -323,6 +353,10 @@ class _SchedulerState:
         self._done_units: set[int] = set()
         self.owner: dict[int, Hashable] = {}        # unit index -> owner
         self.attempts: collections.Counter = collections.Counter()
+        self._unit_subs: dict[int, list[Callable[[], None]]] = {}
+        self._done_subs: list[Callable[[], None]] = []
+        self._fail_subs: list[Callable[[BaseException], None]] = []
+        self.partition_versions: dict[tuple, int] = {}
         self.done = threading.Event()
         if not units:
             self.done.set()
@@ -358,9 +392,46 @@ class _SchedulerState:
                 del self.owner[u.index]
         return lost
 
+    def subscribe(self, index: int, cb: Callable[[], None]) -> bool:
+        """Fire ``cb`` when unit ``index`` completes; False if already done.
+
+        On False the caller runs its callback inline — the unit finished
+        before the subscription landed, so there is nothing to wait for.
+        """
+        with self._lock:
+            if index in self._done_units:
+                return False
+            self._unit_subs.setdefault(index, []).append(cb)
+            return True
+
+    def on_all_done(self, cb: Callable[[], None]) -> None:
+        """Fire ``cb`` once every unit has completed (not on failure)."""
+        with self._lock:
+            if self._remaining > 0:
+                self._done_subs.append(cb)
+                return
+        cb()
+
+    def on_fail(self, cb: Callable[[BaseException], None]) -> None:
+        """Fire ``cb`` on the first failure (immediately if already failed)."""
+        with self._lock:
+            if not self.errors:
+                self._fail_subs.append(cb)
+                return
+            exc = self.errors[0]
+        cb(exc)
+
     def complete(self, unit: _Unit, value: Any) -> list[_Unit]:
-        """Record a result; return units that just became ready."""
+        """Record a result; return units that just became ready.
+
+        Subscription ordering contract (pipelined overlap): unit
+        subscriptions (cross-iteration launches) fire first, then — when
+        this was the last unit — completion subscriptions (the future's raw
+        value), then ``done.set()``.  All fire OUTSIDE the lock, on the
+        completing thread.
+        """
         newly: list[_Unit] = []
+        finished = False
         with self._lock:
             if unit.index in self._done_units:  # duplicate (replayed) result
                 return []
@@ -371,14 +442,68 @@ class _SchedulerState:
                 if self._indegree[di] == 0:
                     newly.append(self.units[di])
             self._remaining -= 1
+            subs = self._unit_subs.pop(unit.index, ())
             if self._remaining == 0:
-                self.done.set()
+                finished = True
+                done_subs, self._done_subs = self._done_subs, []
+        for cb in subs:
+            cb()
+        if finished:
+            for cb in done_subs:
+                cb()
+            self.done.set()
         return newly
 
     def fail(self, exc: BaseException) -> None:
         with self._lock:
             self.errors.append(exc)
+            fail_subs, self._fail_subs = self._fail_subs, []
+        for cb in fail_subs:
+            cb(exc)
         self.done.set()
+
+
+@dataclasses.dataclass
+class _PipelineEntry:
+    """One in-flight pipelined execute (DESIGN.md §14).
+
+    Everything the synchronous ``execute`` keeps on its stack — graph,
+    scheduler state, report, policy/tuner snapshot, store marks, timing —
+    promoted to an object so several executes can be in flight at once.
+    Finalization (:meth:`_PlanExecutor._finalize_entry`) consumes it
+    exactly once.
+    """
+
+    iteration: int
+    graph: TaskGraph
+    state: _SchedulerState
+    merge_index: int | None
+    report: EngineReport
+    future: ComputeFuture
+    policy: ExecutionPolicy
+    tuner: Autotuner | None
+    t0: float
+    t_done: float = 0.0
+    finalized: bool = False
+    result: ComputeResult | None = None
+    store_marks: list = dataclasses.field(default_factory=list)
+    # Backend drive attachments (opaque to the core):
+    ctx: Any = None          # ClusterExecutor: the entry's _DrainContext
+    pending: Any = None      # StreamExecutor: this entry's pending unit deque
+    jobs: Any = None         # StreamExecutor: unit index -> prefetch job
+    draining: bool = False   # StreamExecutor: drain in progress/finished
+
+    def mark_stores(self, stores=None) -> None:
+        """(Re)snapshot the input stores' lifetime counters.
+
+        Pipelined report exactness for chunk I/O is *window-based*: the
+        entry bills the store-counter delta between this mark and its
+        finalization.  Backends that begin real I/O later than submit
+        (StreamExecutor drains entries in order) re-mark at drain start so
+        the window covers exactly this entry's streaming.
+        """
+        src = stores if stores is not None else [s for s, _ in self.store_marks]
+        self.store_marks = [(s, s.stats.snapshot()) for s in src]
 
 
 class _PlanExecutor:
@@ -386,6 +511,14 @@ class _PlanExecutor:
 
     #: bound on cached (inputs, policy) preparations (LRU eviction).
     prepare_cache_size: int = 8
+
+    #: backend overlaps consecutive execute_async submissions (DESIGN.md §14).
+    _pipelined: bool = False
+
+    #: in-flight window for execute_async: admitting a submission beyond
+    #: this many unresolved entries finalizes the oldest first (the PR 5
+    #: flow-control shape, lifted to whole executes).
+    pipeline_depth: int = 2
 
     def __init__(self, engine: TaskEngine | None = None):
         self.engine = engine or TaskEngine()
@@ -398,6 +531,8 @@ class _PlanExecutor:
             collections.OrderedDict()
         )
         self._scope_depth = 0
+        self._pipeline: collections.deque[_PipelineEntry] = collections.deque()
+        self._iteration = 0  # execute_async submit counter (error attribution)
 
     def adopt_shared_assets(self, assets: SharedAssets) -> None:
         """Rebind this executor's caches to server-owned :class:`SharedAssets`.
@@ -430,6 +565,7 @@ class _PlanExecutor:
         return Capabilities(
             name=type(self).__name__,
             prefer_pallas=jax.default_backend() == "tpu",
+            pipelined=self._pipelined,
         )
 
     # -- engine passthroughs -------------------------------------------------
@@ -456,6 +592,11 @@ class _PlanExecutor:
     # -- the Executor entry point --------------------------------------------
 
     def execute(self, plan: ExecutionPlan) -> ComputeResult:
+        # Barrier rule: a synchronous execute never overlaps — any in-flight
+        # pipelined submissions resolve first, in submit order (their
+        # futures keep the outcomes; errors surface there, not here).
+        if self._pipeline:
+            self._drain_pipeline()
         spec = plan.spec
         own_report = self._scope_depth == 0
         if own_report:
@@ -505,6 +646,327 @@ class _PlanExecutor:
         if own_report:
             report.wall_s = dt
         return ComputeResult(value=value, report=report)
+
+    # -- pipelined (asynchronous) execution — DESIGN.md §14 --------------------
+
+    def execute_async(self, plan: ExecutionPlan) -> ComputeFuture:
+        """Submit a plan without draining it; returns a :class:`ComputeFuture`.
+
+        On a pipelined backend (``capabilities.pipelined``) consecutive
+        submissions overlap: each unit of this plan is gated on its
+        same-partition predecessors in the previous in-flight submission
+        (plus any :class:`~repro.api.futures.Deferred` operand's source
+        merge) via :func:`~repro.api.lowering.cross_iteration_edges`, and
+        launches the moment those complete.  At most :attr:`pipeline_depth`
+        submissions stay unresolved; admitting one past the window
+        finalizes the oldest first.
+
+        Everywhere else — non-pipelined backends, inside a :meth:`scope`
+        (one accumulated report means one report window at a time), or
+        during an autotuner *probe* window (profiled walls must never
+        measure overlapped executes; the guard forces depth 1) — this is a
+        synchronous execute wrapped in an already-completed future, so
+        application code is identical either way.
+        """
+        spec = plan.spec
+        if not self.capabilities.pipelined or self._scope_depth:
+            return self._sync_future(plan)
+        policy, tuner = self._resolve_policy(spec)
+        if tuner is not None and tuner.probing:
+            # Probe guard (DESIGN.md §14): a probe iteration's wall feeds
+            # the cost model; overlapping it with a neighbour would record
+            # contended walls and mistune granularity for every later
+            # iteration.  Probes run barriered (depth 1).
+            return self._sync_future(plan)
+        return self._submit_entry(spec, policy, tuner)
+
+    def _sync_future(self, plan: ExecutionPlan) -> ComputeFuture:
+        """The non-overlapping fallback: execute now, return a done future."""
+        self._drain_pipeline()
+        iteration, self._iteration = self._iteration, self._iteration + 1
+        try:
+            result = self.execute(plan)
+        except BaseException as e:  # noqa: BLE001 — surfaced via the future
+            return ComputeFuture.failed(e, iteration=iteration)
+        return ComputeFuture.completed(result, iteration=iteration)
+
+    def _submit_entry(
+        self, spec: MapReduceSpec, policy: ExecutionPolicy, tuner: Autotuner | None
+    ) -> ComputeFuture:
+        # Flow control: the in-flight window is pipeline_depth whole
+        # executes; the oldest entry resolves before a new one is admitted.
+        while len(self._pipeline) >= max(1, int(self.pipeline_depth)):
+            try:
+                self._finalize_entry(self._pipeline[0])
+            except BaseException:  # noqa: BLE001 — kept on the evicted future
+                pass
+
+        prev = self._pipeline[-1] if self._pipeline else None
+        iteration, self._iteration = self._iteration, self._iteration + 1
+        report = EngineReport(mode=spec.policy.mode_name)
+        if (
+            tuner is not None
+            and tuner.last_ppl is not None
+            and policy.partitions_per_location != tuner.last_ppl
+        ):
+            report.retunes += 1
+        t0 = time.perf_counter()
+        # Prepare/lower/build under the entry's report binding so traces
+        # paid at registration time are credited to this submission.
+        with self.engine.bind_report(report):
+            prepared = self._prepare(spec.inputs, policy, report)
+            graph = lower(spec, prepared.arrays, prepared.groups, self.capabilities)
+            units, state, merge_unit = self._build_units(graph, report=report)
+
+        fut = ComputeFuture(iteration=iteration)
+        entry = _PipelineEntry(
+            iteration=iteration,
+            graph=graph,
+            state=state,
+            merge_index=None if merge_unit is None else merge_unit.index,
+            report=report,
+            future=fut,
+            policy=policy,
+            tuner=tuner,
+            t0=t0,
+        )
+        entry.mark_stores(chunk_stores(spec.inputs))
+        fut._finalize = lambda: self._finalize_entry(entry)
+        fut._drive = lambda: self._drive_raw(entry)
+
+        # Versioned keys: each partition this graph covers computes the
+        # next version after its predecessor's (1 on first submission).
+        for t in graph.tasks:
+            k = partition_key(t)
+            base = prev.state.partition_versions.get(k, 0) if prev is not None else 0
+            state.partition_versions[k] = base + 1
+
+        self._wire_future(entry)
+        if prev is not None:
+            self._wire_poison(entry, prev)
+            # Overlap accounting, frozen at SUBMIT time: an earlier
+            # unresolved submission exists, so every unit of this one is
+            # admitted before the previous execute's merge resolution — a
+            # function of the application's call order alone, identical
+            # across backends and runs (a launch-time check against the
+            # previous merge would be a host-speed race).
+            report.overlapped_launches = len(units)
+        self._pipeline.append(entry)
+        self._start_entry(entry, prev)
+        return fut
+
+    def _wire_future(self, entry: _PipelineEntry) -> None:
+        """Raw-phase completion: state outcome → the entry's future."""
+        state, fut = entry.state, entry.future
+        merge_index = entry.merge_index
+
+        def on_done():
+            entry.t_done = time.perf_counter()
+            fut._set_raw(
+                state.results[merge_index]
+                if merge_index is not None
+                else list(state.results)
+            )
+
+        def on_fail(exc: BaseException):
+            entry.t_done = time.perf_counter()
+            fut._set_error(exc)
+
+        state.on_all_done(on_done)
+        state.on_fail(on_fail)
+
+    def _wire_poison(self, entry: _PipelineEntry, prev: _PipelineEntry) -> None:
+        """Failure propagation: an upstream failure poisons this entry.
+
+        The typed error names the originating iteration; gated units that
+        never launched stay unlaunched (their cross-iteration
+        subscriptions simply never fire), and this entry's own failure
+        subscriptions cascade the poison to anything gated on *it*.
+        """
+
+        def poison(exc: BaseException):
+            entry.state.fail(
+                PipelineBrokenError(
+                    f"pipelined execute #{entry.iteration} aborted: upstream "
+                    f"iteration #{prev.iteration} failed: {exc}",
+                    iteration=prev.iteration,
+                )
+            )
+
+        prev.state.on_fail(poison)
+
+    def _gate_units(
+        self,
+        entry: _PipelineEntry,
+        prev: _PipelineEntry | None,
+        launch: Callable[[_Unit], None],
+    ) -> None:
+        """Launch ``entry``'s initially-ready units behind their cross-
+        iteration gates.
+
+        Each unit waits on (a) its same-partition predecessors in ``prev``
+        (:func:`~repro.api.lowering.cross_iteration_edges`; units a retune
+        left unmatched fall back to ``prev``'s merge — correct, just
+        barrier-shaped for that boundary), plus (b) the merge fold of any
+        in-flight submission one of this plan's ``Deferred`` operands
+        resolves against — a hard data dependency, so resolution never
+        blocks inside a dispatch.  Ungated units launch immediately.
+        ``launch`` is the backend's primitive; gate callbacks fire on
+        whichever thread completed the last predecessor.
+        """
+        state = entry.state
+        ready = state.initial_ready()
+        gates: dict[int, list[tuple[_SchedulerState, int]]] = {}
+        if prev is not None:
+            edges = cross_iteration_edges(prev.graph, entry.graph)
+            fallback = (
+                [(prev.state, prev.merge_index)]
+                if prev.merge_index is not None
+                else []
+            )
+            for u in ready:
+                if u.location < 0 or not u.tasks:
+                    continue
+                deps = [(prev.state, i) for i in edges.get(u.index, ())]
+                gates[u.index] = deps if deps else list(fallback)
+        merge_gates: list[tuple[_SchedulerState, int]] = []
+        for e in entry.graph.spec.extra_args:
+            if isinstance(e, Deferred):
+                src = next(
+                    (
+                        p
+                        for p in self._pipeline
+                        if p is not entry and p.future is e.future
+                    ),
+                    None,
+                )
+                if src is not None and src.merge_index is not None:
+                    merge_gates.append((src.state, src.merge_index))
+        if merge_gates:
+            for u in ready:
+                if u.location < 0 or not u.tasks:
+                    continue
+                gates.setdefault(u.index, []).extend(merge_gates)
+
+        for u in ready:
+            seen: set[tuple[int, int]] = set()
+            uniq: list[tuple[_SchedulerState, int]] = []
+            for dep in gates.get(u.index) or ():
+                mark = (id(dep[0]), dep[1])
+                if mark not in seen:
+                    seen.add(mark)
+                    uniq.append(dep)
+            if not uniq:
+                launch(u)
+                continue
+            hold = threading.Lock()
+            left = [len(uniq)]
+
+            def advance(u=u, hold=hold, left=left):
+                with hold:
+                    left[0] -= 1
+                    fire = left[0] == 0
+                if fire:
+                    launch(u)
+
+            for src_state, idx in uniq:
+                if not src_state.subscribe(idx, advance):
+                    advance()  # predecessor already completed
+
+    def _start_entry(
+        self, entry: _PipelineEntry, prev: _PipelineEntry | None
+    ) -> None:  # pragma: no cover — every pipelined backend overrides
+        """Begin executing a submitted entry (pipelined-backend hook)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} declares pipelined capabilities but "
+            "does not implement _start_entry"
+        )
+
+    def _drive_raw(self, entry: _PipelineEntry) -> None:
+        """Make progress until ``entry`` reaches raw completion (hook).
+
+        No-op by default: push-driven backends (ThreadedExecutor) complete
+        entries from their worker threads and waiters just block on the
+        state event.  Cooperative backends (ClusterExecutor,
+        StreamExecutor) override this to pump their event loop / drain
+        queued entries on the calling thread.
+        """
+
+    def _drive_entry(self, entry: _PipelineEntry) -> None:
+        if not entry.state.done.is_set():
+            self._drive_raw(entry)
+            entry.state.done.wait()
+
+    def _finalize_entry(self, entry: _PipelineEntry) -> ComputeResult:
+        """The deferred half of ``execute()``: run exactly once per entry.
+
+        Waits for raw completion, then performs the per-execute bookkeeping
+        the synchronous path does behind its barrier — device sync, store
+        window deltas, granularity stamp, tuner feedback, ``wall_s`` — and
+        seals the entry's ComputeResult.  Raises the entry's failure (the
+        future carries it too).
+        """
+        if not entry.finalized:
+            entry.finalized = True
+            try:
+                self._drive_entry(entry)
+            finally:
+                try:
+                    self._pipeline.remove(entry)
+                except ValueError:
+                    pass
+            state, report = entry.state, entry.report
+            dt = (entry.t_done or time.perf_counter()) - entry.t0
+            report.wall_s = dt
+            if not state.errors:
+                try:
+                    value = (
+                        state.results[entry.merge_index]
+                        if entry.merge_index is not None
+                        else list(state.results)
+                    )
+                    value = jax.block_until_ready(value)
+                except BaseException as e:  # noqa: BLE001 — kept on the future
+                    state.errors.append(e)
+                    entry.future._set_error(e)
+                else:
+                    for store, mark in entry.store_marks:
+                        st = store.stats
+                        report.bytes_loaded += st.bytes_loaded - mark.bytes_loaded
+                        report.bytes_spilled += st.bytes_spilled - mark.bytes_spilled
+                        report.prefetch_hits += st.prefetch_hits - mark.prefetch_hits
+                    if isinstance(entry.policy, SplIter):
+                        report.granularity = entry.policy.partitions_per_location
+                    if entry.tuner is not None:
+                        self._feed_tuner(
+                            entry.tuner,
+                            entry.policy,
+                            entry.graph,
+                            dt,
+                            traced=report.traces > 0,
+                        )
+                    entry.result = ComputeResult(value=value, report=report)
+                    entry.future._result = entry.result
+        if entry.state.errors:
+            raise entry.state.errors[0]
+        return entry.result
+
+    def _drain_pipeline(self) -> None:
+        """Resolve every in-flight pipelined execute, in submit order.
+
+        The pipeline's barrier: ``execute``, ``close`` and the sync
+        fallback call this before doing anything else.  Failures stay on
+        the entries' futures (where the application observes them); the
+        barrier itself never raises another submission's error.
+        """
+        while self._pipeline:
+            entry = self._pipeline[0]
+            try:
+                self._finalize_entry(entry)
+            except BaseException:  # noqa: BLE001 — kept on the entry's future
+                pass
+            if self._pipeline and self._pipeline[0] is entry:
+                self._pipeline.popleft()  # defensive: never spin
 
     def lower(self, plan: ExecutionPlan) -> TaskGraph:
         """Lower a plan for this backend without running it (inspection)."""
@@ -678,9 +1140,13 @@ class _PlanExecutor:
     def close(self) -> None:
         """Release cached preparations and trim their chunk stores.
 
-        Idempotent; backends with extra resources (worker pools, prefetch
-        threads, owned stores) extend it.
+        In-flight pipelined futures drain first (their results stay
+        retrievable through ``result()`` after close) — the clean-shutdown
+        half of the §14 contract.  Idempotent; backends with extra
+        resources (worker pools, prefetch threads, owned stores) extend it
+        and MUST drain the pipeline before stopping whatever executes it.
         """
+        self._drain_pipeline()
         entries = list(self._prepare_cache.values())
         self._prepare_cache.clear()
         self._tuners.clear()
@@ -705,7 +1171,7 @@ class _PlanExecutor:
         ]
 
     def _build_units(
-        self, graph: TaskGraph
+        self, graph: TaskGraph, *, report: EngineReport | None = None
     ) -> tuple[list[_Unit], _SchedulerState, _Unit | None]:
         """TaskGraph → ``(units, state, merge_unit)``, merge closure bound.
 
@@ -728,7 +1194,7 @@ class _PlanExecutor:
                 kind="merge",
             )
             units.append(merge_unit)
-        state = _SchedulerState(units)
+        state = _SchedulerState(units, report=report)
         if merge_unit is not None:
             deps = merge_unit.deps
 
@@ -787,7 +1253,19 @@ class _PlanExecutor:
                 ref.store.unpin(ref)
 
     def _run_unit(self, unit: _Unit, state: _SchedulerState) -> list[_Unit]:
-        """Profiled execution of one ready unit; returns newly-ready units."""
+        """Profiled execution of one ready unit; returns newly-ready units.
+
+        When the state carries its own report (a pipelined entry), the
+        unit's dispatches/merges/traces bill that report via the engine's
+        thread-local binding — several overlapped graphs each keep exact
+        per-execute accounting no matter which thread runs what.
+        """
+        if state.report is not None:
+            with self.engine.bind_report(state.report):
+                return self._run_unit_inner(unit, state)
+        return self._run_unit_inner(unit, state)
+
+    def _run_unit_inner(self, unit: _Unit, state: _SchedulerState) -> list[_Unit]:
         try:
             self._acquire_unit(unit)
             try:
@@ -871,7 +1349,17 @@ class ThreadedExecutor(_PlanExecutor):
     position and the merge unit folds them in plan order (on whichever
     worker completed the last dependency), so the value is bit-identical
     to :class:`LocalExecutor` regardless of thread timing.
+
+    Pipelined (``execute_async``): submissions overlap push-style — gated
+    units are submitted to the location workers from the completion
+    callbacks of their cross-iteration predecessors, so iteration *k+1*
+    starts on a location the moment *k* finishes there.  The pipelined
+    path always routes through the worker pool (never the single-location
+    inline fallback below, which would serialize the overlap on the
+    submitting thread).
     """
+
+    _pipelined = True
 
     def __init__(self, engine: TaskEngine | None = None):
         super().__init__(engine)
@@ -917,8 +1405,41 @@ class ThreadedExecutor(_PlanExecutor):
         for nxt in self._run_unit(unit, state):
             self._submit_unit(nxt, state)
 
+    def _start_entry(
+        self, entry: _PipelineEntry, prev: _PipelineEntry | None
+    ) -> None:
+        state = entry.state
+
+        def launch(unit: _Unit) -> None:
+            if not state.errors:  # poisoned entries stop launching
+                self._submit_unit(unit, state)
+
+        self._gate_units(entry, prev, launch)
+
+    def _on_pool_thread(self) -> bool:
+        cur = threading.current_thread()
+        return any(w._thread is cur for w in self._workers.values())
+
+    def execute_async(self, plan: ExecutionPlan) -> ComputeFuture:
+        if self._on_pool_thread():
+            # Nested submission from inside one of our own units (e.g. a
+            # map_partitions callback): pipelining through the pool would
+            # queue work behind the very unit that is waiting for it.
+            return self._sync_future(plan)
+        return super().execute_async(plan)
+
+    def _drain_pipeline(self) -> None:
+        if self._on_pool_thread():
+            # A pool thread must not block on entries whose units are
+            # queued on itself; the pool keeps draining them regardless.
+            return
+        super()._drain_pipeline()
+
     def close(self) -> None:
         """Stop the worker pool (idempotent; workers respawn on next use)."""
+        # In-flight pipelined entries need the workers to finish; drain
+        # BEFORE stopping the pool (super().close() re-drains: no-op).
+        self._drain_pipeline()
         for w in self._workers.values():
             w.stop()
         self._workers.clear()

@@ -23,6 +23,7 @@ import time
 from typing import Callable, Hashable
 
 from repro.api.executors import ComputeResult
+from repro.api.futures import ComputeFuture
 from repro.api.jobserver import Job, JobFailedError, JobServer
 from repro.api.plan import ExecutionPlan
 from repro.core.engine import EngineReport, TaskEngine
@@ -70,6 +71,21 @@ class JobClient:
     def execute(self, plan: ExecutionPlan) -> ComputeResult:
         """Synchronous submit+wait — what ``Collection.compute`` calls."""
         return self.wait(self.submit(plan))
+
+    def execute_async(self, plan: ExecutionPlan) -> ComputeFuture:
+        """Executor-protocol parity: submit+wait wrapped in a done future.
+
+        Tenant-side pipelining is the server's scheduler's business (jobs
+        from many tenants already interleave at unit granularity), so the
+        client keeps ``execute_async`` synchronous — application code
+        written against the future surface runs unchanged through a
+        JobServer.
+        """
+        try:
+            result = self.execute(plan)
+        except BaseException as e:  # noqa: BLE001 — surfaced via the future
+            return ComputeFuture.failed(e)
+        return ComputeFuture.completed(result)
 
     def task(self, fn: Callable, *, key: Hashable = None) -> Callable:
         return self._engine.task(fn, key=key)

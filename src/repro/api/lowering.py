@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.api.chunkstore import ChunkRef, resolve_chunk
 from repro.api.fnref import encode_fn
+from repro.api.futures import Deferred, resolve_deferred
 from repro.api.kernels import PartitionKernel, kernel_ref, partition_kernel_for
 from repro.api.plan import MapReduceSpec
 from repro.api.policy import SplIter
@@ -58,8 +59,10 @@ __all__ = [
     "key_summary",
     "MergeSpec",
     "TaskGraph",
+    "cross_iteration_edges",
     "lower",
     "inputs_signature",
+    "partition_key",
     "plan_fingerprint",
     "stable_task_key",
     "stacked_fold",
@@ -168,7 +171,14 @@ def plan_fingerprint(spec: MapReduceSpec, policy=None) -> str:
         fn_part(spec.fn),
         fn_part(spec.combine),
         tuple(
-            (tuple(np.asarray(e).shape), str(np.asarray(e).dtype))
+            # Deferred operands (pipelined iteration) have no geometry until
+            # their source execute resolves; fingerprinting must not force —
+            # or worse, block on — that resolution, so they degrade to a
+            # marker.  Loop-carried deferreds share geometry across
+            # iterations anyway, so the identity stays useful.
+            ("deferred",)
+            if isinstance(e, Deferred)
+            else (tuple(np.asarray(e).shape), str(np.asarray(e).dtype))
             for e in spec.extra_args
         ),
         inputs_signature(spec.inputs),
@@ -210,6 +220,12 @@ class Capabilities:
         process boundary.  Tasks whose code cannot be referenced (driver
         views, unpicklable closures) keep ``fn_ref=None`` and the backend
         runs them in-process.
+      pipelined: backend overlaps consecutive ``execute_async`` submissions
+        (DESIGN.md §14): iteration *k+1*'s units are gated on their
+        same-partition *k* predecessors via :func:`cross_iteration_edges`
+        instead of a global drain.  Non-pipelined backends run
+        ``execute_async`` as a synchronous execute returning an
+        already-completed future — same results, no overlap.
       exporter: dispatch-time block exporter of the shared-memory data
         plane (``callable(block) -> ShmBlockRef | None``), or None.  When
         set, operand builders hand large blocks off as shm descriptors
@@ -224,6 +240,7 @@ class Capabilities:
     grouped_dispatch: bool = False
     out_of_core: bool = False
     remote: bool = False
+    pipelined: bool = False
     exporter: Any = dataclasses.field(default=None, compare=False, repr=False)
 
 
@@ -445,6 +462,50 @@ class TaskGraph:
 
 
 # ---------------------------------------------------------------------------
+# cross-iteration dependency edges (pipelined iteration, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def partition_key(task: Task) -> tuple:
+    """The stable identity of the data partition one task covers.
+
+    ``(location, block_ids)`` — the versioned-key half of the pipelining
+    contract: the same partition of the same dataset lowers to the same key
+    every iteration (placement and grouping are policy-derived and the
+    prepare cache reuses them), so "iteration *k*'s unit for this
+    partition" is addressable without any global coordination.  Pipelined
+    schedulers pair it with a per-partition version counter: version *v* of
+    a key is that partition's unit in the *v*-th overlapped execute.
+    """
+    return (task.location, task.block_ids)
+
+
+def cross_iteration_edges(prev: TaskGraph, nxt: TaskGraph) -> dict[int, tuple[int, ...]]:
+    """Same-partition dependency edges from ``nxt``'s tasks to ``prev``'s.
+
+    The inter-iteration half of the TaskGraph: for consecutive pipelined
+    executes, each task of ``nxt`` depends on the ``prev`` tasks covering
+    the same :func:`partition_key` — a partition's *k+1* unit may launch
+    the moment its *k* unit completes, no global drain.  Keys are task
+    indices in ``nxt``; values are matching task indices in ``prev``.
+
+    Tasks with no same-partition predecessor (a granularity retune between
+    submits re-partitioned the data) are absent from the mapping; the
+    scheduler falls back to gating them on ``prev``'s merge, which is
+    always correct — just barrier-shaped for that one boundary.
+    """
+    by_part: dict[tuple, list[int]] = {}
+    for t in prev.tasks:
+        by_part.setdefault(partition_key(t), []).append(t.index)
+    out: dict[int, tuple[int, ...]] = {}
+    for t in nxt.tasks:
+        deps = by_part.get(partition_key(t))
+        if deps:
+            out[t.index] = tuple(deps)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # lowering
 # ---------------------------------------------------------------------------
 
@@ -571,6 +632,7 @@ def _remote_operands_builder(arrays, ids, extra, exporter=None) -> Callable[[], 
         )
         extras = []
         for e in extra:
+            e = resolve_deferred(e)  # pipelined loop-carried operand
             ref = exporter(e) if exporter is not None else None
             extras.append(ref if ref is not None else np.asarray(e))
         return data, tuple(extras)
@@ -653,7 +715,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                 def operands(ids=ids):
                     return tuple(
                         jnp.stack([a.block(b) for b in ids], axis=0) for a in arrays
-                    ) + tuple(extra)
+                    ) + tuple(resolve_deferred(e) for e in extra)
 
                 if choice == "pallas":
                     task_fn, key, kname = kernel.fn, ("pallas", kernel.key), kernel.name
@@ -690,7 +752,7 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
                 return tuple(
                     jnp.concatenate([a.block(b) for b in g.block_ids], axis=0)
                     for a in arrays
-                ) + tuple(extra)
+                ) + tuple(resolve_deferred(e) for e in extra)
 
             tasks.append(
                 Task(
@@ -724,7 +786,9 @@ def _lower_map_blocks(spec, arrays, groups, caps: Capabilities) -> list[Task]:
         placed = sorted((b, g.location) for g in groups for b in g.block_ids)
         for b, loc in placed:
             def operands(b=b):
-                return tuple(a.block(b) for a in arrays) + tuple(extra)
+                return tuple(a.block(b) for a in arrays) + tuple(
+                    resolve_deferred(e) for e in extra
+                )
 
             tasks.append(
                 Task(

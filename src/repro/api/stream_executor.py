@@ -107,6 +107,12 @@ class StreamExecutor(_PlanExecutor):
         scratch tier (spill files) lives and dies with the executor.
     """
 
+    #: pipelined iteration (DESIGN.md §14): queued submissions drain in
+    #: submit order on the driving thread, and the prefetch lookahead
+    #: crosses the iteration boundary — the next execute's first
+    #: partitions load while the current execute still computes.
+    _pipelined = True
+
     def __init__(
         self,
         engine: TaskEngine | None = None,
@@ -138,20 +144,41 @@ class StreamExecutor(_PlanExecutor):
             self._seen_stores.setdefault(id(store), store)
         return super().execute(plan)
 
+    def execute_async(self, plan: ExecutionPlan):
+        for store in chunk_stores(plan.spec.inputs):
+            self._seen_stores.setdefault(id(store), store)
+        return super().execute_async(plan)
+
     # -- streaming drain -------------------------------------------------------
 
     def _drain(self, state: _SchedulerState) -> None:
         """Plan-order consumption with a bounded prefetch pipeline."""
         pending: collections.deque[_Unit] = collections.deque(state.initial_ready())
         inflight: dict[int, _PrefetchJob] = {}
+        self._drain_loop(state, pending, inflight)
+
+    def _drain_loop(
+        self,
+        state: _SchedulerState,
+        pending: "collections.deque[_Unit]",
+        inflight: dict[int, _PrefetchJob],
+        entry=None,
+    ) -> None:
+        """The plan-order unit loop, shared by the sync and pipelined paths.
+
+        ``entry`` (a pipelined :class:`_PipelineEntry`) lets the lookahead
+        cross the iteration boundary: when this entry's own queue has
+        fewer than ``prefetch_depth`` units left, the top-up continues
+        into the NEXT queued submission's launched units.
+        """
         try:
             while pending and not state.errors:
-                self._top_up(pending, inflight)  # current unit's load starts
+                self._top_up(pending, inflight, entry)  # current unit's load
                 unit = pending.popleft()
                 job = inflight.pop(unit.index, None)
                 # Lookahead NOW, before this unit computes: unit k+1's disk
                 # read overlaps unit k's dispatch+compute (the double buffer).
-                self._top_up(pending, inflight)
+                self._top_up(pending, inflight, entry)
                 if job is not None:
                     try:
                         job.wait()  # chunks resident + pinned (the hit path)
@@ -183,6 +210,7 @@ class StreamExecutor(_PlanExecutor):
             for job in inflight.values():  # error path: drop leftover pins
                 job.done.wait()
                 job.release()
+            inflight.clear()
             if self._prefetcher is not None:
                 # Drain queued releases (and their spill writes) before the
                 # run reports: pin counts and store stats are settled when
@@ -192,13 +220,25 @@ class StreamExecutor(_PlanExecutor):
                 done.wait()
 
     def _top_up(
-        self, pending: "collections.deque[_Unit]", inflight: dict[int, _PrefetchJob]
+        self,
+        pending: "collections.deque[_Unit]",
+        inflight: dict[int, _PrefetchJob],
+        entry=None,
     ) -> None:
-        """Keep the next ``prefetch_depth`` pending units' chunks loading."""
+        """Keep the next ``prefetch_depth`` upcoming units' chunks loading.
+
+        Upcoming means drain order: this queue first, then — pipelined —
+        the next submission's launched units, each job filed against its
+        owning entry so the later drain finds it.
+        """
         if self.prefetch_depth <= 0:
             return
-        for unit in list(pending)[: self.prefetch_depth]:
-            if unit.index in inflight:
+        lookahead: list[tuple[_Unit, dict]] = [(u, inflight) for u in pending]
+        nxt = self._entry_after(entry) if entry is not None else None
+        if nxt is not None and nxt.jobs is not None:
+            lookahead.extend((u, nxt.jobs) for u in nxt.pending)
+        for unit, jobs in lookahead[: self.prefetch_depth]:
+            if unit.index in jobs:
                 continue
             refs = tuple(r for t in unit.tasks for r in t.chunk_refs)
             if not refs:
@@ -210,7 +250,71 @@ class StreamExecutor(_PlanExecutor):
             for ref in refs:
                 ref.store.pin(ref)
             self._prefetch_worker().submit(job.run)
-            inflight[unit.index] = job
+            jobs[unit.index] = job
+
+    # -- pipelined execution (DESIGN.md §14) -----------------------------------
+
+    def _entry_after(self, entry):
+        """The next undrained submission after ``entry``, if any."""
+        take = False
+        for e in self._pipeline:
+            if take and not e.draining:
+                return e
+            if e is entry:
+                take = True
+        return None
+
+    def _start_entry(self, entry, prev) -> None:
+        """Queue a pipelined submission; nothing computes until driven.
+
+        Launched units accumulate in the entry's own pending deque (gate
+        callbacks fire on this same thread, inside the previous entry's
+        ``state.complete``), so when its turn comes the drain consumes
+        them in plan order — bit-identical to the synchronous path.
+        """
+        entry.pending = collections.deque()
+        entry.jobs = {}
+
+        def launch(unit, entry=entry):
+            if not entry.state.errors:
+                entry.pending.append(unit)
+
+        self._gate_units(entry, prev, launch)
+
+    def _drive_raw(self, entry) -> None:
+        """Drain queued submissions in submit order, up through ``entry``."""
+        for e in list(self._pipeline):
+            if not e.draining:
+                self._drain_entry(e)
+            if e is entry:
+                break
+        if not entry.draining and not entry.state.done.is_set():
+            self._drain_entry(entry)  # already popped from the queue
+        if not entry.state.done.is_set():
+            entry.state.fail(
+                RuntimeError(
+                    f"stream drain stalled: execute #{entry.iteration} has "
+                    "no runnable units left"
+                )
+            )
+
+    def _drain_entry(self, entry) -> None:
+        if entry.draining:
+            return
+        entry.draining = True
+        # Window-based I/O accounting: this entry's streaming starts NOW —
+        # re-mark so earlier entries' drain I/O stays out of its report.
+        entry.mark_stores()
+        state = entry.state
+        if state.done.is_set():
+            # Poisoned upstream (or already failed): nothing will run, but
+            # cross-boundary prefetch may have pinned chunks for it.
+            for job in entry.jobs.values():
+                job.done.wait()
+                job.release()
+            entry.jobs.clear()
+            return
+        self._drain_loop(state, entry.pending, entry.jobs, entry)
 
     def _prefetch_worker(self) -> _LocationWorker:
         if self._prefetcher is None:

@@ -57,6 +57,12 @@ def _combine(a, b):
     return a[0] + b[0], a[1] + b[1]
 
 
+def _centers_of(partials):
+    """Recompute centers from merged ``(sums, counts)`` partials."""
+    sums, counts = partials
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
 def _kmeans_kernel_factory(args: tuple, kwargs: dict) -> PartitionKernel | None:
     """Fused-kernel factory: bare ``partial_sum_block`` (centers via extra_args)."""
     if args or kwargs:
@@ -110,6 +116,7 @@ def kmeans(
     seed: int = 0,
     policy: ExecutionPolicy | str = SplIter(),
     executor: Executor | None = None,
+    pipeline: bool = False,
 ) -> KMeansResult:
     d = x.row_shape[0]
     centers = jax.random.uniform(jax.random.key(seed), (k, d), x.dtype)
@@ -118,6 +125,27 @@ def kmeans(
     data = Collection.from_blocked(x).split(pol)
 
     reports: list[EngineReport] = []
+
+    if pipeline:
+        # Pipelined loop (DESIGN.md §14): submit iteration k+1 while k is
+        # in flight; the loop-carried centers travel as a lazy Deferred
+        # (``fut.map(_centers_of)``), resolved by the scheduler only when
+        # a unit that needs them dispatches.  Bit-identical to the
+        # barriered loop — same per-block math, same merge order.
+        centers_op = centers
+        futs = []
+        for _ in range(iters):
+            fut = (
+                data.map_blocks(partial_sum_block, extra_args=(centers_op,))
+                .reduce(_combine)
+                .compute_async(executor=ex)
+            )
+            futs.append(fut)
+            centers_op = fut.map(_centers_of)
+        centers = centers_op.resolve() if futs else centers
+        reports = [f.result().report for f in futs]
+        return KMeansResult(centers=centers, iterations=iters, reports=reports)
+
     for _ in range(iters):
         res = (
             data.map_blocks(partial_sum_block, extra_args=(centers,))
@@ -125,7 +153,7 @@ def kmeans(
             .compute(executor=ex)
         )
         sums, counts = res.value
-        centers = sums / jnp.maximum(counts, 1.0)[:, None]
+        centers = _centers_of((sums, counts))
         reports.append(res.report)
 
     return KMeansResult(centers=centers, iterations=iters, reports=reports)

@@ -24,6 +24,7 @@ only as a deprecated shim over the plan-based layer.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import threading
@@ -78,6 +79,8 @@ class EngineReport:
     #                              payloads travel out-of-band via shm_bytes
     shm_bytes: int = 0           # bytes copied into shared-memory segments (cluster)
     retries: int = 0             # units replayed after a worker death (cluster)
+    overlapped_launches: int = 0  # units admitted while an earlier execute was
+    #                               still unresolved (pipelined iteration)
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
@@ -134,11 +137,22 @@ class TaskEngine:
 
     Counter updates are lock-protected: ``ThreadedExecutor`` dispatches
     tasks from one worker thread per location.
+
+    Pipelined executes (DESIGN.md §14) overlap several reports' windows in
+    time, so "the current report" can no longer be a single engine-wide
+    slot: a worker thread running iteration *k*'s units must bill *k*'s
+    report even while the submitting thread has already moved
+    ``self.report`` on to *k+1*.  :meth:`bind_report` installs a
+    *thread-local* billing target; :attr:`current_report` is what every
+    counter site charges — the bound report when one is active on the
+    calling thread, else ``self.report`` (so the synchronous path and the
+    JobServer's per-job segment swap are untouched).
     """
 
     def __init__(self):
         self._cache: dict[Hashable, Callable] = {}
         self._lock = threading.Lock()
+        self._local = threading.local()
         self.traces_total = 0
         self._trace_mark = 0
         self.report = EngineReport(mode="?")
@@ -148,6 +162,22 @@ class TaskEngine:
         self._trace_mark = self.traces_total
         return self.report
 
+    @property
+    def current_report(self) -> EngineReport:
+        """The report this thread bills: bound (pipelined) or engine-wide."""
+        bound = getattr(self._local, "report", None)
+        return bound if bound is not None else self.report
+
+    @contextlib.contextmanager
+    def bind_report(self, report: EngineReport):
+        """Bill this thread's dispatches/traces/merges to ``report``."""
+        prev = getattr(self._local, "report", None)
+        self._local.report = report
+        try:
+            yield report
+        finally:
+            self._local.report = prev
+
     def task(self, fn: Callable, *, key: Hashable = None) -> Callable:
         """Register ``fn`` as a task (jitted once per key, dispatch-counted)."""
         key = key if key is not None else fn
@@ -156,13 +186,20 @@ class TaskEngine:
 
             def dispatch(*args, _jfn=jfn, _self=self, **kw):
                 with _self._lock:
-                    _self.report.dispatches += 1
+                    _self.current_report.dispatches += 1
                 return _jfn(*args, **kw)
 
             self._cache[key] = dispatch
             with self._lock:
                 self.traces_total += 1
-                self.report.traces = self.traces_total - self._trace_mark
+                rep = self.current_report
+                if rep is self.report:
+                    rep.traces = self.traces_total - self._trace_mark
+                else:
+                    # Bound (pipelined) window: the engine-wide trace mark
+                    # belongs to whichever synchronous report is current, so
+                    # credit the newly paid trace to the bound report alone.
+                    rep.traces += 1
         return self._cache[key]
 
 

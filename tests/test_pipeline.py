@@ -1,0 +1,400 @@
+"""Pipelined iteration — ``execute_async`` and cross-iteration edges.
+
+The acceptance contract of DESIGN.md §14:
+
+* bit-identical results with pipelining on vs off across all five
+  backends — the pipeline reorders *launches*, never the merge fold;
+* ``overlapped_launches`` > 0 on the pipelined backends (Threaded,
+  Cluster, Stream) and exactly 0 on the barriered ones (Local, Mesh),
+  with the deterministic submit-time-frozen pattern [0, n, n, ...];
+* the autotuner probe guard: an ``"auto"`` policy's probe iterations run
+  barriered (depth 1) so profiled walls never measure contention;
+* failure semantics under overlap: iteration *k*'s failure raises the
+  original error on *k*'s future and poisons *k+1* with a typed
+  :class:`PipelineBrokenError` naming the originating iteration;
+* ``close()`` with in-flight futures drains cleanly — no leaked
+  ``/dev/shm`` segments (the PR 7 fault-lane assertion).
+
+The CI ``pipeline-lane`` job runs exactly this module on the cluster +
+threaded backends.
+
+All block functions are module-level: ClusterExecutor workers are
+spawned processes and must re-import them by qualified name.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import (
+    ClusterExecutor,
+    Collection,
+    DiskStore,
+    LocalExecutor,
+    MeshExecutor,
+    SplIter,
+    StreamExecutor,
+    ThreadedExecutor,
+    shm_available,
+)
+from repro.api.futures import Deferred, PipelineBrokenError, resolve_deferred
+from repro.api.lowering import cross_iteration_edges, partition_key
+from repro.api.shm import leaked_segments
+
+needs_shm = pytest.mark.skipif(
+    not shm_available(), reason="host has no POSIX shared memory"
+)
+
+POL = SplIter(partitions_per_location=2)
+
+
+# -- the iterative app under test (Lloyd-shaped: partials -> merge -> map) ----
+
+
+def _partial(b, c):
+    return (b * c).sum(axis=0), jnp.ones(())
+
+
+def _combine(a, b):
+    return a[0] + b[0], a[1] + b[1]
+
+
+def _ratio(v):
+    return v[0] / v[1]
+
+
+def _boom(b, c):
+    raise ValueError("injected unit failure")
+
+
+def _data():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.random((512, 8), np.float32))
+
+
+def _plan(x, c, *, fn=_partial, policy=POL):
+    return (
+        Collection.from_array(x, block_rows=64, num_locations=2)
+        .split(policy)
+        .map_blocks(fn, extra_args=(c,))
+        .reduce(_combine)
+    )
+
+
+def _barriered(x, ex, iters, *, policy=POL):
+    """The reference loop: one synchronous execute per iteration."""
+    c, out = jnp.ones((8,)), []
+    for _ in range(iters):
+        res = _plan(x, c, policy=policy).compute(executor=ex)
+        c = _ratio(res.value)
+        out.append(np.asarray(c))
+    return out
+
+
+def _pipelined(x, ex, iters, *, policy=POL):
+    """The async loop: params flow as a Deferred, executes overlap."""
+    c_op, futs = jnp.ones((8,)), []
+    for _ in range(iters):
+        fut = _plan(x, c_op, policy=policy).compute_async(executor=ex)
+        futs.append(fut)
+        c_op = fut.map(_ratio)
+    final = np.asarray(resolve_deferred(c_op))
+    results = [f.result() for f in futs]
+    return [np.asarray(_ratio(r.value)) for r in results], final, results
+
+
+EXECUTORS = [
+    ("local", LocalExecutor, False),
+    ("threaded", ThreadedExecutor, True),
+    ("mesh", MeshExecutor, False),
+    ("stream", StreamExecutor, True),
+    ("cluster", ClusterExecutor, True),
+]
+
+
+class TestBitIdentity:
+    @pytest.mark.parametrize(
+        "name,factory,pipelines", EXECUTORS, ids=[e[0] for e in EXECUTORS]
+    )
+    def test_pipelined_matches_barriered(self, name, factory, pipelines):
+        x = _data()
+        ex = factory()
+        try:
+            assert ex.capabilities.pipelined is pipelines
+            ref = _barriered(x, ex, 4)
+            got, final, results = _pipelined(x, ex, 4)
+        finally:
+            ex.close()
+        assert all((a == b).all() for a, b in zip(ref, got))
+        assert (final == ref[-1]).all()
+        overlapped = [r.report.overlapped_launches for r in results]
+        if pipelines:
+            # Submit-time frozen: iteration 0 has no predecessor; every
+            # later submit finds one in flight, so the whole unit count
+            # overlaps.  A pure function of call order — not host speed.
+            assert overlapped[0] == 0
+            assert all(n == overlapped[1] > 0 for n in overlapped[1:])
+        else:
+            assert overlapped == [0, 0, 0, 0]
+            # Non-pipelined backends degrade to sync futures: done at return.
+            ex2 = factory()
+            try:
+                fut = _plan(x, jnp.ones((8,))).compute_async(executor=ex2)
+                assert fut.done()
+            finally:
+                ex2.close()
+
+    def test_per_execute_reports_stay_exact(self):
+        # Overlap must not blur per-iteration attribution: each future's
+        # report carries its own execute's dispatch/merge counts, equal to
+        # the barriered run's.
+        x = _data()
+        ex = ThreadedExecutor()
+        try:
+            c, sync_reports = jnp.ones((8,)), []
+            for _ in range(3):
+                res = _plan(x, c).compute(executor=ex)
+                c = _ratio(res.value)
+                sync_reports.append(res.report)
+            _, _, results = _pipelined(x, ex, 3)
+        finally:
+            ex.close()
+        for sync, r in zip(sync_reports, results):
+            assert r.report.dispatches == sync.dispatches
+            assert r.report.merges == sync.merges
+
+
+class TestLoweringEdges:
+    def test_cross_iteration_edges_match_partitions(self):
+        # Two lowerings of the same spec: every task of the next graph is
+        # gated on exactly the same-partition task(s) of the previous one.
+        from repro.api.lowering import lower
+
+        ex = LocalExecutor()
+        spec = _plan(_data(), jnp.ones((8,))).plan().spec
+        policy, _ = ex._resolve_policy(spec)
+        prepared = ex._prepare(spec.inputs, policy, ex.engine.new_report("t"))
+
+        g1 = lower(spec, prepared.arrays, prepared.groups, ex.capabilities)
+        g2 = lower(spec, prepared.arrays, prepared.groups, ex.capabilities)
+        edges = cross_iteration_edges(g1, g2)
+        assert edges  # same partitioning -> every task matched
+        for idx, deps in edges.items():
+            key = partition_key(g2.tasks[idx])
+            assert all(partition_key(g1.tasks[d]) == key for d in deps)
+        ex.close()
+
+    def test_partition_versions_increment_across_submits(self):
+        # The versioned-key counter: consecutive in-flight submissions
+        # stamp monotonically increasing versions per partition key.
+        x = _data()
+        ex = ThreadedExecutor()
+        try:
+            f1 = _plan(x, jnp.ones((8,))).compute_async(executor=ex)
+            f2 = _plan(x, jnp.ones((8,))).compute_async(executor=ex)
+            entries = list(ex._pipeline)
+            versions = [dict(e.state.partition_versions) for e in entries]
+            f1.result(), f2.result()
+        finally:
+            ex.close()
+        assert len(versions) == 2
+        assert set(versions[0]) == set(versions[1])
+        for key, v in versions[0].items():
+            assert versions[1][key] == v + 1 == 2
+
+
+class TestProbeGuard:
+    def test_probe_iterations_run_barriered(self):
+        # An "auto" policy's probe window feeds measured walls into the
+        # cost model — overlapping probes would record contended walls and
+        # mistune every later iteration.  The guard forces depth 1: each
+        # probe's future is already resolved at submit return.
+        x = _data()
+        auto = SplIter(partitions_per_location="auto")
+        ex = ThreadedExecutor()
+        try:
+            c_op, futs = jnp.ones((8,)), []
+            for _ in range(3):  # the deterministic probe ladder (seed 0)
+                fut = _plan(x, c_op, policy=auto).compute_async(executor=ex)
+                futs.append(fut)
+                c_op = fut.map(_ratio)
+            for fut in futs:
+                assert fut.done()  # sync future: resolved before return
+                assert fut.result().report.overlapped_launches == 0
+        finally:
+            ex.close()
+
+
+class TestFailureSemantics:
+    def test_failure_fails_own_future_and_poisons_next(self):
+        x = _data()
+        ex = ThreadedExecutor()
+        try:
+            f0 = _plan(x, jnp.ones((8,))).compute_async(executor=ex)
+            f1 = _plan(x, f0.map(_ratio), fn=_boom).compute_async(executor=ex)
+            f2 = _plan(x, f1.map(_ratio)).compute_async(executor=ex)
+
+            assert f0.result() is not None  # iteration 0 unaffected
+            with pytest.raises(ValueError, match="injected unit failure"):
+                f1.result()  # the originating iteration: original error
+            with pytest.raises(PipelineBrokenError) as exc:
+                f2.result()  # the dependent iteration: typed poison
+            assert exc.value.iteration == f1.iteration
+            assert str(f1.iteration) in str(exc.value)
+        finally:
+            ex.close()
+
+    def test_deferred_against_failed_future_raises_typed(self):
+        x = _data()
+        ex = ThreadedExecutor()
+        try:
+            fut = _plan(x, jnp.ones((8,)), fn=_boom).compute_async(executor=ex)
+            d = fut.map(_ratio)
+            with pytest.raises(PipelineBrokenError) as exc:
+                d.resolve()
+            assert exc.value.iteration == fut.iteration
+        finally:
+            ex.close()
+
+    def test_close_with_inflight_futures_drains_cleanly(self):
+        x = _data()
+        ex = ThreadedExecutor()
+        ref = _barriered(x, LocalExecutor(), 3)
+        c_op, futs = jnp.ones((8,)), []
+        for _ in range(3):
+            fut = _plan(x, c_op).compute_async(executor=ex)
+            futs.append(fut)
+            c_op = fut.map(_ratio)
+        ex.close()  # nothing resolved yet: close must drain, not wedge
+        got = [np.asarray(_ratio(f.result().value)) for f in futs]
+        assert all((a == b).all() for a, b in zip(ref, got))
+
+    def test_close_after_failure_is_clean(self):
+        x = _data()
+        ex = ThreadedExecutor()
+        f0 = _plan(x, jnp.ones((8,)), fn=_boom).compute_async(executor=ex)
+        f1 = _plan(x, f0.map(_ratio)).compute_async(executor=ex)
+        ex.close()  # errors stay on the futures; close itself must not raise
+        with pytest.raises(ValueError):
+            f0.result()
+        with pytest.raises(PipelineBrokenError):
+            f1.result()
+
+
+@needs_shm
+class TestClusterPipeline:
+    def test_cluster_failure_poisons_and_leaks_nothing(self):
+        x = _data()
+        ex = ClusterExecutor()
+        prefix = ex._shm.prefix
+        try:
+            f0 = _plan(x, jnp.ones((8,))).compute_async(executor=ex)
+            f1 = _plan(x, f0.map(_ratio), fn=_boom).compute_async(executor=ex)
+            f2 = _plan(x, f1.map(_ratio)).compute_async(executor=ex)
+            assert f0.result() is not None
+            with pytest.raises(Exception) as exc:
+                f1.result()
+            assert "injected unit failure" in str(exc.value)
+            with pytest.raises(PipelineBrokenError) as exc2:
+                f2.result()
+            assert exc2.value.iteration == f1.iteration
+        finally:
+            ex.close()
+        assert leaked_segments(prefix) == []
+
+    def test_cluster_close_with_inflight_leaks_no_segments(self):
+        x = _data()
+        ref = _barriered(x, LocalExecutor(), 3)
+        ex = ClusterExecutor()
+        prefix = ex._shm.prefix
+        c_op, futs = jnp.ones((8,)), []
+        for _ in range(3):
+            fut = _plan(x, c_op).compute_async(executor=ex)
+            futs.append(fut)
+            c_op = fut.map(_ratio)
+        ex.close()
+        got = [np.asarray(_ratio(f.result().value)) for f in futs]
+        assert all((a == b).all() for a, b in zip(ref, got))
+        assert leaked_segments(prefix) == []
+
+
+class TestStreamPipeline:
+    def test_prefetch_crosses_iteration_boundary(self):
+        # Out-of-core pipelining: with the dataset spilled to disk, the
+        # next execute's first partitions prefetch while the current one
+        # still computes — bit-identical values, warm prefetch pipeline.
+        x = _data()
+        ref = _barriered(x, LocalExecutor(), 3)
+        store = DiskStore(x.nbytes // 2)
+        ex = StreamExecutor(close_stores=False)
+        try:
+            xd = Collection.from_array(
+                x, block_rows=64, num_locations=2, store=store
+            )
+            c_op, futs = jnp.ones((8,)), []
+            for _ in range(3):
+                fut = (
+                    xd.split(POL)
+                    .map_blocks(_partial, extra_args=(c_op,))
+                    .reduce(_combine)
+                    .compute_async(executor=ex)
+                )
+                futs.append(fut)
+                c_op = fut.map(_ratio)
+            final = np.asarray(resolve_deferred(c_op))
+            results = [f.result() for f in futs]
+        finally:
+            ex.close()
+            store.close()
+        got = [np.asarray(_ratio(r.value)) for r in results]
+        assert all((a == b).all() for a, b in zip(ref, got))
+        assert (final == ref[-1]).all()
+        assert sum(r.report.overlapped_launches for r in results) > 0
+        assert sum(r.report.prefetch_hits for r in results) > 0
+
+
+class TestBarrierRule:
+    def test_sync_execute_drains_pipeline_first(self):
+        x = _data()
+        ex = ThreadedExecutor()
+        try:
+            f0 = _plan(x, jnp.ones((8,))).compute_async(executor=ex)
+            f1 = _plan(x, f0.map(_ratio)).compute_async(executor=ex)
+            res = _plan(x, f1.map(_ratio)).compute(executor=ex)
+            # The synchronous execute never overlaps: both async futures
+            # resolved before it ran.
+            assert f0.done() and f1.done()
+            ref = _barriered(x, LocalExecutor(), 3)
+            assert (np.asarray(_ratio(res.value)) == ref[-1]).all()
+        finally:
+            ex.close()
+
+    def test_window_caps_inflight_entries(self):
+        x = _data()
+        ex = ThreadedExecutor()
+        try:
+            c_op = jnp.ones((8,))
+            for _ in range(5):
+                fut = _plan(x, c_op).compute_async(executor=ex)
+                c_op = fut.map(_ratio)
+                assert len(ex._pipeline) <= ex.pipeline_depth
+        finally:
+            ex.close()
+
+
+class TestFutureSurface:
+    def test_map_chains_and_caches(self):
+        x = _data()
+        ex = LocalExecutor()
+        try:
+            fut = _plan(x, jnp.ones((8,))).compute_async(executor=ex)
+            d = fut.map(_ratio).map(lambda c: c * 2.0)
+            assert isinstance(d, Deferred)
+            v1, v2 = d.resolve(), d.resolve()
+            assert v1 is v2  # single-flight cached
+            assert (np.asarray(v1) == np.asarray(_ratio(fut.result().value)) * 2.0).all()
+        finally:
+            ex.close()
