@@ -82,6 +82,8 @@ def _aggregate_row(pol, executor_name: str, warm, res) -> dict:
         "jobs": 0,
         "resumes": 0,
         "overlapped_launches": sum(r.overlapped_launches for r in res.reports),
+        "steals": sum(r.steals for r in res.reports),
+        "scale_events": sum(r.scale_events for r in res.reports),
     }
 
 
@@ -103,6 +105,7 @@ def smoke() -> list[dict]:
     rows.append(_stream_disk_row())
     rows.append(_server_row())
     rows.extend(_pipelined_rows())
+    rows.append(_elastic_row())
     return rows
 
 
@@ -156,6 +159,66 @@ def _pipelined_rows() -> list[dict]:
         rows.append(row)
         ex.close()
     return rows
+
+
+def _elastic_row() -> dict:
+    """The elasticity axis (DESIGN.md §15): a straggler vs work stealing.
+
+    One worker is slowed ~10× via the fault hook (a 50ms sleep before
+    every unit execution, dwarfing the ~ms unit compute), making it a
+    straggler owning half the partitions.  The *pinned* arm leaves the
+    schedule locality-bound — the straggler's queue gates every
+    iteration; the *elastic* arm enables work stealing, so idle siblings
+    raid the straggler's queue whenever the fitted cost model predicts
+    the move pays (descriptors over shm, not bytes).
+
+    Three things are load-bearing and asserted here: stealing actually
+    happened (``steals > 0``), centers stay bit-identical to the pinned
+    run, and the elastic wall is at most half the pinned wall (the
+    straggler's queue really was offloaded, not just shuffled).  The row
+    itself is presence-only in the baseline diff — which units get stolen
+    follows measured load — and carries ``pinned_wall_s`` so the
+    comparison rides in the artifact.
+    """
+    from statistics import median
+
+    from repro.api import ClusterExecutor, FaultPlan
+
+    x = _dataset(2, 8, 8192, d=8)
+    pol = SplIter(partitions_per_location=4)
+    slow = FaultPlan(slow=((0, 0.05),))
+
+    pinned_ex = ClusterExecutor(fault_plan=slow)
+    kmeans(x, k=8, iters=2, policy=pol, executor=pinned_ex)  # warm
+    pinned_walls, pinned_res = [], None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        pinned_res = kmeans(x, k=8, iters=3, policy=pol, executor=pinned_ex)
+        pinned_walls.append(time.perf_counter() - t0)
+    pinned_ex.close()
+
+    ex = ClusterExecutor(fault_plan=slow, steal=True)
+    warm = kmeans(x, k=8, iters=2, policy=pol, executor=ex)  # warm
+    walls, res = [], None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = kmeans(x, k=8, iters=3, policy=pol, executor=ex)
+        walls.append(time.perf_counter() - t0)
+    steals = sum(r.steals for r in res.reports)
+    assert steals > 0, "elastic kmeans never stole from the straggler"
+    assert bool(jnp.all(res.centers == pinned_res.centers)), (
+        "elastic kmeans diverged from the pinned straggler run"
+    )
+    pinned_wall, elastic_wall = median(pinned_walls), median(walls)
+    assert elastic_wall <= 0.5 * pinned_wall, (
+        f"stealing did not offload the straggler: elastic {elastic_wall:.3f}s "
+        f"vs pinned {pinned_wall:.3f}s"
+    )
+    row = _aggregate_row(pol, "cluster-elastic", warm, res)
+    row["wall_s"] = round(elastic_wall, 5)
+    row["pinned_wall_s"] = round(pinned_wall, 5)
+    ex.close()
+    return row
 
 
 def _server_row() -> dict:

@@ -102,6 +102,8 @@ def smoke() -> list[dict]:
             "jobs": 0,
             "resumes": 0,
             "overlapped_launches": 0,
+            "steals": 0,
+            "scale_events": 0,
         })
     rows.extend(_pipelined_sgd_rows())
     return rows
@@ -229,6 +231,8 @@ def _pipelined_sgd_rows() -> list[dict]:
             "jobs": 0,
             "resumes": 0,
             "overlapped_launches": overlapped,
+            "steals": sum(r.steals for r in reports),
+            "scale_events": sum(r.scale_events for r in reports),
         })
     return rows
 

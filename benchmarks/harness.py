@@ -145,6 +145,8 @@ def report_row(
         "shm_bytes": report.shm_bytes,
         "retries": report.retries,
         "overlapped_launches": report.overlapped_launches,
+        "steals": report.steals,
+        "scale_events": report.scale_events,
     }
 
 

@@ -55,6 +55,13 @@ import time
 #: overlap count is frozen at submit time — a pure function of the app's
 #: call order, not of host speed — so a regression that silently stops
 #: iterations from overlapping (count → 0) fails the diff.
+#: ``steals`` and ``scale_events`` pin the elastic rows (DESIGN.md §15):
+#: both must be exactly 0 on every non-elastic row (stealing defaults
+#: off, so any non-zero count here is an accounting leak).  The elastic
+#: straggler rows themselves (executor ``cluster-elastic``) are
+#: presence-only, like ``*_auto`` policies: which units get stolen
+#: follows measured load, so their structural columns are legitimately
+#: host-dependent.
 STRUCTURAL = (
     "dispatches",
     "merges",
@@ -67,6 +74,8 @@ STRUCTURAL = (
     "jobs",
     "resumes",
     "overlapped_launches",
+    "steals",
+    "scale_events",
 )
 
 
@@ -86,8 +95,11 @@ def diff_rows(app: str, rows: list[dict], baseline_rows: list[dict]) -> list[str
                         "regenerate with --write-baseline . and commit)")
     for key in sorted(set(got) & set(want)):
         policy = key[0] or ""
+        executor = key[1] or ""
         if "_auto" in policy:
             continue  # measured-granularity rows: presence-only
+        if "elastic" in executor:
+            continue  # measured-load steal rows: presence-only
         for col in STRUCTURAL:
             g, w = got[key].get(col), want[key].get(col)
             if g != w:
@@ -98,7 +110,9 @@ def diff_rows(app: str, rows: list[dict], baseline_rows: list[dict]) -> list[str
 def _baseline_row(row: dict) -> dict:
     """Strip a row to its deterministic identity + structural columns."""
     keep = {"policy": row.get("policy"), "executor": row.get("executor")}
-    if "_auto" not in (row.get("policy") or ""):
+    if "_auto" not in (row.get("policy") or "") and "elastic" not in (
+        row.get("executor") or ""
+    ):
         keep.update({col: row.get(col) for col in STRUCTURAL})
     return keep
 

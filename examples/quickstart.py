@@ -17,6 +17,7 @@ from repro.api import (
     ClusterExecutor,
     Collection,
     DiskStore,
+    FaultPlan,
     JobClient,
     JobServer,
     LocalExecutor,
@@ -222,6 +223,29 @@ def main():
     print(f"pipelined: bit_identical={bool(jnp.all(w_op.resolve() == w))} "
           f"overlapped_launches={[r.overlapped_launches for r in reports]}")
     tex.close()
+
+    # -- 14. elasticity: work stealing rescues a straggler -------------------------
+    # Same cluster plan, but worker 0 is artificially slowed 30ms per unit
+    # (FaultPlan.slow — a deterministic straggler).  With steal=True an idle
+    # sibling takes worker 0's queued units whenever the cost gate predicts
+    # fetch < wait — per-worker service-time EMAs make the gate asymmetric,
+    # so the straggler never steals the work back.  Steals move shm
+    # descriptors, not bytes; attempts are refunded (retries stays 0); and
+    # the result is still bit-identical.  grow()/shrink() scale the pool the
+    # same way: shrink drains through the kill-replay path, as preemption.
+    eex = ClusterExecutor(fault_plan=FaultPlan(slow=((0, 0.03),)), steal=True)
+    elas = (
+        Collection.from_blocked(x)
+        .split(SplIter(partitions_per_location=2))
+        .map_blocks(block_sum)
+        .reduce(combine)
+        .compute(executor=eex)
+    )
+    print(f"elastic: steals={elas.report.steals} "
+          f"retries={elas.report.retries} "
+          f"steal_log={[e['kind'] for e in eex.steal_log]} "
+          f"bit_identical={bool(jnp.all(elas.value == ref2.value))}")
+    eex.close()
 
 
 if __name__ == "__main__":

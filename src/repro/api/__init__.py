@@ -59,7 +59,12 @@ from repro.api.chunkstore import (
     StoreStats,
     resolve_chunk,
 )
-from repro.api.cluster_executor import ClusterExecutor, ClusterFailedError, FaultPlan
+from repro.api.cluster_executor import (
+    ChaosSchedule,
+    ClusterExecutor,
+    ClusterFailedError,
+    FaultPlan,
+)
 from repro.api.collection import Collection
 from repro.api.executors import (
     ComputeResult,
@@ -113,6 +118,7 @@ __all__ = [
     "ClusterExecutor",
     "ClusterFailedError",
     "FaultPlan",
+    "ChaosSchedule",
     "JobServer",
     "JobClient",
     "Job",

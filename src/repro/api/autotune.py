@@ -54,7 +54,14 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["CostModel", "fit_cost_model", "granularity_features", "Autotuner"]
+__all__ = [
+    "CostModel",
+    "fit_cost_model",
+    "granularity_features",
+    "steal_cost_estimate",
+    "should_steal",
+    "Autotuner",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +126,109 @@ def fit_cost_model(
         return CostModel(c0=max(w0 - overhead_hint_s * n0, 0.0),
                          c1=overhead_hint_s, c2=0.0)
     return None
+
+
+def steal_cost_estimate(
+    model: CostModel | None,
+    *,
+    queued_tasks: int,
+    span: int = 1,
+    operand_bytes: int = 0,
+    fallback_task_s: float = 1e-3,
+    pipe_bytes_per_s: float = 256e6,
+    victim_task_s: float | None = None,
+    thief_task_s: float = 0.0,
+) -> tuple[float, float]:
+    """(expected_wait_s, fetch_cost_s) for stealing a victim's queued units.
+
+    ``expected_wait_s`` is what the queued work would cost if left on the
+    overloaded victim: ``queued_tasks`` × the victim's per-task cost.
+    That cost is ``victim_task_s`` when the caller has observed it (the
+    executor's per-worker service-time EMA — what actually distinguishes
+    a straggler from a merely busy sibling), else the model's *marginal*
+    per-task cost (``c1 + c2·span`` — the fixed ``c0`` is paid either
+    way, so it cancels out of the comparison).  ``fetch_cost_s`` is what
+    moving it costs: one extra dispatch (``c1``), operand transport, and
+    the thief's own execution of the stolen units (``queued_tasks`` ×
+    ``thief_task_s``) — charging the thief's service time is what stops a
+    slow worker from stealing work *back* from a fast one.  With the
+    shared-memory data plane a steal moves *descriptors*, not bytes —
+    callers pass ``operand_bytes=0`` and transport is just the dispatch
+    overhead; with shm off, the operands re-cross the pipe at
+    ``pipe_bytes_per_s``.
+
+    Without a fitted model (early iterations), ``fallback_task_s`` — the
+    profiled mean task wall when the caller has one — stands in for the
+    marginal cost, and the dispatch overhead is taken as free; an unknown
+    thief defaults to free execution.  Both optimistic, which is the
+    right bias while there is no evidence either way.
+
+    >>> m = CostModel(c0=0.1, c1=0.01, c2=0.0)
+    >>> steal_cost_estimate(m, queued_tasks=4)
+    (0.04, 0.01)
+    """
+    if victim_task_s is not None:
+        per_task = victim_task_s
+        dispatch_s = model.c1 if model is not None else 0.0
+    elif model is not None and (model.c1 > 0.0 or model.c2 > 0.0):
+        per_task = model.c1 + model.c2 * max(span, 1)
+        dispatch_s = model.c1
+    else:
+        per_task = fallback_task_s
+        dispatch_s = 0.0
+    wait_s = queued_tasks * per_task
+    fetch_s = (
+        dispatch_s
+        + (operand_bytes / pipe_bytes_per_s if operand_bytes else 0.0)
+        + queued_tasks * thief_task_s
+    )
+    return wait_s, fetch_s
+
+
+def should_steal(
+    model: CostModel | None,
+    *,
+    queued_tasks: int,
+    span: int = 1,
+    operand_bytes: int = 0,
+    fallback_task_s: float = 1e-3,
+    pipe_bytes_per_s: float = 256e6,
+    victim_task_s: float | None = None,
+    thief_task_s: float = 0.0,
+) -> bool:
+    """The steal gate: True iff remote-fetch cost < expected wait.
+
+    The locality-awareness contract of the elastic cluster (DESIGN.md §15):
+    an idle worker may take a queued unit from an overloaded sibling only
+    when this predicts the move pays for itself.  Deterministic in its
+    inputs, so tests can pin the decision with crafted models.
+
+    >>> should_steal(CostModel(0.0, 0.001, 0.0), queued_tasks=3)
+    True
+    >>> should_steal(  # huge operands over a slow pipe: stay put
+    ...     CostModel(0.0, 0.001, 0.0), queued_tasks=1,
+    ...     operand_bytes=1 << 30, pipe_bytes_per_s=64e6)
+    False
+    >>> should_steal(  # a straggler must not steal back from a fast sibling
+    ...     None, queued_tasks=3, victim_task_s=0.002, thief_task_s=0.05)
+    False
+    >>> should_steal(  # ...while the fast sibling raids the straggler
+    ...     None, queued_tasks=3, victim_task_s=0.05, thief_task_s=0.002)
+    True
+    """
+    if queued_tasks < 1:
+        return False
+    wait_s, fetch_s = steal_cost_estimate(
+        model,
+        queued_tasks=queued_tasks,
+        span=span,
+        operand_bytes=operand_bytes,
+        fallback_task_s=fallback_task_s,
+        pipe_bytes_per_s=pipe_bytes_per_s,
+        victim_task_s=victim_task_s,
+        thief_task_s=thief_task_s,
+    )
+    return fetch_s < wait_s
 
 
 # ---------------------------------------------------------------------------

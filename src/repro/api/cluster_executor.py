@@ -81,6 +81,7 @@ import jax
 import numpy as np
 
 from repro.api import shm
+from repro.api.autotune import should_steal
 from repro.api.chunkstore import ChunkHandle, StoreManifest, chunk_stores, resolve_chunk
 from repro.api.shm import ShmBlockRef, ShmStore, shm_available
 from repro.api.executors import (
@@ -93,7 +94,7 @@ from repro.api.fnref import encode_fn
 from repro.api.lowering import Capabilities, key_summary, stable_task_key
 from repro.core.engine import TaskEngine
 
-__all__ = ["ClusterExecutor", "ClusterFailedError", "FaultPlan"]
+__all__ = ["ClusterExecutor", "ClusterFailedError", "FaultPlan", "ChaosSchedule"]
 
 #: task kinds that may execute in a worker process; everything else
 #: (merge folds, driver-view callbacks) stays in the parent.
@@ -154,6 +155,9 @@ class FaultPlan:
         unit (drives retry exhaustion → :class:`ClusterFailedError`).
       mute_after: ``((worker_id, nth_dispatch), ...)`` — stop heartbeats
         and hang, exercising the heartbeat-staleness detector.
+      slow: ``((worker_id, seconds), ...)`` — sleep before every unit
+        execution: the deterministic straggler hook the elastic bench and
+        chaos harness use to make one worker ~10× slower.
 
     >>> FaultPlan(kill_after=((0, 1),)).kill_after_for(0)
     1
@@ -164,12 +168,89 @@ class FaultPlan:
     kill_after: tuple = ()
     kill_on_retry: tuple = ()
     mute_after: tuple = ()
+    slow: tuple = ()
 
     def kill_after_for(self, worker_id: int) -> int | None:
         return dict(self.kill_after).get(worker_id)
 
     def mute_after_for(self, worker_id: int) -> int | None:
         return dict(self.mute_after).get(worker_id)
+
+    def slow_for(self, worker_id: int) -> float | None:
+        return dict(self.slow).get(worker_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSchedule:
+    """Seeded, reproducible chaos for the elastic cluster (tests / CI).
+
+    Extends :class:`FaultPlan` injection with the elasticity axes: from
+    one integer seed it derives (a) a fault plan that kills some initial
+    workers mid-run and slows another into a straggler — the steal
+    trigger — and (b) a per-round grow/shrink action sequence the harness
+    applies between executes.  Everything is a pure function of the
+    constructor arguments (``random.Random`` seeded with ints, never
+    wall-clock), so a failing seed replays bit-identically in CI and at a
+    desk.
+
+    >>> ChaosSchedule(seed=11).actions() == ChaosSchedule(seed=11).actions()
+    True
+    >>> ChaosSchedule(seed=11).fault_plan() == ChaosSchedule(seed=11).fault_plan()
+    True
+    """
+
+    seed: int
+    rounds: int = 4
+    workers: tuple = (0, 1)
+    kill_rate: float = 0.5
+    slow_rate: float = 0.5
+    slow_s: float = 0.02
+
+    def _rng(self, salt: int):
+        import random
+
+        return random.Random((self.seed + 1) * 1_000_003 + salt)
+
+    def fault_plan(self) -> FaultPlan:
+        """Kills and stragglers for the initial pool, derived from the seed.
+
+        At most one initial worker is killed (on a dispatch in the first
+        few) and at most one *other* worker is slowed — a schedule that
+        killed everything at once would only ever test the respawn path.
+        """
+        rng = self._rng(0)
+        kills = []
+        slows = []
+        wids = list(self.workers)
+        if wids and rng.random() < self.kill_rate:
+            kills.append((rng.choice(wids), rng.randint(1, 4)))
+        candidates = [w for w in wids if w not in dict(kills)]
+        if candidates and rng.random() < self.slow_rate:
+            slows.append((rng.choice(candidates), self.slow_s))
+        return FaultPlan(kill_after=tuple(kills), slow=tuple(slows))
+
+    def actions(self) -> tuple[str, ...]:
+        """One pool action per round: ``"grow"``, ``"shrink"`` or ``"none"``.
+
+        Shrink never outruns growth (the pool cannot shrink below its
+        location owners anyway — :meth:`ClusterExecutor.shrink` respawns
+        owners on demand), and the first round always runs the un-scaled
+        pool so every schedule covers the baseline too.
+        """
+        rng = self._rng(1)
+        out = ["none"]
+        grown = 0
+        for _ in range(1, self.rounds):
+            roll = rng.random()
+            if roll < 0.4:
+                out.append("grow")
+                grown += 1
+            elif roll < 0.7 and grown > 0:
+                out.append("shrink")
+                grown -= 1
+            else:
+                out.append("none")
+        return tuple(out)
 
 
 class _WorkerHandle:
@@ -215,6 +296,7 @@ class _WorkerHandle:
                 kill_after=fault.kill_after_for(wid) if fault else None,
                 kill_on_retry=bool(fault and wid in fault.kill_on_retry),
                 mute_after=fault.mute_after_for(wid) if fault else None,
+                slow_s=fault.slow_for(wid) if fault else None,
                 log_path=self.log_path,
                 result_prefix=result_prefix,
                 result_min_bytes=result_min_bytes,
@@ -332,6 +414,29 @@ class ClusterExecutor(_PlanExecutor):
       shm_budget_bytes: cap on live segment bytes (default 256 MiB, or
         the ``REPRO_SHM_BUDGET`` environment variable).  Exhaustion falls
         back to inline/spill-file transport, never to an error.
+      steal: enable work stealing (DESIGN.md §15): an idle worker takes
+        queued units off an overloaded sibling when the cost model says
+        remote fetch beats the expected wait.  Off by default — steal
+        counts are timing-dependent, and the default pool must stay
+        structurally deterministic for the bench baselines.
+      autoscale: enable the autoscaler: the pool grows *roamer* workers
+        (no partition to own; fed purely by stealing) when queue depth
+        outruns the live workers, and shrinks them again — planned
+        preemption through the requeue/replay path — once they idle.
+        Implies ``steal``.
+      min_workers / max_workers: autoscaler pool bounds (defaults: 1 and
+        ``os.cpu_count()``).
+      scale_up_backlog: grow when queued-behind-running units exceed this
+        many per live worker.
+      scale_idle_ticks: consecutive idle supervisor ticks before a roamer
+        is preempted (ticks, not seconds — deterministic under test).
+
+    Elasticity accounting: successful steals bill
+    ``EngineReport.steals`` and append to :attr:`steal_log`; grow/shrink
+    bill ``EngineReport.scale_events`` and append to :attr:`scale_log`;
+    every replay billed to ``retries`` appends to :attr:`retry_log` — the
+    chaos harness cross-checks report sums against these event logs
+    exactly.
 
     Workers spawn lazily (first dispatch needing their location) and are
     reused across ``execute`` calls; :meth:`close` is idempotent (it
@@ -364,12 +469,24 @@ class ClusterExecutor(_PlanExecutor):
         shm_min_bytes: int = 1024,
         shm_segment_bytes: int = 4 << 20,
         shm_budget_bytes: int | None = None,
+        steal: bool = False,
+        autoscale: bool = False,
+        min_workers: int = 1,
+        max_workers: int | None = None,
+        scale_up_backlog: int = 2,
+        scale_idle_ticks: int = 50,
     ):
         super().__init__(engine)
         self.max_retries = max_retries
         self.heartbeat_s = heartbeat_s
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.fault_plan = fault_plan
+        self.steal_enabled = bool(steal or autoscale)
+        self.autoscale = autoscale
+        self.min_workers = min_workers
+        self.max_workers = max_workers if max_workers else (os.cpu_count() or 4)
+        self.scale_up_backlog = scale_up_backlog
+        self.scale_idle_ticks = scale_idle_ticks
         # Env default: the CI fault lane (and any operator) can turn on
         # worker logging for every executor in a process without plumbing
         # the argument through app code.
@@ -412,6 +529,30 @@ class ClusterExecutor(_PlanExecutor):
         # epoch -> live _DrainContext, in open order.  The sync path keeps
         # exactly one; pipelined submissions keep one per in-flight entry.
         self._contexts: dict[int, _DrainContext] = {}
+        # -- elasticity state (DESIGN.md §15) --
+        # wid -> send-ordered [(ctx, unit), ...] of un-replied unit
+        # dispatches: the victim queue steal probes select from.
+        self._dispatch_order: dict[int, list] = {}
+        self._steal_probes: dict[int, tuple] = {}  # victim wid -> (token, wants)
+        self._steal_seq = itertools.count(1)
+        self._roamers: set[int] = set()            # autoscaler-grown workers
+        self._idle_ticks: dict[int, int] = {}      # roamer wid -> idle streak
+        self._preempting: set[int] = set()         # planned shrinks in progress
+        # wid -> observed per-unit service-time EMA (and the last reply /
+        # batch-send mark the next sample measures from): the steal gate's
+        # per-worker evidence — see _on_reply and _steal_gate.
+        self._task_ema: dict[int, float] = {}
+        self._reply_mark: dict[int, float] = {}
+        # Heartbeat debounce: staleness counts only *observed* silence —
+        # time the driver actually spent pumping replies (see
+        # _check_workers), so a driver-side stall can't bury idle workers.
+        self._last_pump = time.monotonic()
+        self._silence: dict[int, float] = {}
+        #: event logs the chaos harness cross-checks report counters
+        #: against — one entry per billed steal / retry / scale event.
+        self.steal_log: list[dict] = []
+        self.retry_log: list[dict] = []
+        self.scale_log: list[dict] = []
         if log_dir:
             os.makedirs(log_dir, exist_ok=True)
         _LIVE_POOLS.add(self)
@@ -456,6 +597,7 @@ class ClusterExecutor(_PlanExecutor):
         self._workers[wid] = handle
         self._by_location[location] = wid
         self._last_hb[wid] = time.monotonic()
+        self._silence[wid] = 0.0
         _LIVE_POOLS.add(self)  # re-register after a close()
         return handle
 
@@ -485,18 +627,32 @@ class ClusterExecutor(_PlanExecutor):
 
         The preference keeps replays and driver RPCs off a worker that is
         mid-unit (they would otherwise wait out its reply) whenever any
-        other survivor is idle.
+        other survivor's window is free.  Among window-free workers the
+        one with the lowest observed service-time EMA wins — then the one
+        with the least already staged — so replayed (and stolen) units
+        batch onto the fastest free worker instead of spreading back onto
+        an idle straggler.
         """
         fallback = None
+        free: list[_WorkerHandle] = []
         for wid in sorted(self._workers):
             if wid == not_worker:
                 continue
             handle = self._workers[wid]
             if not handle.alive():
                 continue
-            if self._outstanding.get(wid, 0) == 0 and wid not in self._outbox:
-                return handle
+            if self._outstanding.get(wid, 0) == 0:
+                free.append(handle)
             fallback = fallback or handle
+        if free:
+            return min(
+                free,
+                key=lambda h: (
+                    self._task_ema.get(h.id, 0.0),
+                    len(self._outbox.get(h.id, ())),
+                    h.id,
+                ),
+            )
         return fallback
 
     # -- the Executor entry points --------------------------------------------
@@ -652,7 +808,12 @@ class ClusterExecutor(_PlanExecutor):
         return worker.id in self._workers
 
     def _dispatch_remote(
-        self, unit: _Unit, ctx: _DrainContext, *, prefer_survivor: bool = False
+        self,
+        unit: _Unit,
+        ctx: _DrainContext,
+        *,
+        prefer_survivor: bool = False,
+        target: _WorkerHandle | None = None,
     ) -> bool:
         """Stage one unit for its location's worker (or any survivor).
 
@@ -670,11 +831,15 @@ class ClusterExecutor(_PlanExecutor):
         ``prefer_survivor`` is the replay path: a requeued unit goes to a
         worker that is already alive (locality traded for liveness — the
         dead worker's location has no owner anyway); only when the whole
-        pool is gone does a fresh worker spawn.
+        pool is gone does a fresh worker spawn.  ``target`` pins the
+        worker outright — the steal paths use it to hand a unit to a
+        specific idle thief.
         """
         task = unit.tasks[0]
-        worker = (self._survivor() if prefer_survivor else None) or self._worker_for(
-            unit.location
+        worker = (
+            target
+            or (self._survivor() if prefer_survivor else None)
+            or self._worker_for(unit.location)
         )
         if ctx.state.errors:  # a death inside _worker_for poisoned the run
             return True
@@ -741,10 +906,13 @@ class ClusterExecutor(_PlanExecutor):
                 continue
             send_s = time.perf_counter() - t0
             self._outstanding[wid] = self._outstanding.get(wid, 0) + len(entries)
+            self._reply_mark[wid] = t0  # the batch's first service starts now
             entries[0][3].report.ipc_bytes += sent
+            order = self._dispatch_order.setdefault(wid, [])
             for _attaches, _msg, unit, ectx in entries:
                 ectx.meta[unit.index] = (t0, send_s)
                 ectx.inflight[unit.index] = unit
+                order.append((ectx, unit))  # send order = steal candidacy order
 
     def _open_context(self, state: _SchedulerState, report) -> _DrainContext:
         self._epoch += 1
@@ -777,6 +945,12 @@ class ClusterExecutor(_PlanExecutor):
             for refs in ctx.shm_pins.values():
                 self._shm.unpin_refs(refs)
         ctx.shm_pins.clear()
+        for wid, order in list(self._dispatch_order.items()):
+            kept = [e for e in order if e[0] is not ctx]
+            if kept:
+                self._dispatch_order[wid] = kept
+            else:
+                del self._dispatch_order[wid]
         self._contexts.pop(ctx.epoch, None)
 
     def _sweep_context(self, ctx: _DrainContext) -> None:
@@ -801,7 +975,11 @@ class ClusterExecutor(_PlanExecutor):
                 unit = ctx.ready.popleft()
                 if self._remotable(unit):
                     if not self._dispatch_remote(unit, ctx):
-                        deferred.append(unit)
+                        # Owner busy: an idle sibling may take it now
+                        # (driver-side steal) instead of waiting the
+                        # owner's window out.
+                        if not self._steal_reroute(unit, ctx):
+                            deferred.append(unit)
                 else:
                     # In-process unit (merge fold, driver view).  Runs
                     # on the calling thread; its task() dispatches may
@@ -816,6 +994,10 @@ class ClusterExecutor(_PlanExecutor):
             if ctx.ready or ctx.replays:
                 self._sweep_context(ctx)
         self._flush_outbox()
+        if self.steal_enabled:
+            self._maybe_steal()
+        if self.autoscale:
+            self._autoscale()
 
     def _any_work(self) -> bool:
         """Anything in flight, staged, or dispatchable across all contexts."""
@@ -936,11 +1118,30 @@ class ClusterExecutor(_PlanExecutor):
         kind, wid = msg[0], msg[1]
         if wid in self._workers:  # never resurrect a buried worker's heartbeat
             self._last_hb[wid] = time.monotonic()
+            self._silence[wid] = 0.0
         if kind in ("hb", "ready"):
+            return
+        if kind == "steal_ok":
+            self._on_steal_grant(wid, msg[2], msg[3])
             return
         # any unit/call reply closes that worker's one-command window
         if wid in self._workers and self._outstanding.get(wid, 0) > 0:
             self._outstanding[wid] -= 1
+        if kind in ("unit_done", "unit_error"):
+            # Per-worker service-time EMA: replies from one batch arrive
+            # back-to-back, so the gap since the previous reply (or the
+            # batch send) is this unit's observed service time.  This is
+            # what the steal gate feeds on — a straggler's EMA dwarfs its
+            # siblings', so steals flow off it and never back onto it.
+            mark = self._reply_mark.get(wid)
+            now_pc = time.perf_counter()
+            if mark is not None:
+                service = max(now_pc - mark, 1e-6)
+                prev = self._task_ema.get(wid)
+                self._task_ema[wid] = (
+                    service if prev is None else 0.5 * prev + 0.5 * service
+                )
+            self._reply_mark[wid] = now_pc
         if kind in ("call_done", "call_error"):
             if msg[3] not in self._pending_calls:
                 if kind == "call_done":
@@ -952,6 +1153,11 @@ class ClusterExecutor(_PlanExecutor):
         # unit replies route to their context by epoch; no live context of
         # that epoch (an earlier run, or one already closed) means stale
         epoch, index = msg[2], msg[3]
+        order = self._dispatch_order.get(wid)
+        if order:  # the replied unit is no longer stealable from this worker
+            self._dispatch_order[wid] = [
+                e for e in order if not (e[0].epoch == epoch and e[1].index == index)
+            ]
         ctx = self._contexts.get(epoch)
         stale = ctx is None or ctx.state.errors or ctx.state.is_done(index)
         unit = None if stale else ctx.inflight.pop(index, None)
@@ -1005,12 +1211,321 @@ class ClusterExecutor(_PlanExecutor):
         ctx.ready.extend(sorted(ctx.state.complete(unit, value), key=lambda u: u.index))
 
     def _check_workers(self) -> None:
+        """Liveness sweep: bury dead processes and heartbeat-stale hangs.
+
+        Staleness is debounced against the *driver-side* pump cadence: a
+        worker's silence clock only advances by the time since the last
+        check, capped at a few poll quanta.  While the driver pumps
+        normally that accrues at real-time rate, so a genuinely mute
+        worker still times out in ``heartbeat_timeout_s`` — but a driver
+        stall (a long in-process merge, a blocked send, load on the CI
+        host) contributes one capped tick instead of the whole gap, and
+        the stalled-out heartbeats waiting in the pipe zero the clock at
+        the very next pump.  Before this debounce an idle worker parked
+        in ``recv`` could be declared hung purely because the *driver*
+        was busy — the false-staleness window the regression test in
+        ``tests/test_elastic.py`` pins.
+        """
         now = time.monotonic()
+        tick = min(
+            now - self._last_pump,
+            max(self.poll_s, self.heartbeat_s) * 4,
+        )
+        self._last_pump = now
         for wid, handle in list(self._workers.items()):
-            stale = now - self._last_hb.get(wid, now) > self.heartbeat_timeout_s
-            if handle.alive() and not stale:
+            if not handle.alive():
+                self._on_worker_death(wid)
                 continue
-            self._on_worker_death(wid)
+            silence = self._silence.get(wid, 0.0) + tick
+            self._silence[wid] = silence
+            if silence > self.heartbeat_timeout_s:
+                self._on_worker_death(wid)
+
+    # -- work stealing (DESIGN.md §15) ----------------------------------------
+
+    def _steal_model(self):
+        """The fitted :class:`~repro.api.autotune.CostModel`, if any tuner
+        has one — the locality-aware steal gate's first choice of evidence.
+        """
+        for entry in getattr(self, "_tuners", {}).values():
+            for item in entry if isinstance(entry, tuple) else (entry,):
+                model = getattr(item, "model", None)
+                if model is not None:
+                    return model
+        return None
+
+    def _steal_task_s(self) -> float:
+        """Fallback per-task seconds when no model is fitted: the profiled
+        mean unit wall (send → reply), floored so a cold profile store
+        still lets the gate reason instead of dividing by zero.
+        """
+        walls = [
+            p.mean_wall_s for p in self.profile.profiles.values()
+            if p.mean_wall_s > 0.0
+        ]
+        return max(sum(walls) / len(walls), 1e-4) if walls else 1e-3
+
+    def _steal_gate(
+        self,
+        victim_wid: int,
+        thief_wid: int,
+        queued_tasks: int,
+        operand_bytes: int = 0,
+    ) -> bool:
+        """Cost-model steal decision for ``queued_tasks`` waiting units.
+
+        The wait side uses the victim's observed service-time EMA when one
+        exists (a straggler's inflated EMA is exactly what makes its queue
+        worth raiding); the fetch side charges the thief's EMA for
+        actually executing the stolen units — so a slow worker can never
+        profitably steal work back from a fast one (no ping-pong).  With
+        the shm data plane a steal moves descriptors, not bytes, so
+        ``operand_bytes`` only bites when shm is off and the operands
+        would re-cross the pipe.
+        """
+        return should_steal(
+            self._steal_model(),
+            queued_tasks=queued_tasks,
+            operand_bytes=0 if self._shm is not None else operand_bytes,
+            fallback_task_s=self._steal_task_s(),
+            victim_task_s=self._task_ema.get(victim_wid),
+            thief_task_s=self._task_ema.get(thief_wid, 0.0),
+        )
+
+    def _idle_workers(self) -> list[_WorkerHandle]:
+        """Live workers with nothing outstanding and nothing staged."""
+        return [
+            self._workers[wid]
+            for wid in sorted(self._workers)
+            if self._workers[wid].alive()
+            and self._outstanding.get(wid, 0) == 0
+            and wid not in self._outbox
+            and wid not in self._preempting
+        ]
+
+    def _maybe_steal(self) -> None:
+        """Probe the most-loaded worker on behalf of an idle sibling.
+
+        Victim selection: the live worker with the deepest un-replied
+        queue (at least one unit *behind* the one presumed running).  The
+        probe asks for every un-replied unit; the victim grants whatever
+        it has not started — the head it already popped keeps running, so
+        exactly-once needs no further coordination.  At most one probe per
+        victim is in flight, and the probe itself is exempt from the
+        one-command window: it is a fixed few hundred bytes against a
+        64KB pipe the victim drains between units, so it can never block
+        the parent the way a unit batch could.
+        """
+        if not self.steal_enabled or not self._contexts:
+            return
+        idle = self._idle_workers()
+        if not idle:
+            return
+        thief = min(idle, key=lambda w: (self._task_ema.get(w.id, 0.0), w.id))
+        for vid in sorted(
+            self._workers, key=lambda w: -self._outstanding.get(w, 0)
+        ):
+            if vid in self._steal_probes or vid in self._preempting:
+                continue
+            queue = self._dispatch_order.get(vid, ())
+            backlog = self._outstanding.get(vid, 0) - 1
+            if backlog < 1 or not queue:
+                continue
+            cand = [
+                (c, u) for c, u in queue if not c.state.is_done(u.index)
+            ]
+            if not cand or not self._steal_gate(vid, thief.id, backlog):
+                continue
+            victim = self._workers.get(vid)
+            if victim is None or not victim.alive():
+                continue
+            token = next(self._steal_seq)
+            wants = tuple((c.epoch, u.index) for c, u in cand)
+            try:
+                sent = victim.send(("steal", token, wants))
+            except OSError:
+                self._on_worker_death(vid)
+                continue
+            cand[0][0].report.ipc_bytes += sent
+            self._steal_probes[vid] = (token, wants)
+            return  # one probe per pump round bounds control traffic
+
+    def _on_steal_grant(self, wid: int, token: int, granted: tuple) -> None:
+        """Fold a ``steal_ok`` reply in: void the victim's claim on every
+        granted unit and requeue it for an idle survivor.
+
+        Each granted unit was removed from the victim's local queue
+        *before* execution, so its reply will never come: its window slot
+        is released here, its dispatch pins dropped (the thief's dispatch
+        re-pins — the pin accounting the property tests audit), its
+        attempt refunded via :meth:`_SchedulerState.release` (a steal is
+        not a failure), and the unit lands in its context's replay queue,
+        which dispatches survivor-first.  A grant that raced a completed
+        unit (stale by epoch or by ``is_done``) is dropped harmlessly.
+        """
+        probe = self._steal_probes.pop(wid, None)
+        if probe is not None and probe[0] != token:  # superseded probe
+            self._steal_probes[wid] = probe
+        if wid in self._workers and granted:
+            self._outstanding[wid] = max(
+                0, self._outstanding.get(wid, 0) - len(granted)
+            )
+        order = self._dispatch_order.get(wid)
+        if order and granted:
+            taken = set(granted)
+            self._dispatch_order[wid] = [
+                e for e in order if (e[0].epoch, e[1].index) not in taken
+            ]
+        for epoch, index in granted:
+            ctx = self._contexts.get(epoch)
+            if ctx is None or ctx.state.errors:
+                continue
+            unit = ctx.inflight.pop(index, None)
+            if unit is None or ctx.state.is_done(index):
+                continue
+            self._release_unit(unit)
+            if self._shm is not None:
+                refs = ctx.shm_pins.pop(index, None)
+                if refs:
+                    self._shm.unpin_refs(refs)
+            if not ctx.state.release(unit):
+                continue  # completed under the victim after all: stale grant
+            ctx.report.steals += 1
+            self.steal_log.append(
+                {"unit": index, "epoch": epoch, "victim": wid, "kind": "probe"}
+            )
+            ctx.replays.append(unit)
+
+    def _steal_reroute(self, unit: _Unit, ctx: _DrainContext) -> bool:
+        """Driver-side steal: a ready unit whose location owner is busy
+        goes straight to an idle sibling when the cost gate approves —
+        the unit never waits out the owner's window at all.
+        """
+        if not self.steal_enabled:
+            return False
+        owner_wid = self._by_location.get(unit.location)
+        if owner_wid is None:
+            return False
+        idle = [
+            w for w in self._idle_workers()
+            if w.id != owner_wid and w.location != unit.location
+        ]
+        if not idle:
+            return False
+        thief = min(idle, key=lambda w: (self._task_ema.get(w.id, 0.0), w.id))
+        backlog = self._outstanding.get(owner_wid, 0)
+        if not self._steal_gate(owner_wid, thief.id, backlog):
+            return False
+        if not self._dispatch_remote(unit, ctx, target=thief):
+            return False
+        ctx.report.steals += 1
+        self.steal_log.append(
+            {"unit": unit.index, "epoch": ctx.epoch, "victim": owner_wid,
+             "kind": "reroute"}
+        )
+        return True
+
+    # -- elasticity: grow / shrink (DESIGN.md §15) -----------------------------
+
+    def _scale_report(self):
+        """Where a scale event bills: the oldest live context's report when
+        a run is in flight (the autoscaler path — its sums then reconcile
+        against ``scale_log`` exactly), else the engine's current report
+        (manual grow/shrink between runs).
+        """
+        for ctx in self._contexts.values():
+            return ctx.report
+        return self.engine.current_report
+
+    def grow(self) -> int | None:
+        """Add one roamer worker (autoscaler hook; also a manual knob).
+
+        Roamers own no partition — they are fed exclusively by the steal
+        paths, so growing the pool never perturbs locality routing for
+        owned locations.  Respects ``max_workers``; bills one
+        ``scale_events``.
+        """
+        if len([w for w in self._workers.values() if w.alive()]) >= self.max_workers:
+            return None
+        wid = next(self._next_wid)
+        self._used_wids.add(wid)
+        self._roamers.add(wid)
+        # Synthetic negative location: unique, never routed to by
+        # _worker_for (real locations are >= 0, and -wid < -1 for all
+        # roamer wids), so the only way work reaches a roamer is a steal.
+        self._spawn(wid, -wid)
+        self._scale_report().scale_events += 1
+        self.scale_log.append({"event": "grow", "worker": wid})
+        return wid
+
+    def shrink(self, wid: int | None = None) -> int | None:
+        """Preempt one worker — planned scale-down as deliberate death.
+
+        The drain IS the fault path: the preempted worker's queued and
+        in-flight units go through exactly the requeue/replay machinery a
+        kill exercises (same code, bit-identical results), except the
+        voided attempts are refunded and nothing bills ``retries`` — a
+        planned shrink must never push a unit toward retry exhaustion
+        (spot-instance semantics).  Default victim: the idlest roamer,
+        else the highest-wid live worker (location owners respawn on
+        demand).  Bills one ``scale_events``.
+        """
+        if wid is None:
+            candidates = sorted(
+                (w for w in self._roamers if w in self._workers),
+                key=lambda w: -self._idle_ticks.get(w, 0),
+            ) or sorted(self._workers, reverse=True)
+            wid = candidates[0] if candidates else None
+        if wid is None or wid not in self._workers:
+            return None
+        self._preempting.add(wid)
+        self._scale_report().scale_events += 1
+        self.scale_log.append({"event": "shrink", "worker": wid})
+        self._on_worker_death(wid)
+        return wid
+
+    def _autoscale(self) -> None:
+        """One autoscaler tick (runs inside every pump).
+
+        Grow on queue depth: queued-behind-running units across the pool,
+        plus everything parked in the driver-side ready/replay queues,
+        normalized per live worker.  Shrink on utilization: a roamer idle
+        for ``scale_idle_ticks`` consecutive ticks retires through
+        :meth:`shrink` — the preemption path, so even a race that slipped
+        it new work is safe.
+        """
+        if not self.autoscale:
+            return
+        live = [wid for wid, w in self._workers.items() if w.alive()]
+        if not live:
+            return
+        backlog = sum(
+            max(0, self._outstanding.get(wid, 0) - 1) for wid in live
+        ) + sum(
+            len(c.ready) + len(c.replays) for c in self._contexts.values()
+        )
+        if (
+            backlog >= self.scale_up_backlog * len(live)
+            and len(live) < self.max_workers
+        ):
+            self.grow()
+            return
+        for wid in sorted(self._roamers & set(self._workers)):
+            if (
+                self._outstanding.get(wid, 0) == 0
+                and wid not in self._outbox
+                and wid not in self._preempting
+            ):
+                streak = self._idle_ticks.get(wid, 0) + 1
+                self._idle_ticks[wid] = streak
+                if (
+                    streak >= self.scale_idle_ticks
+                    and len([w for w in self._workers.values() if w.alive()])
+                    > self.min_workers
+                ):
+                    self.shrink(wid)
+            else:
+                self._idle_ticks[wid] = 0
 
     def _on_worker_death(self, wid: int) -> None:
         """Supervisor: bury a dead/hung worker and replay its units."""
@@ -1021,9 +1536,26 @@ class ClusterExecutor(_PlanExecutor):
             del self._by_location[handle.location]
         self._attached = {k: v for k, v in self._attached.items() if k[0] != wid}
         self._last_hb.pop(wid, None)
+        self._silence.pop(wid, None)
         self._outstanding.pop(wid, None)
         self._outbox.pop(wid, None)  # staged units are assigned: requeued below
-        cause = "hung (heartbeat stale)" if handle.alive() else "process died"
+        self._steal_probes.pop(wid, None)
+        self._dispatch_order.pop(wid, None)
+        self._idle_ticks.pop(wid, None)
+        self._task_ema.pop(wid, None)
+        self._reply_mark.pop(wid, None)
+        self._roamers.discard(wid)
+        # Planned preemption (scale-down) drains through this very path —
+        # the elasticity contract: what survives a kill survives a shrink,
+        # bit-identically — but bills scale_events (already done by
+        # shrink()), not retries, and refunds the voided attempts.
+        preempted = wid in self._preempting
+        self._preempting.discard(wid)
+        cause = (
+            "preempted (scale-down)"
+            if preempted
+            else "hung (heartbeat stale)" if handle.alive() else "process died"
+        )
         if handle.alive():  # hung (heartbeat-stale), not dead: put it down
             handle.process.terminate()
         handle.process.join(1.0)
@@ -1063,6 +1595,13 @@ class ClusterExecutor(_PlanExecutor):
                     refs = ctx.shm_pins.pop(unit.index, None)
                     if refs:
                         self._shm.unpin_refs(refs)
+                if preempted:
+                    # Spot-instance semantics: the voided attempt is
+                    # refunded and nothing bills retries — a planned
+                    # shrink must not be able to poison a unit.
+                    ctx.state.refund_attempt(unit.index)
+                    ctx.replays.append(unit)
+                    continue
                 task = unit.tasks[0]
                 ctx.record_failure(unit.index, wid, cause, handle.log_path)
                 if ctx.state.attempts[unit.index] > self.max_retries:
@@ -1079,6 +1618,10 @@ class ClusterExecutor(_PlanExecutor):
                     )
                     break
                 ctx.report.retries += 1
+                self.retry_log.append(
+                    {"unit": unit.index, "epoch": ctx.epoch, "worker": wid,
+                     "cause": cause}
+                )
                 # Enqueue, don't dispatch: this may run deep inside a _pump
                 # — the drain sweep replays the unit once control unwinds,
                 # so death handling never nests a send inside a send.
@@ -1233,6 +1776,14 @@ class ClusterExecutor(_PlanExecutor):
         self._pending_calls.clear()
         self._outstanding.clear()
         self._outbox.clear()
+        self._dispatch_order.clear()
+        self._steal_probes.clear()
+        self._roamers.clear()
+        self._idle_ticks.clear()
+        self._preempting.clear()
+        self._task_ema.clear()
+        self._reply_mark.clear()
+        self._silence.clear()
         for w in workers:
             w.stop()
         if self._shm is not None:

@@ -20,7 +20,20 @@ the parent coalesces a scheduling sweep's commands into one send)
     ``("unit", epoch, TaskSpec, attempt)`` — execute one task descriptor;
     ``("call", epoch, call_id, fn_ref, args, key)`` — execute one
     driver-level task RPC (the ``executor.task()`` path);
+    ``("steal", token, ((epoch, index), ...))`` — a steal probe: grant
+    every listed unit still sitting *unstarted* in the local queue back
+    to the parent (reply ``steal_ok``); anything already started or
+    finished is silently kept — exactly-once by construction;
     ``("stop",)`` — exit cleanly.
+
+Work stealing (DESIGN.md §15): a batched send can park several units in
+the worker's local queue, so the main loop keeps a pending deque and
+polls the command channel between unit executions — that poll is where
+steal probes are answered, bounding probe latency by one unit's wall
+time.  A granted unit is removed from the queue *before* any of its
+work runs, so a steal can never double-execute; the parent re-dispatches
+granted units to the idle thief with their shared-memory descriptors
+(a steal moves descriptors, not bytes).
 
 worker → parent, over the worker's own reply connection (each message
 pre-pickled so the parent can bill exact ``ipc_bytes``)
@@ -50,13 +63,16 @@ worker ``os._exit`` on *receiving* its nth dispatch (the unit is lost
 in-flight, exercising requeue); ``kill_on_retry`` does the same when it
 receives an already-replayed unit (exercising retry exhaustion);
 ``mute_after`` silences heartbeats and hangs (exercising the
-heartbeat-timeout detector while the process stays alive).  Dispatch
+heartbeat-timeout detector while the process stays alive); ``slow_s``
+sleeps before every unit execution — the deterministic straggler hook
+the elastic bench and chaos harness slow one worker with.  Dispatch
 counts are per unit/call message, so a fault keyed on "the nth dispatch"
 fires identically whether the commands arrived batched or one by one.
 """
 
 from __future__ import annotations
 
+import collections
 import os
 import pickle
 import threading
@@ -159,6 +175,7 @@ def worker_main(
     kill_after: int | None = None,
     kill_on_retry: bool = False,
     mute_after: int | None = None,
+    slow_s: float | None = None,
     log_path: str | None = None,
     result_prefix: str | None = None,
     result_min_bytes: int = 1024,
@@ -215,28 +232,42 @@ def worker_main(
         )
         return packed, wrote
 
+    #: unit/call messages received but not yet executed — the local queue
+    #: steal probes are answered against.
+    pending: collections.deque = collections.deque()
+
+    def handle_steal(msg) -> None:
+        """Grant every probed unit still unstarted in the local queue.
+
+        Exactly-once hinges on ordering: a unit is granted only while its
+        message is still in ``pending`` — removal here happens before any
+        of its work runs, and a unit already popped (running or finished)
+        is silently kept, so the parent's grant list and this worker's
+        execution set can never overlap.
+        """
+        _, token, wants = msg
+        want = set(wants)
+        granted = []
+        kept: collections.deque = collections.deque()
+        for qm in pending:
+            if qm[0] == "unit" and (qm[1], qm[2].index) in want:
+                granted.append((qm[1], qm[2].index))
+            else:
+                kept.append(qm)
+        pending.clear()
+        pending.extend(kept)
+        reply(("steal_ok", worker_id, token, tuple(granted)))
+        _log_line(
+            log,
+            worker_id,
+            f"steal probe token={token} wants={len(wants)} "
+            f"granted={len(granted)}",
+        )
+
     def handle(msg) -> bool:
-        """Process one command message; False means exit the main loop."""
+        """Execute one unit/call message; False means exit the main loop."""
         nonlocal dispatches
         kind = msg[0]
-        if kind == "stop":
-            _log_line(log, worker_id, "stop")
-            return False
-        if kind == "attach":
-            manifest = msg[1]
-            from repro.api.chunkstore import AttachedStore
-
-            store = stores.get(manifest.uid)
-            if store is not None:
-                store.merge(manifest)  # a grown store's delta
-            else:
-                stores[manifest.uid] = AttachedStore(manifest)
-            _log_line(
-                log,
-                worker_id,
-                f"attach store={manifest.uid} chunks={len(manifest.chunks)}",
-            )
-            return True
 
         dispatches += 1
         if mute_after is not None and dispatches >= mute_after:
@@ -255,6 +286,8 @@ def worker_main(
                     log, worker_id, f"FAULT: killing on retried unit {spec.index}"
                 )
                 os._exit(RETRY_KILLED_EXIT)
+            if slow_s:
+                time.sleep(slow_s)  # injected straggler: 10×-ish per unit
             try:
                 fn = _resolve_fn(spec.fn_ref, fns)
                 ops, loaded = _build_operands(
@@ -299,18 +332,63 @@ def worker_main(
             _log_line(log, worker_id, f"unknown message {kind!r}; ignoring")
         return True
 
-    running = True
-    while running:
-        try:
-            payload = conn.recv_bytes()
-        except EOFError:
-            _log_line(log, worker_id, "command channel closed; exiting")
-            break
+    def ingest(payload) -> bool:
+        """Route one received message; False means stop was seen.
+
+        Control traffic (attach, steal probes, stop) is handled inline so
+        it takes effect ahead of queued work; unit/call messages append to
+        ``pending`` in arrival order — execution order equals receive
+        order minus whatever a steal removed.
+        """
         msg = pickle.loads(payload)
         for m in msg[1] if msg[0] == "batch" else (msg,):
-            if not handle(m):
-                running = False
+            kind = m[0]
+            if kind == "stop":
+                _log_line(log, worker_id, "stop")
+                return False
+            if kind == "attach":
+                manifest = m[1]
+                from repro.api.chunkstore import AttachedStore
+
+                store = stores.get(manifest.uid)
+                if store is not None:
+                    store.merge(manifest)  # a grown store's delta
+                else:
+                    stores[manifest.uid] = AttachedStore(manifest)
+                _log_line(
+                    log,
+                    worker_id,
+                    f"attach store={manifest.uid} chunks={len(manifest.chunks)}",
+                )
+            elif kind == "steal":
+                handle_steal(m)
+            else:
+                pending.append(m)
+        return True
+
+    running = True
+    while running:
+        if pending:
+            # Between units: drain whatever control traffic has arrived —
+            # this is where steal probes are answered, so probe latency is
+            # bounded by one unit's wall time.
+            try:
+                while running and conn.poll(0):
+                    running = ingest(conn.recv_bytes())
+            except (EOFError, OSError):
+                _log_line(log, worker_id, "command channel closed; exiting")
                 break
+            if not running or not pending:
+                continue
+            if not handle(pending.popleft()):
+                running = False
+        else:
+            try:
+                payload = conn.recv_bytes()
+            except EOFError:
+                _log_line(log, worker_id, "command channel closed; exiting")
+                break
+            running = ingest(payload)
 
     stop_beat.set()
     shm_att.close()  # release our mappings; unlink stays the parent's job

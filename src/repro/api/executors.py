@@ -365,10 +365,57 @@ class _SchedulerState:
         return [u for u in self.units if not u.deps]
 
     def assign(self, unit: _Unit, owner: Hashable) -> None:
-        """Record who is executing ``unit`` (attempt counted on assign)."""
+        """Record who is executing ``unit`` (attempt counted on assign).
+
+        Double-claim prevention (the work-stealing invariant): a unit that
+        is still owned by a *different* live owner cannot be re-assigned —
+        ownership must first move through :meth:`requeue` (death),
+        :meth:`release` (steal / preemption), or completion.  A late
+        assign raced against a completed unit is equally rejected; both
+        raise so the property suite can falsify any interleaving that
+        would run a unit twice.
+        """
         with self._lock:
+            if unit.index in self._done_units:
+                raise RuntimeError(
+                    f"unit {unit.index} assigned to {owner!r} after completion"
+                )
+            prev = self.owner.get(unit.index)
+            if prev is not None and prev != owner:
+                raise RuntimeError(
+                    f"unit {unit.index} double-claimed: owned by {prev!r}, "
+                    f"assigned to {owner!r}"
+                )
             self.owner[unit.index] = owner
             self.attempts[unit.index] += 1
+
+    def release(self, unit: _Unit) -> bool:
+        """Disown a claimed-but-unstarted unit (steal grant / preemption).
+
+        The voided dispatch's attempt is refunded: a steal is a scheduling
+        decision, not a failure, so it must not count against
+        ``max_retries``.  Returns False — and changes nothing — when the
+        unit already completed (the victim raced the grant) or was never
+        owned, so callers can treat the grant as stale.
+        """
+        with self._lock:
+            if unit.index in self._done_units or unit.index not in self.owner:
+                return False
+            del self.owner[unit.index]
+            if self.attempts[unit.index] > 0:
+                self.attempts[unit.index] -= 1
+            return True
+
+    def refund_attempt(self, index: int) -> None:
+        """Refund one attempt after :meth:`requeue` of a *planned* preemption.
+
+        Scale-down drains through the same requeue/replay path as a death,
+        but a deliberate shrink must not push units toward retry
+        exhaustion — spot-instance semantics.
+        """
+        with self._lock:
+            if self.attempts[index] > 0:
+                self.attempts[index] -= 1
 
     def is_done(self, index: int) -> bool:
         with self._lock:

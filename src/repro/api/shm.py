@@ -270,6 +270,22 @@ class ShmStore:
         with self._lock:
             return list(self._segments)
 
+    def pinned_segments(self) -> dict[str, int]:
+        """Segment name → live pin count (pins > 0 only).
+
+        The audit hook for pin accounting across ownership changes: after
+        a drain settles — steals, preemptions, deaths included — every
+        dispatch-scoped pin must have been released exactly once, so this
+        must be empty (``locks``, the manifest lifecycle guards, are a
+        separate counter and do not show up here).
+        """
+        with self._lock:
+            return {
+                name: seg.pins
+                for name, seg in self._segments.items()
+                if seg.pins > 0
+            }
+
     # -- allocation internals (lock held) -------------------------------------
 
     def _alloc(self, need: int) -> tuple[_Segment | None, int]:

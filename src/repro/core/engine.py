@@ -81,6 +81,8 @@ class EngineReport:
     retries: int = 0             # units replayed after a worker death (cluster)
     overlapped_launches: int = 0  # units admitted while an earlier execute was
     #                               still unresolved (pipelined iteration)
+    steals: int = 0              # units moved to an idle worker by work stealing
+    scale_events: int = 0        # autoscaler pool changes (grow + shrink)
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
