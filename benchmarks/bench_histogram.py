@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Baseline, LocalExecutor, Rechunk, SplIter
+from repro.api import Baseline, Rechunk, SplIter, engine
 from repro.core.apps.histogram import histogram
 from repro.core.blocked import BlockedArray, round_robin_placement
 
@@ -55,7 +55,7 @@ def _run(x, policy, *, bins, repeats):
     # call only (the later ones hit the prepare cache), so it is captured
     # separately — the steady-state report would show bytes_moved == 0 for
     # Rechunk and hide the very cost these tables contrast.
-    ex = LocalExecutor()
+    ex = engine("local")
     rep_box = {}
 
     def once():

@@ -12,7 +12,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Baseline, JobClient, JobServer, Rechunk, SplIter
+from repro.api import Baseline, JobClient, Rechunk, SplIter, engine
 from repro.core.apps.kmeans import kmeans
 from repro.core.blocked import BlockedArray, round_robin_placement
 
@@ -78,6 +78,8 @@ def _aggregate_row(pol, executor_name: str, warm, res) -> dict:
         "remote_dispatches": sum(r.remote_dispatches for r in res.reports),
         "ipc_bytes": sum(r.ipc_bytes for r in res.reports),
         "shm_bytes": sum(r.shm_bytes for r in res.reports),
+        "p2p_bytes": sum(r.p2p_bytes for r in res.reports),
+        "driver_merge_bytes": sum(r.driver_merge_bytes for r in res.reports),
         "retries": sum(r.retries for r in res.reports),
         "jobs": 0,
         "resumes": 0,
@@ -106,7 +108,50 @@ def smoke() -> list[dict]:
     rows.append(_server_row())
     rows.extend(_pipelined_rows())
     rows.append(_elastic_row())
+    rows.append(_p2p_row())
     return rows
+
+
+def _p2p_row() -> dict:
+    """The peer-exchange axis (DESIGN.md §16): worker-side merge folds.
+
+    Same iterative plan on two cluster pools — ``p2p=False`` (every
+    partial crosses the reply pipe for a driver-side fold) vs ``p2p=True``
+    (each location's fold chain runs worker-side over published
+    ``/dev/shm`` partials).  With 4 partitions per location the driver's
+    merge traffic must collapse ≥4× (N partials → one merged partial per
+    location), the member bytes must reappear as ``p2p_bytes``, and the
+    centers must stay bit-identical — the fold tree is the same
+    association in the same order on both routes.  All three are
+    structural; the row is baseline-diffed exactly.
+    """
+    x = _dataset(2, 8, 8192, d=8)
+    pol = SplIter(partitions_per_location=4)
+
+    pinned_ex = engine("cluster", p2p=False)
+    kmeans(x, k=8, iters=2, policy=pol, executor=pinned_ex)  # warm
+    pinned = kmeans(x, k=8, iters=3, policy=pol, executor=pinned_ex)
+    pinned_ex.close()
+
+    ex = engine("cluster", p2p=True)
+    warm = kmeans(x, k=8, iters=2, policy=pol, executor=ex)
+    res = kmeans(x, k=8, iters=3, policy=pol, executor=ex)
+    ex.close()
+
+    assert bool(jnp.all(res.centers == pinned.centers)), (
+        "p2p kmeans diverged from the pinned run"
+    )
+    p2p_bytes = sum(r.p2p_bytes for r in res.reports)
+    merged = sum(r.driver_merge_bytes for r in res.reports)
+    pinned_merged = sum(r.driver_merge_bytes for r in pinned.reports)
+    assert p2p_bytes > 0, "p2p kmeans never folded worker-side"
+    assert pinned_merged >= 4 * merged, (
+        f"driver merge traffic did not collapse: pinned {pinned_merged}B "
+        f"vs p2p {merged}B"
+    )
+    row = _aggregate_row(pol, "cluster-p2p", warm, res)
+    row["pinned_driver_merge_bytes"] = pinned_merged
+    return row
 
 
 def _pipelined_rows() -> list[dict]:
@@ -132,12 +177,10 @@ def _pipelined_rows() -> list[dict]:
     """
     from statistics import median
 
-    from repro.api import ClusterExecutor, ThreadedExecutor
-
     x = _dataset(2, 8, 8192, d=8)
     pol = SplIter(partitions_per_location=2)
     rows = []
-    for name, ex in (("threaded", ThreadedExecutor()), ("cluster", ClusterExecutor())):
+    for name, ex in (("threaded", engine("threaded")), ("cluster", engine("cluster"))):
         kmeans(x, k=8, iters=2, policy=pol, executor=ex)  # warm barriered
         kmeans(x, k=8, iters=2, policy=pol, executor=ex, pipeline=True)
         bars, pipes = [], []
@@ -182,13 +225,13 @@ def _elastic_row() -> dict:
     """
     from statistics import median
 
-    from repro.api import ClusterExecutor, FaultPlan
+    from repro.api import FaultPlan
 
     x = _dataset(2, 8, 8192, d=8)
     pol = SplIter(partitions_per_location=4)
     slow = FaultPlan(slow=((0, 0.05),))
 
-    pinned_ex = ClusterExecutor(fault_plan=slow)
+    pinned_ex = engine("cluster", fault_plan=slow)
     kmeans(x, k=8, iters=2, policy=pol, executor=pinned_ex)  # warm
     pinned_walls, pinned_res = [], None
     for _ in range(3):
@@ -197,7 +240,7 @@ def _elastic_row() -> dict:
         pinned_walls.append(time.perf_counter() - t0)
     pinned_ex.close()
 
-    ex = ClusterExecutor(fault_plan=slow, steal=True)
+    ex = engine("cluster", fault_plan=slow, steal=True)
     warm = kmeans(x, k=8, iters=2, policy=pol, executor=ex)  # warm
     walls, res = [], None
     for _ in range(3):
@@ -232,7 +275,7 @@ def _server_row() -> dict:
     x = _dataset(2, 4, 1024, d=4)
     pol = SplIter()
     ref = kmeans(x, k=4, iters=3, policy=pol)
-    server = JobServer()
+    server = engine("server")
     client = JobClient(server, tenant="bench")
     warm = kmeans(x, k=4, iters=3, policy=pol, executor=client)  # warm+prepare
     jobs_before = len(server.jobs())

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Baseline, LocalExecutor, Rechunk, SplIter
+from repro.api import Baseline, Rechunk, SplIter, engine
 from repro.core.apps.knn import _lookup, knn
 from repro.core.blocked import BlockedArray, round_robin_placement
 
@@ -125,7 +125,7 @@ def bench(quick: bool = True) -> list[Table]:
         fit = _blocked(rng.random((locs * 6 * 512, d)).astype(np.float32), 512, locs)
         qry = _blocked(rng.random((locs * 4 * 256, d)).astype(np.float32), 256, locs)
         for pol in POLICIES:
-            ex = LocalExecutor()   # persistent: amortized prepare + live tuner
+            ex = engine("local")   # persistent: amortized prepare + live tuner
             box = {}
 
             def once():
@@ -149,7 +149,7 @@ def bench(quick: bool = True) -> list[Table]:
             rng.random((locs * bpl * 512, d)).astype(np.float32), 512, locs
         )
         for pol in POLICIES:
-            ex = LocalExecutor()   # persistent: amortized prepare + live tuner
+            ex = engine("local")   # persistent: amortized prepare + live tuner
             box = {}
 
             def once():

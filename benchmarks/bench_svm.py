@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Baseline, LocalExecutor, Rechunk, SplIter
+from repro.api import Baseline, Rechunk, SplIter, engine
 from repro.core.apps.cascade_svm import cascade_svm
 from repro.core.blocked import BlockedArray, round_robin_placement
 
@@ -53,7 +53,7 @@ def _run(x, y, policy, *, steps, repeats):
     # prepare/tracing and advance the spliter_auto row's tuning schedule.
     # The rechunk traffic bill is paid by the FIRST call only (later calls
     # hit the prepare cache), so capture it separately for the tables.
-    ex = LocalExecutor()
+    ex = engine("local")
     box = {}
 
     def once():

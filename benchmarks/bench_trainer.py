@@ -98,6 +98,8 @@ def smoke() -> list[dict]:
             "prep_bytes": 0,
             "remote_dispatches": 0,
             "shm_bytes": 0,
+            "p2p_bytes": 0,
+            "driver_merge_bytes": 0,
             "retries": 0,
             "jobs": 0,
             "resumes": 0,
@@ -159,7 +161,7 @@ def _pipelined_sgd_rows() -> list[dict]:
     ``wall_s`` so the per-step barrier cost the pipeline removes is
     visible in the same row (informational, never baseline-diffed).
     """
-    from repro.api import ClusterExecutor, Collection, SplIter, ThreadedExecutor
+    from repro.api import Collection, SplIter, engine
     from repro.api.futures import resolve_deferred
 
     rng = np.random.default_rng(7)
@@ -196,7 +198,7 @@ def _pipelined_sgd_rows() -> list[dict]:
         return w, [f.result() for f in futs]
 
     rows = []
-    for name, ex in (("threaded", ThreadedExecutor()), ("cluster", ClusterExecutor())):
+    for name, ex in (("threaded", engine("threaded")), ("cluster", engine("cluster"))):
         try:
             barriered(ex)  # warm both arms: traces + prepare paid up front
             pipelined(ex)
@@ -227,6 +229,8 @@ def _pipelined_sgd_rows() -> list[dict]:
             "prep_bytes": sum(r.bytes_moved for r in ref_reports),
             "remote_dispatches": sum(r.remote_dispatches for r in reports),
             "shm_bytes": sum(r.shm_bytes for r in reports),
+            "p2p_bytes": sum(r.p2p_bytes for r in reports),
+            "driver_merge_bytes": sum(r.driver_merge_bytes for r in reports),
             "retries": sum(r.retries for r in reports),
             "jobs": 0,
             "resumes": 0,

@@ -143,6 +143,8 @@ def report_row(
         "remote_dispatches": report.remote_dispatches,
         "ipc_bytes": report.ipc_bytes,
         "shm_bytes": report.shm_bytes,
+        "p2p_bytes": report.p2p_bytes,
+        "driver_merge_bytes": report.driver_merge_bytes,
         "retries": report.retries,
         "overlapped_launches": report.overlapped_launches,
         "steals": report.steals,
@@ -161,21 +163,10 @@ def smoke_executors():
     ``remote_dispatches`` bills how much of the work crossed the IPC
     boundary (``retries`` must be 0 — no faults are injected here).
     """
-    from repro.api import (
-        ClusterExecutor,
-        LocalExecutor,
-        MeshExecutor,
-        StreamExecutor,
-        ThreadedExecutor,
-    )
+    from repro.api import engine
 
-    return [
-        ("local", LocalExecutor()),
-        ("threaded", ThreadedExecutor()),
-        ("mesh", MeshExecutor()),
-        ("stream", StreamExecutor()),
-        ("cluster", ClusterExecutor()),
-    ]
+    return [(name, engine(name)) for name in
+            ("local", "threaded", "mesh", "stream", "cluster")]
 
 
 #: residency budget = dataset bytes / this factor on the store=disk axis —
@@ -195,12 +186,12 @@ def stream_disk_setup(*arrays, budget_fraction: int = DISK_BUDGET_FRACTION):
     bench axis: the dataset is ``budget_fraction``× the residency budget,
     so completing at all proves out-of-core streaming works.
     """
-    from repro.api import DiskStore, StreamExecutor
+    from repro.api import DiskStore, engine
 
     total = sum(a.nbytes for a in arrays)
     store = DiskStore(residency_bytes=max(1, total // budget_fraction))
     chunked = tuple(a.to_store(store) for a in arrays)
-    return chunked, store, StreamExecutor(close_stores=False)
+    return chunked, store, engine("stream", close_stores=False)
 
 
 def check_stream_bounds(store, *, prefetch_hits: int, bytes_loaded: int, context: str) -> None:

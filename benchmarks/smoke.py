@@ -55,6 +55,13 @@ import time
 #: overlap count is frozen at submit time — a pure function of the app's
 #: call order, not of host speed — so a regression that silently stops
 #: iterations from overlapping (count → 0) fails the diff.
+#: ``p2p_bytes`` and ``driver_merge_bytes`` pin the peer-exchange path
+#: (DESIGN.md §16): both are exact — every member partial is consumed
+#: exactly once, and with p2p off (the default at smoke partial sizes)
+#: ``p2p_bytes`` must be exactly 0 on every grid row, so an auto gate
+#: that silently flips (or a fold that double-bills) fails the diff.
+#: The ``cluster-p2p`` kmeans row pins the collapse itself: one merged
+#: partial per location, asserted in-suite at ≥4×.
 #: ``steals`` and ``scale_events`` pin the elastic rows (DESIGN.md §15):
 #: both must be exactly 0 on every non-elastic row (stealing defaults
 #: off, so any non-zero count here is an accounting leak).  The elastic
@@ -70,6 +77,8 @@ STRUCTURAL = (
     "prep_bytes",
     "remote_dispatches",
     "shm_bytes",
+    "p2p_bytes",
+    "driver_merge_bytes",
     "retries",
     "jobs",
     "resumes",

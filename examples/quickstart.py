@@ -14,18 +14,14 @@ import numpy as np
 
 from repro.api import (
     Baseline,
-    ClusterExecutor,
     Collection,
     DiskStore,
+    EngineConfig,
     FaultPlan,
     JobClient,
-    JobServer,
-    LocalExecutor,
-    MeshExecutor,
     Rechunk,
     SplIter,
-    StreamExecutor,
-    ThreadedExecutor,
+    engine,
 )
 from repro.core.blocked import BlockedArray, round_robin_placement
 from repro.core.spliter import spliter
@@ -63,7 +59,7 @@ def main():
     col = Collection.from_blocked(x)
     for policy in (Baseline(), SplIter(), Rechunk()):
         plan = col.split(policy).map_blocks(block_sum).reduce(combine)
-        result, report = plan.compute(executor=LocalExecutor())
+        result, report = plan.compute(executor=engine("local"))
         mean = result / x.num_rows
         print(f"{policy.mode_name:10s} dispatches={report.dispatches:3d} "
               f"bytes_moved={report.bytes_moved:10d}  mean[0]={float(mean[0]):.6f}")
@@ -76,13 +72,13 @@ def main():
 
     # -- 5. ThreadedExecutor: one worker thread per location, identical result ----
     seq = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
-        executor=LocalExecutor())
+        executor=engine("local"))
     thr = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
-        executor=ThreadedExecutor())
+        executor=engine("threaded"))
     print("threaded identical:", bool(jnp.array_equal(seq.value, thr.value)))
 
     # -- 6. lowering is inspectable too: the placed, keyed TaskGraph --------------
-    ex = LocalExecutor()
+    ex = engine("local")
     graph = ex.lower(col.split(SplIter()).map_blocks(block_sum).reduce(combine).plan())
     print(graph.describe().splitlines()[0], f"... ({len(graph.tasks)} tasks)")
 
@@ -93,7 +89,7 @@ def main():
     # XLA_FLAGS=--xla_force_host_platform_device_count=8 each location gets a
     # device and bytes_moved bills the collective traffic.
     mesh = col.split(SplIter()).map_blocks(block_sum).reduce(combine).compute(
-        executor=MeshExecutor())
+        executor=engine("mesh"))
     print(f"mesh: dispatches={mesh.report.dispatches} "
           f"bytes_moved={mesh.report.bytes_moved} "
           f"matches={bool(jnp.allclose(mesh.value, seq.value, rtol=2e-4))}")
@@ -109,7 +105,7 @@ def main():
     # granularity ladder, a Tiny-Tasks cost model picks the winner (≤3 retunes),
     # and every retune is a LOGICAL regroup of the already-split blocks — the
     # prepare cache never re-splits and never moves a byte.
-    ex = LocalExecutor()
+    ex = engine("local")
     auto_plan = col.split(SplIter(partitions_per_location="auto")) \
                    .map_blocks(block_sum).reduce(combine)
     for i in range(5):
@@ -129,10 +125,10 @@ def main():
     # one (bit-identity holds per policy; different granularities reassociate).
     fine = SplIter(partitions_per_location=8)        # fine partitions: bounded RSS
     ref = col.split(fine).map_blocks(block_sum).reduce(combine).compute(
-        executor=LocalExecutor())
+        executor=engine("local"))
     store = DiskStore(residency_bytes=x.nbytes // 4)
     sx = x.to_store(store)                           # same blocking, chunk refs now
-    sex = StreamExecutor()
+    sex = engine("stream")
     stream = (
         Collection.from_blocked(sx)
         .split(fine)
@@ -156,7 +152,7 @@ def main():
     # worker mid-run and its in-flight tasks replay on a survivor — task
     # descriptors are pure, so the result stays bit-identical (retries > 0
     # would say a replay happened; here, none is injected).
-    cex = ClusterExecutor()
+    cex = engine("cluster")
     clus = (
         Collection.from_blocked(x)
         .split(SplIter(partitions_per_location=2))
@@ -165,7 +161,7 @@ def main():
         .compute(executor=cex)
     )
     ref2 = col.split(SplIter(partitions_per_location=2)).map_blocks(
-        block_sum).reduce(combine).compute(executor=LocalExecutor())
+        block_sum).reduce(combine).compute(executor=engine("local"))
     print(f"cluster: dispatches={clus.report.dispatches} "
           f"remote={clus.report.remote_dispatches} "
           f"ipc={clus.report.ipc_bytes}B retries={clus.report.retries} "
@@ -180,7 +176,7 @@ def main():
     # weight=2 buys twice the unit slots).  Pass root= and the write-ahead
     # journal + snapshots let a killed server restart and resume mid-job,
     # recomputing only units that never finished.
-    server = JobServer()
+    server = engine("server")
     alice = JobClient(server, tenant="alice")
     bob = JobClient(server, tenant="bob", weight=2)
     plan = col.split(SplIter()).map_blocks(block_sum).reduce(combine).plan()
@@ -206,7 +202,7 @@ def main():
 
     scale = lambda v: v / x.num_rows
 
-    tex = ThreadedExecutor()
+    tex = engine("threaded")
     w = jnp.ones((5,))                                        # barriered loop
     for _ in range(3):
         res = (col.split(SplIter()).map_blocks(weighted_sum, extra_args=(w,))
@@ -233,7 +229,7 @@ def main():
     # descriptors, not bytes; attempts are refunded (retries stays 0); and
     # the result is still bit-identical.  grow()/shrink() scale the pool the
     # same way: shrink drains through the kill-replay path, as preemption.
-    eex = ClusterExecutor(fault_plan=FaultPlan(slow=((0, 0.03),)), steal=True)
+    eex = engine("cluster", fault_plan=FaultPlan(slow=((0, 0.03),)), steal=True)
     elas = (
         Collection.from_blocked(x)
         .split(SplIter(partitions_per_location=2))
@@ -246,6 +242,29 @@ def main():
           f"steal_log={[e['kind'] for e in eex.steal_log]} "
           f"bit_identical={bool(jnp.all(elas.value == ref2.value))}")
     eex.close()
+
+    # -- 15. one construction path: engine() + peer-exchanged merge folds ----------
+    # Every executor above came out of engine(backend, ...) — the blessed
+    # construction path.  A frozen EngineConfig carries EVERY backend's
+    # knobs (each backend reads only its own section), so one config can
+    # drive an A/B pair across backends.  Here it also turns on the
+    # cluster's peer exchange (p2p): member units publish their partials
+    # into /dev/shm, a sibling fold unit reduces each location's chain
+    # worker-side, and the driver receives ONE merged partial per
+    # location — driver_merge_bytes collapses from N·S to L·S while the
+    # member bytes reappear as p2p_bytes.  Bit-identical either way: the
+    # fold tree (lowering's fold_plan) is the same association in the
+    # same order on every route.
+    cfg = EngineConfig(p2p=True)         # forced on; p2p="auto" cost-gates
+    plan2 = (col.split(SplIter(partitions_per_location=2))
+             .map_blocks(block_sum).reduce(combine))
+    with engine("local", config=cfg) as lex:
+        pin = plan2.compute(executor=lex)
+    with engine("cluster", config=cfg) as pex:
+        p2p = plan2.compute(executor=pex)
+    print(f"p2p: driver_merge_bytes {pin.report.driver_merge_bytes}B -> "
+          f"{p2p.report.driver_merge_bytes}B  p2p_bytes={p2p.report.p2p_bytes}B "
+          f"bit_identical={bool(jnp.all(p2p.value == pin.value))}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,13 @@
 """repro.api — the lazy Collection/Executor execution layer (DESIGN.md §3–§5).
 
-Public surface:
+Public surface (the curated ``__all__`` below is the contract:
+``tests/test_api_surface.py`` fails the build when docs or examples lean
+on anything outside it):
 
+* :func:`engine` / :class:`EngineConfig` — THE construction path for
+  every backend: ``with engine("cluster", config=EngineConfig(...)) as
+  ex:`` (DESIGN.md §16).  The per-backend constructors below keep
+  working behind ``DeprecationWarning`` shims.
 * :class:`Collection` — fluent, lazy plan builder over blocked arrays:
   ``Collection.from_array(...).split(policy).map_blocks(fn).reduce(c)``.
 * :class:`ExecutionPolicy` and its concrete policies :class:`Baseline`,
@@ -75,6 +81,7 @@ from repro.api.executors import (
     SharedAssets,
     ThreadedExecutor,
 )
+from repro.api.factory import BACKENDS, EngineConfig, engine
 from repro.api.futures import ComputeFuture, Deferred, PipelineBrokenError
 from repro.api.jobclient import JobClient
 from repro.api.jobserver import Job, JobEvent, JobFailedError, JobRejected, JobServer
@@ -105,6 +112,10 @@ from repro.api.profile import ProfileEvent, ProfileStore, TaskProfile
 from repro.api.stream_executor import StreamExecutor
 
 __all__ = [
+    # the blessed construction path (DESIGN.md §16)
+    "engine",
+    "EngineConfig",
+    "BACKENDS",
     "Collection",
     "ComputeResult",
     "ComputeFuture",

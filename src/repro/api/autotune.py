@@ -60,6 +60,8 @@ __all__ = [
     "granularity_features",
     "steal_cost_estimate",
     "should_steal",
+    "fold_cost_estimate",
+    "should_fold_remote",
     "Autotuner",
 ]
 
@@ -229,6 +231,70 @@ def should_steal(
         thief_task_s=thief_task_s,
     )
     return fetch_s < wait_s
+
+
+def fold_cost_estimate(
+    model: CostModel | None,
+    *,
+    partial_bytes: int,
+    fan_in: int,
+    pipe_bytes_per_s: float = 256e6,
+) -> tuple[float, float]:
+    """(driver_fold_s, remote_fold_s) for one location's merge chain.
+
+    ``driver_fold_s`` is what the pinned path costs the driver: ``fan_in``
+    partials of ``partial_bytes`` each crossing the reply channel before
+    the driver can fold them.  ``remote_fold_s`` is the peer-exchange
+    alternative (DESIGN.md §16): the partials stay in shared memory where
+    the workers wrote them, one extra fold dispatch (the model's per-task
+    overhead ``c1``) runs worker-side, and exactly ONE merged partial
+    crosses back.  Deterministic in its inputs, like
+    :func:`steal_cost_estimate`, so tests pin decisions with crafted
+    models.
+
+    >>> fold_cost_estimate(CostModel(0.0, 0.01, 0.0), partial_bytes=256_000_000, fan_in=4)
+    (4.0, 1.01)
+    """
+    pipe = max(float(pipe_bytes_per_s), 1.0)
+    driver_s = fan_in * partial_bytes / pipe
+    remote_s = (model.c1 if model is not None else 0.0) + partial_bytes / pipe
+    return driver_s, remote_s
+
+
+def should_fold_remote(
+    model: CostModel | None,
+    *,
+    partial_bytes: int,
+    fan_in: int,
+    min_bytes: int = 1 << 16,
+    pipe_bytes_per_s: float = 256e6,
+) -> bool:
+    """The peer-exchange gate: fold worker-side iff it beats the driver pipe.
+
+    Tiny partials keep the old path — below ``min_bytes`` the fold is
+    cheaper than the extra dispatch it would take to avoid it, whatever
+    the model says (the Tiny-Tasks regime: overhead dominates).  With at
+    least two partials per location and partials worth moving, the gate
+    compares the driver-pipe cost of shipping every partial against one
+    worker-side fold dispatch plus one merged reply.
+
+    >>> should_fold_remote(None, partial_bytes=1 << 20, fan_in=4)
+    True
+    >>> should_fold_remote(None, partial_bytes=512, fan_in=4)  # tiny: old path
+    False
+    >>> should_fold_remote(  # dispatch overhead outweighs the pipe saving
+    ...     CostModel(0.0, 1.0, 0.0), partial_bytes=1 << 20, fan_in=2)
+    False
+    """
+    if fan_in < 2 or partial_bytes < min_bytes:
+        return False
+    driver_s, remote_s = fold_cost_estimate(
+        model,
+        partial_bytes=partial_bytes,
+        fan_in=fan_in,
+        pipe_bytes_per_s=pipe_bytes_per_s,
+    )
+    return remote_s < driver_s
 
 
 # ---------------------------------------------------------------------------

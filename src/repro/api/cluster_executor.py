@@ -81,7 +81,7 @@ import jax
 import numpy as np
 
 from repro.api import shm
-from repro.api.autotune import should_steal
+from repro.api.autotune import should_fold_remote, should_steal
 from repro.api.chunkstore import ChunkHandle, StoreManifest, chunk_stores, resolve_chunk
 from repro.api.shm import ShmBlockRef, ShmStore, shm_available
 from repro.api.executors import (
@@ -89,6 +89,7 @@ from repro.api.executors import (
     _PlanExecutor,
     _SchedulerState,
     _Unit,
+    _tree_nbytes,
 )
 from repro.api.fnref import encode_fn
 from repro.api.lowering import Capabilities, key_summary, stable_task_key
@@ -365,6 +366,13 @@ class _DrainContext:
         # unit index -> [{"worker", "error", "log"}, ...]: one entry per
         # FAILED attempt, consumed by ClusterFailedError on poison.
         self.history: dict[int, list[dict]] = {}
+        # unit index -> SegmentLease over that unit's *published* partial
+        # (peer exchange, DESIGN.md §16).  The driver owns every published
+        # segment through these leases: a lease is released when the
+        # sibling fold consumes it (billing p2p_bytes), when the fold is
+        # localized back into the driver, or — the backstop — when the
+        # context closes, so no publish outlives its graph.
+        self.leases: dict[int, shm.SegmentLease] = {}
 
     def record_failure(
         self, index: int, wid: int, error: str, log_path: str | None
@@ -414,6 +422,22 @@ class ClusterExecutor(_PlanExecutor):
       shm_budget_bytes: cap on live segment bytes (default 256 MiB, or
         the ``REPRO_SHM_BUDGET`` environment variable).  Exhaustion falls
         back to inline/spill-file transport, never to an error.
+      p2p: peer-to-peer partial exchange (DESIGN.md §16).  ``"auto"``
+        (default) lets the :func:`~repro.api.autotune.should_fold_remote`
+        cost gate decide per execute, fed by an observed per-merge-key
+        partial-size EMA — small partials keep the pinned driver-merge
+        path, structurally identical to before.  ``True`` forces
+        worker-side folds whenever the plan and data plane allow;
+        ``False`` disables the mechanism outright.  When active, each
+        multi-member fold-plan group's partials are *published* as named
+        shared-memory segments a sibling worker attaches directly, the
+        per-location merge chain runs worker-side as its own ``fold``
+        unit, and the driver receives ONE merged value per location —
+        ``EngineReport.p2p_bytes`` bills the bytes that skipped the
+        driver, ``driver_merge_bytes`` the bytes that did not.
+      p2p_min_bytes: ``auto``-gate floor — observed partials below this
+        never leave the pinned path (a descriptor round-trip is not worth
+        it for tiny accumulators).
       steal: enable work stealing (DESIGN.md §15): an idle worker takes
         queued units off an overloaded sibling when the cost model says
         remote fetch beats the expected wait.  Off by default — steal
@@ -469,6 +493,8 @@ class ClusterExecutor(_PlanExecutor):
         shm_min_bytes: int = 1024,
         shm_segment_bytes: int = 4 << 20,
         shm_budget_bytes: int | None = None,
+        p2p: bool | str = "auto",
+        p2p_min_bytes: int = 1 << 16,
         steal: bool = False,
         autoscale: bool = False,
         min_workers: int = 1,
@@ -508,6 +534,13 @@ class ClusterExecutor(_PlanExecutor):
             else None
         )
         self.shm_min_bytes = shm_min_bytes
+        self.p2p = p2p
+        self.p2p_min_bytes = p2p_min_bytes
+        # merge key -> observed partial-size EMA (bytes): the auto gate's
+        # evidence.  Populated from unit replies, so an iterative app pays
+        # one pinned execute before the gate can switch it to peer folds.
+        self._fold_ema: dict[Hashable, float] = {}
+        self._fold_refs: dict[Hashable, tuple | None] = {}
         self._ctx = multiprocessing.get_context("spawn")
         self._workers: dict[int, _WorkerHandle] = {}
         self._by_location: dict[int, int] = {}
@@ -757,6 +790,156 @@ class ClusterExecutor(_PlanExecutor):
             and unit.tasks[0].remote_operands is not None
         )
 
+    # -- peer-to-peer partial exchange (DESIGN.md §16) -------------------------
+
+    @staticmethod
+    def _unit_origin(unit: _Unit):
+        """The app task a failure attributes to: a fold unit names its
+        subtree's ORIGINATING task (first member), never the synthetic
+        fold — operators must see which work item's merge keeps dying.
+        """
+        return unit.tasks[0] if unit.tasks else unit.origin
+
+    def _publish_name(self, epoch: int, index: int, attempt: int) -> str:
+        """Deterministic segment name for a published partial.
+
+        Addressed by unit identity (epoch/index/attempt), never worker id:
+        a stolen or replayed unit publishes to the same place, so the
+        sibling fold's ref tree stays valid however the unit was routed.
+        The trailing ``z`` terminates the name — sweeping attempt 1's
+        segment can never match attempt 10's.
+        """
+        return f"{self._shm.prefix}p{epoch}x{index}a{attempt}z"
+
+    def _fold_ref(self, merge) -> tuple | None:
+        """Cached reference encoding of a merge combine (None: not refable)."""
+        if merge.key not in self._fold_refs:
+            self._fold_refs[merge.key] = encode_fn(merge.combine)
+        return self._fold_refs[merge.key]
+
+    def _note_partial_bytes(self, key: Hashable, nbytes: int) -> None:
+        if nbytes <= 0:
+            return
+        prev = self._fold_ema.get(key)
+        self._fold_ema[key] = (
+            float(nbytes) if prev is None else 0.5 * prev + 0.5 * nbytes
+        )
+
+    def _remote_fold_plan(self, graph, units, plan):
+        """Fold-plan groups whose merge chains run worker-side (the hook
+        :meth:`~repro.api.executors._PlanExecutor._build_units` consults).
+
+        A group qualifies when every member can dispatch remotely and the
+        data plane is up; the whole mechanism then gates on the cost
+        model — ``p2p=True`` forces it, ``"auto"`` requires an observed
+        partial-size EMA for this merge key that clears
+        :func:`~repro.api.autotune.should_fold_remote`.  Selected groups'
+        member units are marked ``publish``: their partials stay in named
+        shared-memory segments for the sibling fold to attach.
+        """
+        if not self.p2p or self._shm is None or graph.merge is None:
+            return ()
+        if self._fold_ref(graph.merge) is None:
+            return ()
+        groups = tuple(
+            members
+            for _loc, members in plan
+            if len(members) > 1 and all(self._remotable(units[i]) for i in members)
+        )
+        if not groups:
+            return ()
+        if self.p2p is not True:  # "auto": observed-size cost gate
+            ema = self._fold_ema.get(graph.merge.key)
+            if ema is None or not should_fold_remote(
+                self._steal_model(),
+                partial_bytes=int(ema),
+                fan_in=max(len(m) for m in groups),
+                min_bytes=self.p2p_min_bytes,
+            ):
+                return ()
+        for members in groups:
+            for i in members:
+                units[i].publish = True
+        return groups
+
+    def _dispatch_fold(
+        self,
+        unit: _Unit,
+        ctx: _DrainContext,
+        *,
+        prefer_survivor: bool = False,
+        target: _WorkerHandle | None = None,
+    ) -> bool:
+        """Stage one fold unit for a worker (default: its location owner).
+
+        The message carries the members' *packed ref trees* — ~100-byte
+        segment descriptors, not partial bytes — plus the combine's code
+        reference; the worker attaches each published segment read-only,
+        stacks, and runs the same jitted chain the driver's merge task
+        would have.  Member leases stay with the driver until the fold's
+        reply confirms consumption (see ``_on_reply``), so a death at any
+        point leaves every segment owned and sweepable.  Same window
+        discipline and False-means-defer contract as ``_dispatch_remote``.
+        """
+        worker = (
+            target
+            or (self._survivor() if prefer_survivor else None)
+            or self._worker_for(unit.location)
+        )
+        if ctx.state.errors:
+            return True
+        if self._outstanding.get(worker.id, 0) > 0:
+            return False
+        combine_ref = self._fold_ref(unit.merge)
+        ref_trees = tuple(ctx.state.results[i] for i in unit.fold_group)
+        ctx.state.assign(unit, worker.id)
+        attempt = ctx.state.attempts[unit.index] - 1
+        msg = (
+            "fold",
+            ctx.epoch,
+            unit.index,
+            attempt,
+            combine_ref,
+            key_summary(unit.merge.key),
+            ref_trees,
+        )
+        self._outbox.setdefault(worker.id, []).append(((), msg, unit, ctx))
+        return True
+
+    def _localize_fold(self, unit: _Unit, ctx: _DrainContext) -> None:
+        """Pull a fold group's published partials back into the driver.
+
+        The fallback when the fold cannot (or should not) run remotely:
+        each member's packed ref tree is unpacked in place — consuming and
+        unlinking its segments, releasing the lease WITHOUT billing
+        ``p2p_bytes`` (the bytes did cross into the driver) — after which
+        the unit's in-process ``run`` closure folds the now-local values
+        through ``_merge_partials``, billing ``driver_merge_bytes`` as the
+        pinned path would.
+        """
+        state = ctx.state
+        for mi in unit.fold_group:
+            if ctx.leases.pop(mi, None) is not None:
+                tree, _segs = shm.unpack_tree(state.results[mi])
+                state.results[mi] = jax.tree.map(np.asarray, tree)
+
+    def _route_fold(
+        self, unit: _Unit, ctx: _DrainContext, *, prefer_survivor: bool = False
+    ) -> bool:
+        """Dispatch a ready fold unit remotely, or localize and run it here.
+
+        Remote is the point of the mechanism, so it is preferred whenever
+        the data plane is up and the combine is referencable; both were
+        preconditions for materializing the unit, so localization is the
+        defensive path (e.g. every publish declined on a full
+        ``/dev/shm``) — correctness never depends on the exchange.
+        """
+        if self._shm is not None and self._fold_ref(unit.merge) is not None:
+            return self._dispatch_fold(unit, ctx, prefer_survivor=prefer_survivor)
+        self._localize_fold(unit, ctx)
+        ctx.ready.extend(self._run_unit(unit, ctx.state))
+        return True
+
     def _stage_attaches(self, worker: _WorkerHandle, spec) -> list:
         """Attach messages ``worker`` needs before running ``spec``.
 
@@ -862,7 +1045,12 @@ class ClusterExecutor(_PlanExecutor):
             if refs:
                 self._shm.pin_refs(refs)
                 ctx.shm_pins[unit.index] = refs
-        msg = ("unit", ctx.epoch, spec, ctx.state.attempts[unit.index] - 1)
+        attempt = ctx.state.attempts[unit.index] - 1
+        msg = ("unit", ctx.epoch, spec, attempt)
+        if unit.publish and self._shm is not None:
+            # Peer exchange: the worker leaves this unit's partial in a
+            # segment at the deterministic name the sibling fold expects.
+            msg = msg + (self._publish_name(ctx.epoch, unit.index, attempt),)
         self._outbox.setdefault(worker.id, []).append((attaches, msg, unit, ctx))
         return True
 
@@ -951,6 +1139,11 @@ class ClusterExecutor(_PlanExecutor):
                 self._dispatch_order[wid] = kept
             else:
                 del self._dispatch_order[wid]
+        # Unconsumed publish leases (error/abort paths): the driver owns
+        # every published segment, so the context takes them down with it.
+        for lease in ctx.leases.values():
+            shm.unlink_segments(lease.segments)
+        ctx.leases.clear()
         self._contexts.pop(ctx.epoch, None)
 
     def _sweep_context(self, ctx: _DrainContext) -> None:
@@ -967,13 +1160,26 @@ class ClusterExecutor(_PlanExecutor):
                 unit = ctx.replays.popleft()
                 if state.is_done(unit.index):
                     continue  # a salvaged duplicate reply beat the replay
-                if not self._dispatch_remote(unit, ctx, prefer_survivor=True):
+                if unit.kind == "fold":
+                    replayed = self._route_fold(unit, ctx, prefer_survivor=True)
+                else:
+                    replayed = self._dispatch_remote(
+                        unit, ctx, prefer_survivor=True
+                    )
+                if not replayed:
                     deferred.append(unit)
             ctx.replays.extend(deferred)
             deferred = []
             while ctx.ready and not state.errors:
                 unit = ctx.ready.popleft()
-                if self._remotable(unit):
+                if unit.kind == "fold":
+                    # Peer-exchange merge chain: remote when the data
+                    # plane allows, localized otherwise — never through
+                    # the generic in-process branch, whose run closure
+                    # would fold packed descriptors instead of values.
+                    if not self._route_fold(unit, ctx):
+                        deferred.append(unit)
+                elif self._remotable(unit):
                     if not self._dispatch_remote(unit, ctx):
                         # Owner busy: an idle sibling may take it now
                         # (driver-side steal) instead of waiting the
@@ -1174,7 +1380,17 @@ class ClusterExecutor(_PlanExecutor):
             if refs:
                 self._shm.unpin_refs(refs)
         if kind == "unit_error":
-            task = unit.tasks[0]
+            # Fold units attribute to their subtree's ORIGINATING task —
+            # the app-level key an operator can act on, never the
+            # synthetic fold (the regression test in tests/test_p2p.py).
+            task = self._unit_origin(unit)
+            label = (
+                f"task {key_summary(task.key)} (blocks={task.block_ids})"
+                if task is not None
+                else f"unit {index}"
+            )
+            if unit.kind == "fold":
+                label = f"merge fold of {label}"
             handle = self._workers.get(wid)
             ctx.record_failure(
                 index,
@@ -1184,17 +1400,42 @@ class ClusterExecutor(_PlanExecutor):
             )
             ctx.state.fail(
                 ClusterFailedError(
-                    f"task {key_summary(task.key)} (blocks={task.block_ids}) "
-                    f"failed on worker {wid}:\n{msg[4]}",
-                    task_key=key_summary(task.key),
+                    f"{label} failed on worker {wid}:\n{msg[4]}",
+                    task_key=key_summary(task.key) if task is not None else None,
                     **ctx.error_kwargs(index),
                 )
             )
             return
         _, _, _, _, result, loaded, shm_wrote = msg
-        result, _segs = shm.unpack_tree(result)  # consume-and-unlink
-        value = jax.tree.map(np.asarray, result)
         report = ctx.report
+        lease = shm.tree_lease(result) if unit.publish else None
+        if lease is not None:
+            # Published partial: the packed ref tree IS the unit's result —
+            # the sibling fold forwards the descriptors and attaches the
+            # segments in place.  The driver records the lease; nothing is
+            # copied here.
+            ctx.leases[index] = lease
+            value = result
+            merge_key = getattr(ctx.state, "merge_key", None)
+            if merge_key is not None:
+                self._note_partial_bytes(merge_key, lease.nbytes)
+        else:
+            result, _segs = shm.unpack_tree(result)  # consume-and-unlink
+            value = jax.tree.map(np.asarray, result)
+            merge_key = getattr(ctx.state, "merge_key", None)
+            if merge_key is not None and unit.kind != "fold":
+                self._note_partial_bytes(merge_key, _tree_nbytes(value))
+        if unit.kind == "fold":
+            # The worker-side chain replaces a driver merge dispatch: bill
+            # the merge, credit the member bytes that never crossed the
+            # driver, and release their segments — consumption is the
+            # ownership-transfer point of the zero-leak contract.
+            report.merges += 1
+            for mi in unit.fold_group:
+                mlease = ctx.leases.pop(mi, None)
+                if mlease is not None:
+                    report.p2p_bytes += mlease.nbytes
+                    shm.unlink_segments(mlease.segments)
         report.dispatches += 1
         report.remote_dispatches += 1
         report.bytes_loaded += loaded
@@ -1388,6 +1629,15 @@ class ClusterExecutor(_PlanExecutor):
                 refs = ctx.shm_pins.pop(index, None)
                 if refs:
                     self._shm.unpin_refs(refs)
+                if unit.publish:
+                    # The victim never started the granted unit, but sweep
+                    # its voided attempt's publish name anyway — a racing
+                    # half-written segment must not survive the re-route.
+                    shm.sweep_segments(
+                        self._publish_name(
+                            epoch, index, ctx.state.attempts[index] - 1
+                        )
+                    )
             if not ctx.state.release(unit):
                 continue  # completed under the victim after all: stale grant
             ctx.report.steals += 1
@@ -1595,6 +1845,18 @@ class ClusterExecutor(_PlanExecutor):
                     refs = ctx.shm_pins.pop(unit.index, None)
                     if refs:
                         self._shm.unpin_refs(refs)
+                    if unit.publish:
+                        # The dead worker may have published this attempt's
+                        # partial without delivering the reply; the replay
+                        # publishes under a fresh attempt name, so the
+                        # voided segment would otherwise leak.
+                        shm.sweep_segments(
+                            self._publish_name(
+                                ctx.epoch,
+                                unit.index,
+                                ctx.state.attempts[unit.index] - 1,
+                            )
+                        )
                 if preempted:
                     # Spot-instance semantics: the voided attempt is
                     # refunded and nothing bills retries — a planned
@@ -1602,17 +1864,25 @@ class ClusterExecutor(_PlanExecutor):
                     ctx.state.refund_attempt(unit.index)
                     ctx.replays.append(unit)
                     continue
-                task = unit.tasks[0]
+                task = self._unit_origin(unit)
+                label = (
+                    f"task {key_summary(task.key)} (blocks={task.block_ids})"
+                    if task is not None
+                    else f"unit {unit.index}"
+                )
+                if unit.kind == "fold":
+                    label = f"merge fold of {label}"
                 ctx.record_failure(unit.index, wid, cause, handle.log_path)
                 if ctx.state.attempts[unit.index] > self.max_retries:
                     ctx.state.fail(
                         ClusterFailedError(
-                            f"task {key_summary(task.key)} "
-                            f"(blocks={task.block_ids}) poisoned: "
+                            f"{label} poisoned: "
                             f"{ctx.state.attempts[unit.index]} attempts "
                             f"died with their workers (max_retries="
                             f"{self.max_retries})",
-                            task_key=key_summary(task.key),
+                            task_key=key_summary(task.key)
+                            if task is not None
+                            else None,
                             **ctx.error_kwargs(unit.index),
                         )
                     )

@@ -107,6 +107,12 @@ def _resolve_fn(fn_ref: tuple, cache: dict):
 
         _, efn, ecomb, n_in = fn_ref
         body = _partition_body(decode_fn(efn), decode_fn(ecomb), n_in)
+    elif kind == "fold":
+        # A peer-exchange merge chain: the same stacked_fold program the
+        # driver's merge task jits — separate jit, same HLO, same bits.
+        from repro.api.lowering import stacked_fold
+
+        body = stacked_fold(decode_fn(fn_ref[1]))
     elif kind == "kernel":
         from repro.api.kernels import kernel_from_ref
 
@@ -219,11 +225,22 @@ def worker_main(
 
         return jax.tree.map(np.asarray, tree)
 
-    def pack(tree):
-        """Large reply leaves → one fresh segment; (tree, bytes_copied)."""
+    def pack(tree, *, publish=None):
+        """Large reply leaves → one fresh segment; (tree, bytes_copied).
+
+        ``publish`` overrides the segment name and drops the size floor to
+        0: a published partial (peer exchange, DESIGN.md §16) must land at
+        the deterministic name the driver derived — addressed by unit
+        key/epoch/attempt, never by worker id, so replays and steals
+        publish to the same place — and must pack EVERY leaf, because a
+        sibling attaches the segment instead of reading the reply.
+        """
         nonlocal reply_seq
         if result_prefix is None:
             return tree, 0
+        if publish is not None:
+            packed, _seg, wrote = shm_mod.pack_tree(tree, threshold=0, name=publish)
+            return packed, wrote
         reply_seq += 1
         packed, _seg, wrote = shm_mod.pack_tree(
             tree,
@@ -252,6 +269,8 @@ def worker_main(
         for qm in pending:
             if qm[0] == "unit" and (qm[1], qm[2].index) in want:
                 granted.append((qm[1], qm[2].index))
+            elif qm[0] == "fold" and (qm[1], qm[2]) in want:
+                granted.append((qm[1], qm[2]))
             else:
                 kept.append(qm)
         pending.clear()
@@ -280,7 +299,8 @@ def worker_main(
             os._exit(KILLED_EXIT)
 
         if kind == "unit":
-            _, epoch, spec, attempt = msg
+            _, epoch, spec, attempt = msg[:4]
+            publish = msg[4] if len(msg) > 4 else None
             if kill_on_retry and attempt > 0:
                 _log_line(
                     log, worker_id, f"FAULT: killing on retried unit {spec.index}"
@@ -293,7 +313,7 @@ def worker_main(
                 ops, loaded = _build_operands(
                     spec.kind, spec.data, spec.extras, stores, shm_att
                 )
-                out, wrote = pack(to_host(fn(*ops)))
+                out, wrote = pack(to_host(fn(*ops)), publish=publish)
                 reply(
                     ("unit_done", worker_id, epoch, spec.index, out, loaded, wrote)
                 )
@@ -301,12 +321,48 @@ def worker_main(
                     log,
                     worker_id,
                     f"unit {spec.index} kind={spec.kind} blocks={spec.block_ids} "
-                    f"attempt={attempt} ok",
+                    f"attempt={attempt} ok"
+                    + (f" published={publish}" if publish else ""),
                 )
             except BaseException:
                 err = traceback.format_exc()
                 _log_line(log, worker_id, f"unit {spec.index} FAILED\n{err}")
                 reply(("unit_error", worker_id, epoch, spec.index, err))
+        elif kind == "fold":
+            # Peer exchange (DESIGN.md §16): fold a sibling-published merge
+            # chain in place.  The operands are packed ref trees the driver
+            # forwarded — attach each published segment read-only, stack,
+            # and run the SAME jitted stacked_fold chain the driver's merge
+            # task would have run, so the partial is bit-identical however
+            # the subtree was routed.  Unlink stays with the driver's lease.
+            _, epoch, index, attempt, combine_ref, key_repr, trees = msg
+            if kill_on_retry and attempt > 0:
+                _log_line(log, worker_id, f"FAULT: killing on retried fold {index}")
+                os._exit(RETRY_KILLED_EXIT)
+            if slow_s:
+                time.sleep(slow_s)
+            try:
+                import jax
+                import jax.numpy as jnp
+
+                fold = _resolve_fn(("fold", combine_ref), fns)
+                partials = [
+                    jax.tree.map(jnp.asarray, shm_mod.attach_tree(t, shm_att))
+                    for t in trees
+                ]
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *partials)
+                out, wrote = pack(to_host(fold(stacked)))
+                reply(("unit_done", worker_id, epoch, index, out, 0, wrote))
+                _log_line(
+                    log,
+                    worker_id,
+                    f"fold {index} key={key_repr} fan_in={len(trees)} "
+                    f"attempt={attempt} ok",
+                )
+            except BaseException:
+                err = traceback.format_exc()
+                _log_line(log, worker_id, f"fold {index} FAILED\n{err}")
+                reply(("unit_error", worker_id, epoch, index, err))
         elif kind == "call":
             _, epoch, call_id, fn_ref, args, key = msg
             try:

@@ -24,7 +24,7 @@ from typing import Any, Callable, Sequence
 
 import jax
 
-from repro.api.executors import ComputeResult, Executor, LocalExecutor
+from repro.api.executors import ComputeResult, Executor, LocalExecutor, _default_local
 from repro.api.plan import (
     ExecutionPlan,
     MapBlocks,
@@ -157,7 +157,7 @@ class Collection:
         (:class:`~repro.api.cluster_executor.ClusterExecutor`) by swapping
         this one argument.
         """
-        ex = executor if executor is not None else LocalExecutor()
+        ex = executor if executor is not None else _default_local()
         return ex.execute(self.plan())
 
     def compute_async(self, executor: Executor | None = None) -> "ComputeFuture":
@@ -175,7 +175,7 @@ class Collection:
         Non-pipelined backends execute synchronously and return an
         already-completed future — same results, same code.
         """
-        ex = executor if executor is not None else LocalExecutor()
+        ex = executor if executor is not None else _default_local()
         return ex.execute_async(self.plan())
 
     def __repr__(self) -> str:  # pragma: no cover

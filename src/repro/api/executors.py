@@ -75,11 +75,13 @@ from __future__ import annotations
 import atexit
 import collections
 import contextlib
+import contextvars
 import dataclasses
 import math
 import queue
 import threading
 import time
+import warnings
 import weakref
 from typing import Any, Callable, Hashable, Protocol, runtime_checkable
 
@@ -97,9 +99,11 @@ from repro.api.lowering import (
     Task,
     TaskGraph,
     cross_iteration_edges,
+    fold_plan,
     inputs_signature,
     lower,
     partition_key,
+    planned_fold,
     stable_task_key,
     stacked_fold,
 )
@@ -270,18 +274,49 @@ class _SplitBase:
         return groups, derived
 
 
-def _merge_partials(engine: TaskEngine, merge: MergeSpec, partials: list[Any]) -> Any:
+def _tree_nbytes(tree) -> int:
+    """Total ndarray bytes across a pytree's leaves (0 for non-arrays)."""
+    return sum(
+        int(getattr(leaf, "nbytes", 0) or 0) for leaf in jax.tree.leaves(tree)
+    )
+
+
+def _merge_partials(
+    engine: TaskEngine,
+    merge: MergeSpec,
+    partials: list[Any],
+    plan: tuple[tuple[int, tuple[int, ...]], ...] | None = None,
+) -> Any:
     """Single merge task over the stacked partials (paper's @reduction task).
 
     Keyed by the MergeSpec's stable key — NOT the combine object, which apps
     typically recreate per call — so iterative workloads hit the jit cache.
     The fold body is the shared :func:`~repro.api.lowering.stacked_fold`
     (also the MeshExecutor's cross-rank fold — one source of truth).
+
+    ``plan`` is the :func:`~repro.api.lowering.fold_plan` over the partials'
+    list positions: when it has more than one group and any group chains,
+    the fold runs along that tree via
+    :func:`~repro.api.lowering.planned_fold` — still ONE dispatch, but with
+    the per-location association the peer-exchange path (DESIGN.md §16)
+    reproduces worker-side, so driver-merged and peer-merged executes are
+    bit-identical.  A trivial plan (one group, or all singletons) keeps the
+    original flat chain, bit-for-bit.
+
+    ``driver_merge_bytes`` bills the partial bytes that had to be present
+    in the driver for this fold — the counter the peer-exchange tests and
+    benches compare against the pinned path.
     """
     if len(partials) == 1:
         return partials[0]
+    engine.current_report.driver_merge_bytes += _tree_nbytes(partials)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *partials)
-    out = engine.task(stacked_fold(merge.combine), key=merge.key)(stacked)
+    groups = tuple(members for _, members in plan) if plan else ()
+    if len(groups) > 1 and any(len(m) > 1 for m in groups):
+        fold = planned_fold(merge.combine, groups)
+        out = engine.task(fold, key=(merge.key, "fold_plan", groups))(stacked)
+    else:
+        out = engine.task(stacked_fold(merge.combine), key=merge.key)(stacked)
     engine.current_report.merges += 1
     return out
 
@@ -293,11 +328,22 @@ def _merge_partials(engine: TaskEngine, merge: MergeSpec, partials: list[Any]) -
 
 @dataclasses.dataclass
 class _Unit:
-    """One schedulable unit: a task, a sharded bucket, or the merge.
+    """One schedulable unit: a task, a sharded bucket, a fold, or the merge.
 
     ``run`` is a nullary thunk; ``deps`` are unit indices that must
     complete first (the merge depends on every task unit — the dependency
     edge all three backends honor through the shared core).
+
+    ``kind == "fold"`` units exist only when a backend materializes a
+    :func:`~repro.api.lowering.fold_plan` group as its own schedulable
+    unit (the cluster's peer-exchange path): ``fold_group`` holds the
+    member unit indices (== ``deps``), ``origin`` the first member's task
+    descriptor (error attribution names the originating app task, never
+    the synthetic fold), and ``merge`` the graph's
+    :class:`~repro.api.lowering.MergeSpec`.  ``publish`` marks a task unit
+    whose partial a sibling fold consumes in place — the cluster dispatch
+    asks the worker to leave the result in a named shared-memory segment
+    instead of shipping it back.
     """
 
     index: int
@@ -306,6 +352,10 @@ class _Unit:
     run: Callable[[], Any] | None
     deps: tuple[int, ...] = ()
     kind: str = "task"
+    fold_group: tuple[int, ...] = ()
+    origin: Task | None = None
+    merge: MergeSpec | None = None
+    publish: bool = False
 
 
 class _SchedulerState:
@@ -553,6 +603,40 @@ class _PipelineEntry:
         self.store_marks = [(s, s.stats.snapshot()) for s in src]
 
 
+#: True while repro.api.engine() is constructing a backend — direct
+#: constructor calls outside the factory get a DeprecationWarning nudge.
+_via_factory: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_engine_via_factory", default=False
+)
+
+
+@contextlib.contextmanager
+def _factory_construction():
+    """Suppress the direct-construction warning (factory / internal defaults)."""
+    token = _via_factory.set(True)
+    try:
+        yield
+    finally:
+        _via_factory.reset(token)
+
+
+def _warn_direct_construction(cls: type) -> None:
+    """One DeprecationWarning per direct (non-factory) backend construction.
+
+    The per-backend constructors keep working — this is the shim half of
+    the ``repro.api.engine()`` redesign: existing code runs unchanged, new
+    code is pointed at the factory.
+    """
+    if not _via_factory.get():
+        warnings.warn(
+            f"constructing {cls.__name__} directly is deprecated; use "
+            f'repro.api.engine(backend=..., config=EngineConfig(...)) '
+            f"(DESIGN.md §16)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+
 class _PlanExecutor:
     """Shared prepare/lower/schedule core; subclasses customize dispatch."""
 
@@ -568,6 +652,7 @@ class _PlanExecutor:
     pipeline_depth: int = 2
 
     def __init__(self, engine: TaskEngine | None = None):
+        _warn_direct_construction(type(self))
         self.engine = engine or TaskEngine()
         self._prepare_cache: collections.OrderedDict[tuple, Any] = (
             collections.OrderedDict()
@@ -1200,6 +1285,14 @@ class _PlanExecutor:
         for entry in entries:
             self._release_prepared(entry)
 
+    def __enter__(self):
+        """``with engine(...) as ex:`` — the documented construction idiom."""
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
     # -- the shared scheduler core ---------------------------------------------
 
     def _bind(self, task: Task) -> Callable[[], Any]:
@@ -1231,26 +1324,86 @@ class _PlanExecutor:
         """
         units = list(self._plan_dispatches(graph))
         merge_unit = None
+        fold_units: list[_Unit] = []
+        merge_plan: tuple = ()
         if graph.merge is not None:
+            # The canonical merge tree (DESIGN.md §16): per-location chains,
+            # then a root chain over the per-location values.  Backends that
+            # fold location chains elsewhere (the cluster's peer exchange)
+            # materialize those groups as their own "fold" units via the
+            # _remote_fold_plan hook; every other backend keeps one merge
+            # unit that folds along the same tree in a single dispatch.
+            plan = fold_plan((u.index, u.location) for u in units)
+            remote_groups = set(self._remote_fold_plan(graph, units, plan))
+            merge_deps: list[int] = []
+            merge_plan_groups: list[tuple[int, tuple[int, ...]]] = []
+            for loc, members in plan:
+                if members in remote_groups and len(members) > 1:
+                    fu = _Unit(
+                        index=len(units),
+                        location=loc,
+                        tasks=(),
+                        run=None,
+                        deps=members,
+                        kind="fold",
+                        fold_group=members,
+                        origin=units[members[0]].tasks[0]
+                        if units[members[0]].tasks
+                        else None,
+                        merge=graph.merge,
+                    )
+                    units.append(fu)
+                    fold_units.append(fu)
+                    merge_plan_groups.append((loc, (len(merge_deps),)))
+                    merge_deps.append(fu.index)
+                else:
+                    merge_plan_groups.append(
+                        (loc, tuple(range(len(merge_deps), len(merge_deps) + len(members))))
+                    )
+                    merge_deps.extend(members)
+            merge_plan = tuple(merge_plan_groups)
             merge_unit = _Unit(
                 index=len(units),
                 location=-1,
                 tasks=(),
                 run=None,
-                deps=tuple(u.index for u in units),
+                deps=tuple(merge_deps),
                 kind="merge",
             )
             units.append(merge_unit)
         state = _SchedulerState(units, report=report)
+        state.merge_key = graph.merge.key if graph.merge is not None else None
         if merge_unit is not None:
+            for fu in fold_units:
+                # Driver-side fallback (and the JobServer path): the same
+                # chain the worker-side fold runs — bit-identical either way.
+                def run_fold(members=fu.fold_group):
+                    partials = [state.results[i] for i in members]
+                    return _merge_partials(self.engine, graph.merge, partials)
+
+                fu.run = run_fold
             deps = merge_unit.deps
 
             def run_merge():
                 partials = [state.results[i] for i in deps]
-                return _merge_partials(self.engine, graph.merge, partials)
+                return _merge_partials(
+                    self.engine, graph.merge, partials, plan=merge_plan
+                )
 
             merge_unit.run = run_merge
         return units, state, merge_unit
+
+    def _remote_fold_plan(
+        self, graph: TaskGraph, units: list[_Unit], plan: tuple
+    ) -> tuple[tuple[int, ...], ...]:
+        """Fold groups to materialize as standalone units (backend hook).
+
+        Default: none — the merge unit folds the whole plan itself.  The
+        cluster backend returns the multi-member groups whose chains should
+        run worker-side over the peer-exchange data plane (DESIGN.md §16),
+        and marks their member units ``publish``.
+        """
+        return ()
 
     def _schedule(self, graph: TaskGraph) -> Any:
         """Run a TaskGraph through the shared dependency-driven core.
@@ -1345,6 +1498,18 @@ class _PlanExecutor:
 
 class LocalExecutor(_PlanExecutor):
     """Sequential dispatch on the calling thread — the seed TaskEngine path."""
+
+
+def _default_local(engine: TaskEngine | None = None) -> "LocalExecutor":
+    """The library's internal default backend, constructed warning-free.
+
+    App entry points and ``Collection.compute`` fall back to a
+    LocalExecutor when no executor is passed; that fallback is the
+    library's own idiom, not user code reaching for a deprecated
+    constructor, so it must not trip the factory-redirection warning.
+    """
+    with _factory_construction():
+        return LocalExecutor(engine=engine)
 
 
 class _LocationWorker:

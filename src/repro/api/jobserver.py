@@ -63,6 +63,7 @@ from repro.api.executors import (
     LocalExecutor,
     SharedAssets,
     _PlanExecutor,
+    _default_local,
 )
 from repro.api.fnref import decode_fn, encode_fn
 from repro.api.journal import JobJournal
@@ -198,7 +199,7 @@ class JobServer:
     ):
         self.root = root
         self._owns_executor = executor is None
-        self.executor = executor if executor is not None else LocalExecutor()
+        self.executor = executor if executor is not None else _default_local()
         self.assets = SharedAssets()
         self.executor.adopt_shared_assets(self.assets)
         self.max_pending = max_pending
@@ -682,3 +683,11 @@ class JobServer:
             self.journal.close()
         if self._owns_executor:
             self.executor.close()
+
+    def __enter__(self):
+        """``with engine("server") as srv:`` — exit is a draining close."""
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -60,6 +60,8 @@ __all__ = [
     "MergeSpec",
     "TaskGraph",
     "cross_iteration_edges",
+    "fold_plan",
+    "planned_fold",
     "lower",
     "inputs_signature",
     "partition_key",
@@ -527,6 +529,67 @@ def stacked_fold(combine: Callable[[Any, Any], Any]) -> Callable[[Any], Any]:
         rest = jax.tree.map(lambda s: s[1:], stacked)
         acc, _ = jax.lax.scan(lambda a, p: (combine(a, p), None), first, rest)
         return acc
+
+    return fold
+
+
+def fold_plan(entries) -> tuple[tuple[int, tuple[int, ...]], ...]:
+    """The canonical merge tree over ``(index, location)`` pairs.
+
+    Returns ``((location, member_indices), ...)`` — one fold group per
+    location, members in entry order, groups in first-appearance order of
+    their location.  This is the merge association contract every backend
+    folds by: each group's members reduce left-to-right (one
+    :func:`stacked_fold` chain), then the per-group values reduce
+    left-to-right in group order.  The shape is a pure function of the
+    entry sequence — itself derived from stable task keys and the
+    policy's placement — so a replayed, resumed, or peer-exchanged fold
+    (DESIGN.md §16) re-derives the exact same tree and stays
+    bit-identical.
+
+    >>> fold_plan([(0, 1), (1, 1), (2, 0), (3, 0)])
+    ((1, (0, 1)), (0, (2, 3)))
+    >>> fold_plan([(0, -1)])
+    ((-1, (0,)),)
+    """
+    groups: dict[int, list[int]] = {}
+    order: list[int] = []
+    for idx, loc in entries:
+        if loc not in groups:
+            groups[loc] = []
+            order.append(loc)
+        groups[loc].append(idx)
+    return tuple((loc, tuple(groups[loc])) for loc in order)
+
+
+def planned_fold(
+    combine: Callable[[Any, Any], Any],
+    groups: tuple[tuple[int, ...], ...],
+) -> Callable[[Any], Any]:
+    """Fold a stacked pytree of partials along a :func:`fold_plan` tree.
+
+    ``planned_fold(c, groups)(stacked)`` reduces each group's members with
+    the :func:`stacked_fold` chain, then chains the group values in group
+    order — the same arithmetic, in the same order, as running each group
+    chain worker-side and the root chain driver-side (the peer-exchange
+    path), so the two routes produce bit-identical values.  Degenerates to
+    ``stacked_fold(c)`` for a single group.  One jitted program, one
+    dispatch — the merge keeps costing exactly one task however many
+    groups the plan has.
+    """
+    chain = stacked_fold(combine)
+
+    def fold(stacked):
+        accs = []
+        for members in groups:
+            if len(members) == 1:
+                accs.append(jax.tree.map(lambda s, i=members[0]: s[i], stacked))
+            else:
+                idx = jnp.asarray(members)
+                accs.append(chain(jax.tree.map(lambda s, x=idx: s[x], stacked)))
+        if len(accs) == 1:
+            return accs[0]
+        return chain(jax.tree.map(lambda *xs: jnp.stack(xs, 0), *accs))
 
     return fold
 

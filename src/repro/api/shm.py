@@ -60,10 +60,13 @@ __all__ = [
     "ShmBlockRef",
     "ShmStore",
     "ShmAttachments",
+    "SegmentLease",
     "shm_available",
     "pack_tree",
     "unpack_tree",
     "discard_tree",
+    "tree_lease",
+    "attach_tree",
     "unlink_segments",
     "sweep_segments",
     "leaked_segments",
@@ -538,6 +541,62 @@ def unpack_tree(tree):
         except FileNotFoundError:  # pragma: no cover — a sweep raced us
             pass
     return jax.tree.unflatten(treedef, leaves), list(segs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentLease:
+    """Ownership-transfer record for a published reply (DESIGN.md §16).
+
+    The peer-exchange path inverts the strict send→consume→unlink reply
+    lifecycle: a worker *publishes* its partial into a named segment that a
+    sibling will attach directly, so the driver must NOT copy-and-unlink on
+    receipt.  Instead it records this lease — the segment names and the
+    partial bytes they hold — and stays the owner of the unlink: the lease
+    is settled when the consuming fold completes (the saved bytes bill
+    ``EngineReport.p2p_bytes``), or swept on any failure path (poison,
+    context teardown, executor close).  Every published segment is under a
+    lease or already unlinked; that is the zero-leak contract across kills
+    mid-exchange.
+    """
+
+    segments: tuple[str, ...]
+    nbytes: int
+
+
+def tree_lease(tree) -> SegmentLease | None:
+    """The :class:`SegmentLease` over a packed tree's ref leaves (or None).
+
+    ``None`` means the tree carries no :class:`ShmBlockRef` leaves — the
+    publish was declined (``/dev/shm`` full) and the partial travelled
+    inline, so there is nothing to own.
+    """
+    import jax
+
+    refs = [
+        leaf for leaf in jax.tree.leaves(tree) if isinstance(leaf, ShmBlockRef)
+    ]
+    if not refs:
+        return None
+    return SegmentLease(
+        segments=tuple(sorted({r.segment for r in refs})),
+        nbytes=sum(r.nbytes for r in refs),
+    )
+
+
+def attach_tree(tree, attachments: "ShmAttachments"):
+    """Resolve a packed tree's ref leaves to zero-copy views (cross-worker).
+
+    The consumer half of the peer exchange: a sibling worker (or the
+    driver's fallback path) maps the published segments read-only through
+    its :class:`ShmAttachments` cache and gets the partial back without a
+    copy.  Unlinking stays with the lease owner — this only reads.
+    """
+    import jax
+
+    return jax.tree.map(
+        lambda leaf: attachments.view(leaf) if isinstance(leaf, ShmBlockRef) else leaf,
+        tree,
+    )
 
 
 def discard_tree(tree) -> None:

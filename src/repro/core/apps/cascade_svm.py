@@ -26,7 +26,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.api import Collection, Executor, ExecutionPolicy, LocalExecutor, SplIter, as_policy
+from repro.api import Collection, Executor, ExecutionPolicy, SplIter, as_policy
+from repro.api.executors import _default_local
 from repro.core.blocked import BlockedArray
 from repro.core.engine import EngineReport
 
@@ -103,7 +104,7 @@ def cascade_svm(
     """
     assert x.num_blocks == y.num_blocks
     pol = as_policy(policy)
-    ex = executor if executor is not None else LocalExecutor()
+    ex = executor if executor is not None else _default_local()
 
     def train_task(bx, by, feed_x, feed_y):
         ax = jnp.concatenate([bx, feed_x], 0)

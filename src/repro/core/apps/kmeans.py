@@ -26,7 +26,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.api import Collection, Executor, ExecutionPolicy, LocalExecutor, SplIter, as_policy
+from repro.api import Collection, Executor, ExecutionPolicy, SplIter, as_policy
+from repro.api.executors import _default_local
 from repro.api.kernels import PartitionKernel, pallas_interpret, register_partition_kernel
 from repro.core.blocked import BlockedArray
 from repro.core.engine import EngineReport
@@ -121,7 +122,7 @@ def kmeans(
     d = x.row_shape[0]
     centers = jax.random.uniform(jax.random.key(seed), (k, d), x.dtype)
     pol = as_policy(policy)
-    ex = executor if executor is not None else LocalExecutor()
+    ex = executor if executor is not None else _default_local()
     data = Collection.from_blocked(x).split(pol)
 
     reports: list[EngineReport] = []

@@ -30,7 +30,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.api import Collection, Executor, ExecutionPolicy, LocalExecutor, SplIter, as_policy
+from repro.api import Collection, Executor, ExecutionPolicy, SplIter, as_policy
+from repro.api.executors import _default_local
 from repro.core.blocked import BlockedArray
 from repro.core.engine import EngineReport
 
@@ -72,7 +73,7 @@ def knn(
     executor: Executor | None = None,
 ) -> KNNResult:
     pol = as_policy(policy)
-    ex = executor if executor is not None else LocalExecutor()
+    ex = executor if executor is not None else _default_local()
 
     with ex.scope(pol.mode_name) as report:
         build_task = ex.task(lambda *bs: jnp.concatenate(bs, 0), key=("knn_fit",))

@@ -83,6 +83,9 @@ class EngineReport:
     #                               still unresolved (pipelined iteration)
     steals: int = 0              # units moved to an idle worker by work stealing
     scale_events: int = 0        # autoscaler pool changes (grow + shrink)
+    p2p_bytes: int = 0           # partial bytes exchanged worker→worker over
+    #                              shared memory instead of through the driver
+    driver_merge_bytes: int = 0  # partial bytes the driver itself folded
 
     def as_row(self) -> dict:
         return dataclasses.asdict(self)
@@ -233,7 +236,8 @@ def run_map_reduce(
         DeprecationWarning,
         stacklevel=2,
     )
-    from repro.api import Collection, LocalExecutor, as_policy
+    from repro.api import Collection, as_policy
+    from repro.api.executors import _default_local
 
     policy = as_policy(mode, partitions_per_location=partitions_per_location)
     res = (
@@ -241,6 +245,6 @@ def run_map_reduce(
         .split(policy)
         .map_blocks(block_fn, extra_args=tuple(extra_args))
         .reduce(combine)
-        .compute(executor=LocalExecutor(engine=engine))
+        .compute(executor=_default_local(engine=engine))
     )
     return res.value, res.report

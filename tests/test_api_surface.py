@@ -1,0 +1,89 @@
+"""The public-surface contract (DESIGN.md §16 satellite).
+
+``repro.api.__all__`` is curated — it IS the supported API.  These tests
+keep three promises:
+
+* every exported name resolves (no stale ``__all__`` entries);
+* every ``from repro.api import ...`` in the docs and examples names only
+  exported symbols — documentation cannot quietly lean on internals;
+* every backend constructed through :func:`repro.api.engine` supports the
+  uniform ``with engine(...) as ex:`` idiom.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import warnings
+
+import pytest
+
+import repro.api as api
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# single-line and parenthesized multi-line forms, in .md fences or .py
+_IMPORT_RE = re.compile(
+    r"^\s*from\s+repro\.api\s+import\s+(\(([^)]*)\)|([^(\n]+))",
+    re.MULTILINE | re.DOTALL,
+)
+
+
+def _imported_names(text: str) -> set[str]:
+    names: set[str] = set()
+    for m in _IMPORT_RE.finditer(text):
+        body = m.group(2) if m.group(2) is not None else m.group(3)
+        for part in body.split(","):
+            part = part.split("#", 1)[0].strip()
+            if not part:
+                continue
+            # "name as alias" exports under "name"
+            names.add(part.split()[0])
+    return names
+
+
+def _surface_files():
+    yield from sorted((REPO / "docs").rglob("*.md"))
+    yield from sorted((REPO / "examples").glob("*.py"))
+    for name in ("README.md", "DESIGN.md"):
+        p = REPO / name
+        if p.exists():
+            yield p
+
+
+def test_all_exports_resolve():
+    missing = [n for n in api.__all__ if not hasattr(api, n)]
+    assert missing == [], f"__all__ names without a binding: {missing}"
+
+
+def test_no_duplicate_exports():
+    assert len(api.__all__) == len(set(api.__all__))
+
+
+def test_factory_is_exported():
+    assert {"engine", "EngineConfig", "BACKENDS"} <= set(api.__all__)
+
+
+@pytest.mark.parametrize("path", list(_surface_files()), ids=lambda p: str(p.relative_to(REPO)))
+def test_docs_and_examples_use_only_exported_symbols(path):
+    used = _imported_names(path.read_text())
+    unexported = sorted(used - set(api.__all__))
+    assert unexported == [], (
+        f"{path.relative_to(REPO)} imports unexported repro.api names: "
+        f"{unexported} — export them in repro/api/__init__.py or rewrite "
+        f"the doc against the public surface"
+    )
+
+
+def test_every_backend_is_a_context_manager():
+    """``with engine(backend) as ex:`` works uniformly — exit closes."""
+    for backend in api.BACKENDS:
+        overrides = {}
+        if backend == "server":
+            overrides = {"root": None, "autostart": False}
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            obj = api.engine(backend, **overrides)
+        assert hasattr(obj, "__enter__") and hasattr(obj, "__exit__"), backend
+        with obj as entered:
+            assert entered is obj

@@ -1,0 +1,349 @@
+"""Peer-to-peer partial exchange + worker-side merge folds (DESIGN.md §16).
+
+The acceptance contract:
+
+* with ``p2p=True`` every app stays bit-identical to LocalExecutor — the
+  worker-side chain IS the driver's chain, just routed differently;
+* the driver receives exactly ONE merged partial per location per
+  execute: ``driver_merge_bytes`` collapses from N·S (one partial per
+  unit) to L·S, and the member bytes reappear as ``p2p_bytes``;
+* the fold tree is a pure function of the plan (replay/resume keep the
+  exact shape), and a fold failure names the subtree's ORIGINATING task
+  key — never the synthetic fold unit;
+* kills mid-exchange replay the subtree with zero leaked ``/dev/shm``
+  segments, and chaos rounds (kills + stragglers + steals) keep the
+  ``p2p_bytes`` accounting exact, not approximate;
+* ``p2p="auto"`` (the default) is cost-gated: small partials never leave
+  the pinned path, big iterative partials switch over once observed.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    Baseline,
+    ChaosSchedule,
+    ClusterFailedError,
+    Collection,
+    FaultPlan,
+    SplIter,
+    engine,
+)
+from repro.api import shm_available
+from repro.api.lowering import fold_plan, lower
+from repro.api.shm import leaked_segments
+from repro.core.apps.cascade_svm import cascade_svm
+from repro.core.apps.histogram import histogram
+from repro.core.apps.kmeans import kmeans
+from repro.core.apps.knn import knn
+from repro.core.blocked import BlockedArray, round_robin_placement
+
+LOG_DIR = os.environ.get("REPRO_CLUSTER_LOG_DIR")  # CI fault lane artifacts
+POL = SplIter(partitions_per_location=2)
+
+pytestmark = pytest.mark.skipif(
+    not shm_available(), reason="peer exchange needs POSIX shared memory"
+)
+
+
+def _cluster(**kw):
+    kw.setdefault("log_dir", LOG_DIR)
+    kw.setdefault("p2p", True)
+    return engine("cluster", **kw)
+
+
+@contextlib.contextmanager
+def _pool(**kw):
+    """A p2p cluster that must leak NOTHING of its own into ``/dev/shm``.
+
+    The leak check is scoped to this pool's segment prefix — other live
+    pools (the module fixture, a concurrent test) keep their arenas.
+    """
+    ex = _cluster(**kw)
+    prefix = ex._shm.prefix
+    try:
+        yield ex
+    finally:
+        ex.close()
+    assert leaked_segments(prefix) == []
+
+
+def _blocked(a, block_rows=256, locs=2) -> BlockedArray:
+    return BlockedArray.from_array(
+        jnp.asarray(a), block_rows, num_locations=locs, policy=round_robin_placement
+    )
+
+
+@pytest.fixture(scope="module")
+def points() -> BlockedArray:
+    rng = np.random.default_rng(0)
+    return _blocked(rng.random((2048, 4)).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    """One shared p2p pool for the fault-free tests (spawn paid once)."""
+    with _cluster() as ex:
+        yield ex
+
+
+def identical(a, b) -> bool:
+    return bool(jnp.all(jnp.equal(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs LocalExecutor — all four apps, folds forced worker-side
+# ---------------------------------------------------------------------------
+
+
+class TestBitIdentity:
+    def test_histogram(self, points, cluster):
+        ref, _ = histogram(points, bins=8, policy=POL)
+        h, rep = histogram(points, bins=8, policy=POL, executor=cluster)
+        assert identical(h, ref)
+        # 2 locations × 2 partitions: both fold chains ran worker-side
+        assert rep.p2p_bytes > 0
+        assert rep.merges == 3  # two peer folds + the root fold
+        assert rep.driver_merge_bytes * 2 == rep.p2p_bytes  # L·S vs N·S
+
+    def test_kmeans(self, points, cluster):
+        ref = kmeans(points, k=4, iters=3, policy=POL)
+        res = kmeans(points, k=4, iters=3, policy=POL, executor=cluster)
+        assert identical(res.centers, ref.centers)
+        assert all(r.p2p_bytes > 0 for r in res.reports)
+
+    def test_knn(self, points, cluster):
+        rng = np.random.default_rng(1)
+        qry = _blocked(rng.random((256, 4)).astype(np.float32), 128)
+        ref = knn(points, qry, k=4, policy=POL)
+        res = knn(points, qry, k=4, policy=POL, executor=cluster)
+        assert identical(res.indices, ref.indices)
+        assert identical(res.distances, ref.distances)
+
+    def test_svm(self, points, cluster):
+        rng = np.random.default_rng(2)
+        y = _blocked(np.where(rng.random(2048) > 0.5, 1.0, -1.0).astype(np.float32))
+        ref = cascade_svm(points, y, num_sv=16, steps=30, iterations=1, policy=POL)
+        res = cascade_svm(
+            points, y, num_sv=16, steps=30, iterations=1, policy=POL,
+            executor=cluster,
+        )
+        assert identical(res.sv_x, ref.sv_x)
+        assert identical(res.sv_y, ref.sv_y)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance numbers: one merged partial per location per execute
+# ---------------------------------------------------------------------------
+
+
+def test_driver_receives_one_merged_partial_per_location(points):
+    """N units over L locations: p2p_bytes == N·S, driver_merge_bytes == L·S."""
+    plan = (
+        Collection.from_blocked(points)
+        .split(POL)  # 2 locations × 2 partitions = 4 units
+        .map_blocks(lambda b: jnp.sum(b, axis=0))
+        .reduce(lambda a, p: a + p)
+    )
+    with engine("local") as ex:
+        ref = plan.compute(executor=ex)
+    pinned_bytes = ref.report.driver_merge_bytes
+    with _pool() as ex:
+        res = plan.compute(executor=ex)
+    assert identical(res.value, ref.value)
+    rep = res.report
+    partial = rep.p2p_bytes // 4  # 4 member partials crossed peer-side...
+    assert partial > 0 and rep.p2p_bytes == 4 * partial
+    # ...and the driver folded exactly one merged value per location
+    assert rep.driver_merge_bytes == 2 * partial
+    assert pinned_bytes == 4 * partial  # the pinned path moved N·S
+
+
+def test_fold_tree_shape_is_deterministic():
+    """The fold plan is a pure function of (index, location) pairs — the
+    replay/resume contract: any re-lowering of the same plan rebuilds the
+    exact tree, so a resumed or replayed subtree folds in the same order.
+    """
+    entries = [(0, 1), (1, 1), (2, 0), (3, 0), (4, 1), (5, 2)]
+    assert fold_plan(entries) == fold_plan(list(entries))
+    assert fold_plan(entries) == ((1, (0, 1, 4)), (0, (2, 3)), (2, (5,)))
+
+
+def test_materialized_fold_units_identical_across_builds(points):
+    """Two independent executors materialize identical fold subtrees for
+    the same plan — indices, groups, locations and origins all match."""
+    plan = (
+        Collection.from_blocked(points)
+        .split(POL)
+        .map_blocks(lambda b: jnp.sum(b, axis=0))
+        .reduce(lambda a, p: a + p)
+        .plan()
+    )
+
+    def shape(ex):
+        # the executor's own lowering path, minus scheduling
+        spec = plan.spec
+        policy, _ = ex._resolve_policy(spec)
+        report = ex.engine.new_report(spec.policy.mode_name)
+        prepared = ex._prepare(spec.inputs, policy, report)
+        graph = lower(spec, prepared.arrays, prepared.groups, ex.capabilities)
+        units, _state, _merge = ex._build_units(graph)
+        return [
+            (u.index, u.location, u.fold_group, u.origin.key)
+            for u in units
+            if u.kind == "fold"
+        ]
+
+    with _pool() as a, _pool() as b:
+        sa, sb = shape(a), shape(b)
+    assert sa and sa == sb
+
+
+# ---------------------------------------------------------------------------
+# faults mid-exchange: replay, attribution, zero leaks
+# ---------------------------------------------------------------------------
+
+
+def test_kill_peer_mid_exchange_replays_subtree(points):
+    """A worker killed between publishing and folding: the subtree replays
+    on a survivor, the result stays bit-identical, and every published
+    segment — including the dead attempt's — is swept."""
+    ref, _ = histogram(points, bins=8, policy=POL)
+    with _pool(fault_plan=FaultPlan(kill_after=((0, 2),))) as ex:
+        h, rep = histogram(points, bins=8, policy=POL, executor=ex)
+        assert identical(h, ref)
+        assert rep.retries >= 1
+        assert rep.p2p_bytes > 0 or rep.driver_merge_bytes > 0
+
+
+def test_fold_failure_names_originating_task_key(points):
+    """The ClusterFailedError satellite: a failure inside a worker-side
+    fold attributes to the subtree's ORIGINATING app task, never the
+    synthetic fold unit."""
+
+    def colsum(b):
+        return jnp.sum(b, axis=0)
+
+    def bad_combine(acc, p):
+        raise ValueError("injected combine failure")
+
+    plan = (
+        # Baseline: the combine first runs inside the FOLD unit (SplIter
+        # would fuse it into the partition tasks and fail there instead).
+        Collection.from_blocked(points)
+        .split(Baseline())
+        .map_blocks(colsum)
+        .reduce(bad_combine)
+    )
+    with _pool() as ex:
+        with pytest.raises(ClusterFailedError) as ei:
+            plan.compute(executor=ex)
+    # task_key names the app-level map task the fold subtree folds over —
+    # not the synthetic fold unit (which has no task of its own).
+    assert ei.value.task_key is not None
+    assert "colsum" in ei.value.task_key
+    assert "merge fold of" in str(ei.value)
+    assert "injected combine failure" in str(ei.value)
+
+
+@pytest.mark.parametrize("seed", [3, 7])
+def test_chaos_rounds_with_p2p_exact_accounting(points, seed):
+    """ChaosSchedule rounds with p2p forced on: kills, stragglers and
+    steals compose with the exchange — results stay bit-identical and
+    ``p2p_bytes`` stays EXACT (every member partial consumed exactly
+    once, however its unit was routed)."""
+    cs = ChaosSchedule(seed=seed, rounds=3)
+    ref, _ = histogram(points, bins=8, policy=POL)
+    with _pool() as clean:
+        _, clean_rep = histogram(points, bins=8, policy=POL, executor=clean)
+    expected_p2p = clean_rep.p2p_bytes
+    assert expected_p2p > 0
+    with _pool(
+        fault_plan=cs.fault_plan(), steal=True, max_workers=8
+    ) as ex:
+        applied = 0
+        reports = []
+        for action in cs.actions():
+            if action == "grow":
+                applied += ex.grow() is not None
+            elif action == "shrink":
+                applied += ex.shrink() is not None
+            h, rep = histogram(points, bins=8, policy=POL, executor=ex)
+            assert identical(h, ref)
+            assert rep.p2p_bytes == expected_p2p  # exact, per execute
+            reports.append(rep)
+        assert sum(r.steals for r in reports) == len(ex.steal_log)
+        assert sum(r.retries for r in reports) == len(ex.retry_log)
+        assert len(ex.scale_log) == applied
+
+
+# ---------------------------------------------------------------------------
+# the cost gate: auto stays pinned for small partials, switches for big
+# ---------------------------------------------------------------------------
+
+
+def test_auto_gate_keeps_small_partials_pinned(points):
+    """Default ``p2p="auto"``: tiny accumulators never leave the pinned
+    path — the structural counters stay exactly PR 7's."""
+    ref, ref_rep = histogram(points, bins=8, policy=POL)
+    with _pool(p2p="auto") as ex:
+        for _ in range(2):  # EMA populated after round 1; gate still says no
+            h, rep = histogram(points, bins=8, policy=POL, executor=ex)
+            assert identical(h, ref)
+            assert rep.p2p_bytes == 0
+            assert rep.dispatches == ref_rep.dispatches
+            assert rep.merges == ref_rep.merges
+
+
+def test_auto_gate_switches_on_for_large_partials(points):
+    """Iterative app with ≥64KB partials: execute 1 runs pinned (no
+    evidence yet), execute 2 switches to peer folds off the observed EMA."""
+
+    def big_partial(b):
+        col = jnp.sum(b, axis=0)  # (4,)
+        return jnp.tile(col, 65536 // 4)  # 64Ki float32 = 256KB partial
+
+    plan = (
+        Collection.from_blocked(points)
+        .split(POL)
+        .map_blocks(big_partial)
+        .reduce(lambda a, p: a + p)
+    )
+    with engine("local") as ex:
+        ref = plan.compute(executor=ex)
+    with _pool(p2p="auto") as ex:
+        first = plan.compute(executor=ex)
+        second = plan.compute(executor=ex)
+    assert identical(first.value, ref.value)
+    assert identical(second.value, ref.value)
+    assert first.report.p2p_bytes == 0  # no EMA yet: pinned
+    assert second.report.p2p_bytes > 0  # gate saw 256KB partials: peer folds
+    assert (
+        second.report.driver_merge_bytes < first.report.driver_merge_bytes
+    )
+
+
+def test_baseline_policy_groups_blocks_per_location(points):
+    """Baseline (one unit per block) still folds per location worker-side:
+    8 blocks over 2 locations collapse to 2 driver partials."""
+    plan = (
+        Collection.from_blocked(points)  # 8 blocks, round-robin over 2 locs
+        .split(Baseline())
+        .map_blocks(lambda b: jnp.sum(b, axis=0))
+        .reduce(lambda a, p: a + p)
+    )
+    with engine("local") as ex:
+        ref = plan.compute(executor=ex)
+    with _pool() as ex:
+        res = plan.compute(executor=ex)
+    assert identical(res.value, ref.value)
+    rep = res.report
+    partial = rep.p2p_bytes // points.num_blocks
+    assert partial > 0 and rep.p2p_bytes == points.num_blocks * partial
+    assert rep.driver_merge_bytes == 2 * partial
